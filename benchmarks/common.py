@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CONVERGED, BFGSOptions, PSOOptions, ZeusOptions, zeus
+from repro.core.objectives import get_objective
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time in µs (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def n_correct(res, x_star, tol=0.5):
+    errs = jnp.linalg.norm(res.raw.x - jnp.asarray(x_star)[None, :], axis=1)
+    return int(jnp.sum((errs < tol) & (res.raw.status == CONVERGED)))
+
+
+def zeus_run(fn_name, dim, n_particles, iter_pso, required_c=None,
+             iter_bfgs=100, theta=1e-4, key=0):
+    obj = get_objective(fn_name)
+    opts = ZeusOptions(
+        use_pso=iter_pso > 0,
+        pso=PSOOptions(n_particles=n_particles, iter_pso=max(iter_pso, 1)),
+        bfgs=BFGSOptions(iter_bfgs=iter_bfgs, theta=theta,
+                         required_c=required_c or n_particles),
+    )
+    run = jax.jit(lambda k: zeus(obj.fn, k, dim, obj.lower, obj.upper, opts))
+    return run, obj
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,102 @@
+"""Kernel-level benchmarks (paper §IV-C, §VII: the Hessian update dominates
+BFGS runtime as dimension grows).
+
+On this CPU host Pallas executes in interpret mode, so wall times compare the
+*reference jnp paths* (what XLA:CPU makes of each algebraic form) and verify
+the paper's scaling claim; the structural VMEM/roofline story for the TPU
+kernels lives in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.bfgs import hessian_update_fast, hessian_update_reference
+from repro.kernels import ref
+
+
+def _mk(key, B, D):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    A = jax.random.normal(k1, (B, D, D))
+    H = jnp.einsum("bij,bkj->bik", A, A) / D + 2 * jnp.eye(D)
+    dx = jax.random.normal(k2, (B, D))
+    dg = 0.5 * dx + 0.2 * jax.random.normal(k3, (B, D))
+    g = jax.random.normal(k4, (B, D))
+    return H, dx, dg, g
+
+
+def hessian_update_dominance():
+    """§IV-C: per-iteration cost split between Hessian update and the rest
+    (AD + line search) as dimension grows. Measures the O(D^2) vs O(D) gap."""
+    B = 64
+    for D in (4, 16, 64, 256):
+        H, dx, dg, g = _mk(jax.random.key(D), B, D)
+        upd = jax.jit(jax.vmap(hessian_update_fast))
+        us_upd = timeit(upd, H, dx, dg)
+        # forward AD of rastrigin at the same batch (the paper's per-iter AD)
+        x = jax.random.normal(jax.random.key(1), (B, D))
+        vg = jax.jit(lambda x: ref.rastrigin_vg_ref(x))
+        us_ad = timeit(vg, x)
+        emit(
+            f"hessian_dominance_d{D}",
+            us_upd,
+            f"ad_us={us_ad:.1f};update_over_ad={us_upd / max(us_ad, 1e-9):.1f}x",
+        )
+
+
+def hessian_update_forms():
+    """reference (Alg. 4 literal, O(D^3)) vs fast (expanded, O(D^2))."""
+    B = 32
+    for D in (16, 64, 256):
+        H, dx, dg, _ = _mk(jax.random.key(D), B, D)
+        ref_fn = jax.jit(jax.vmap(hessian_update_reference))
+        fast_fn = jax.jit(jax.vmap(hessian_update_fast))
+        us_ref = timeit(ref_fn, H, dx, dg)
+        us_fast = timeit(fast_fn, H, dx, dg)
+        out_r = ref_fn(H, dx, dg)
+        out_f = fast_fn(H, dx, dg)
+        err = float(jnp.max(jnp.abs(out_r - out_f)))
+        emit(
+            f"hessian_form_d{D}",
+            us_fast,
+            f"reference_us={us_ref:.1f};speedup={us_ref / us_fast:.2f}x;"
+            f"max_err={err:.2e}",
+        )
+
+
+def fused_objective_gradient():
+    """Fused value+grad vs separate value and grad evaluations."""
+    for D in (8, 64, 512):
+        N = 1024
+        x = jax.random.uniform(jax.random.key(D), (N, D), minval=-5, maxval=5)
+        fused = jax.jit(lambda x: ref.rastrigin_vg_ref(x))
+        from repro.core.objectives import rastrigin
+        sep = jax.jit(lambda x: (jax.vmap(rastrigin)(x),
+                                 jax.vmap(jax.grad(rastrigin))(x)))
+        us_fused = timeit(fused, x)
+        us_sep = timeit(sep, x)
+        emit(
+            f"fused_obj_grad_d{D}",
+            us_fused,
+            f"separate_us={us_sep:.1f};saving={us_sep / us_fused:.2f}x",
+        )
+
+
+def ad_mode_scaling():
+    """Forward-mode (paper) vs reverse-mode (beyond-paper) gradient cost
+    as dimension grows — the classic O(D) forward vs O(1) reverse gap."""
+    from repro.core.dual import value_and_grad_fn
+    from repro.core.objectives import rosenbrock
+    for D in (2, 8, 32, 128):
+        x = jnp.linspace(-1, 2, D)
+        fwd = jax.jit(value_and_grad_fn(rosenbrock, "forward"))
+        rev = jax.jit(value_and_grad_fn(rosenbrock, "reverse"))
+        us_f = timeit(fwd, x)
+        us_r = timeit(rev, x)
+        emit(
+            f"ad_mode_d{D}",
+            us_f,
+            f"reverse_us={us_r:.1f};fwd_over_rev={us_f / max(us_r, 1e-9):.1f}x",
+        )

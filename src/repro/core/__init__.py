@@ -1,0 +1,51 @@
+"""ZEUS core: PSO + multistart (L-)BFGS + forward-mode AD, JAX/TPU-native."""
+from repro.core.bfgs import (
+    CONVERGED,
+    DIVERGED,
+    STOPPED,
+    BFGSOptions,
+    BFGSResult,
+    batched_bfgs,
+    serial_bfgs,
+)
+from repro.core.clustering import ConfidenceReport, cluster_solutions, run_until_confident
+from repro.core.distributed import distributed_zeus
+from repro.core.lbfgs import LBFGSOptions, batched_lbfgs
+from repro.core.objectives import OBJECTIVES, get_objective
+from repro.core.pso import PSOOptions, SwarmState, run_pso, sequential_pso
+from repro.core.zeus import (
+    SequentialZeusResult,
+    ZeusOptions,
+    ZeusResult,
+    sequential_zeus,
+    zeus,
+    zeus_jit,
+)
+
+__all__ = [
+    "BFGSOptions",
+    "BFGSResult",
+    "CONVERGED",
+    "DIVERGED",
+    "STOPPED",
+    "ConfidenceReport",
+    "LBFGSOptions",
+    "OBJECTIVES",
+    "PSOOptions",
+    "SequentialZeusResult",
+    "SwarmState",
+    "ZeusOptions",
+    "ZeusResult",
+    "batched_bfgs",
+    "batched_lbfgs",
+    "cluster_solutions",
+    "distributed_zeus",
+    "get_objective",
+    "run_pso",
+    "run_until_confident",
+    "sequential_pso",
+    "sequential_zeus",
+    "serial_bfgs",
+    "zeus",
+    "zeus_jit",
+]

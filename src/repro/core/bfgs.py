@@ -1,0 +1,287 @@
+"""BFGS with forward-mode AD (paper §III-B, Alg. 4) — serial and batched.
+
+Two entry points:
+
+- `serial_bfgs`    : Alg. 4 verbatim — one start, while_loop, Armijo search.
+- `batched_bfgs`   : the parallel BFGSKernel (Alg. 10) adapted to TPU. One
+  vmap *lane* per optimization instead of one CUDA thread. The CUDA stopFlag/
+  atomicAdd(converged) protocol becomes the scalar predicate of an outer
+  lax.while_loop: sweep while  k < iter_bfgs  AND  n_converged < required_c
+  AND any lane active. Lanes that converged/diverged are frozen by masking —
+  the TPU analogue of warp lanes idling after `break`.
+
+The inverse-Hessian update H <- (I-ρ δx δgᵀ) H (I-ρ δg δxᵀ) + ρ δx δxᵀ is
+the measured hot spot ("the Hessian update step dominates the BFGS kernel
+runtime", §IV-C). Three interchangeable implementations:
+  impl="reference" — the literal triple product of Alg. 4 (oracle),
+  impl="fast"      — algebraically equal two-matvec + rank-1 form, O(D²),
+  impl="pallas"    — the Pallas TPU kernel (kernels/bfgs_update.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import value_and_grad_fn
+from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+
+# status codes, matching the paper's result.status
+DIVERGED = 0  # hit iter_bfgs without |g| < theta
+CONVERGED = 1
+STOPPED = 2  # stop-flag: another lane filled required_c first
+
+_CURV_EPS = 1e-10
+
+
+@dataclasses.dataclass(frozen=True)
+class BFGSOptions:
+    iter_bfgs: int = 100
+    theta: float = 1e-5  # gradient-norm convergence threshold Θ
+    required_c: Optional[int] = None  # stop once this many lanes converged
+    ls_iters: int = 20
+    ls_c1: float = 0.3
+    linesearch: str = "armijo"  # "armijo" (paper) | "wolfe" (beyond-paper)
+    ad_mode: str = "forward"  # "forward" (paper) | "reverse" (beyond-paper)
+    hessian_impl: str = "fast"  # "reference" | "fast" | "pallas"
+
+
+class BFGSResult(NamedTuple):
+    x: jnp.ndarray  # (B, D) final iterates
+    fval: jnp.ndarray  # (B,)
+    grad_norm: jnp.ndarray  # (B,)
+    status: jnp.ndarray  # (B,) int32 in {DIVERGED, CONVERGED, STOPPED}
+    iterations: jnp.ndarray  # scalar — sweeps taken
+    n_converged: jnp.ndarray  # scalar
+
+
+# ---------------------------------------------------------------------------
+# Inverse-Hessian update implementations
+# ---------------------------------------------------------------------------
+def hessian_update_reference(H, dx, dg):
+    """Literal Alg. 4 line 15 (also kernels/ref.py oracle)."""
+    rho = 1.0 / jnp.dot(dx, dg)
+    I = jnp.eye(H.shape[0], dtype=H.dtype)
+    V = I - rho * jnp.outer(dx, dg)
+    return V @ H @ V.T + rho * jnp.outer(dx, dx)
+
+
+def hessian_update_fast(H, dx, dg):
+    """Expanded form: H - ρ(u δxᵀ + δx uᵀ) + (ρ²s + ρ) δx δxᵀ, u = Hδg.
+
+    O(D²) with one matvec, vs the reference's two D×D matmuls (O(D³)).
+    """
+    rho = 1.0 / jnp.dot(dx, dg)
+    u = H @ dg  # H symmetric => also δgᵀH
+    s = jnp.dot(dg, u)
+    return (
+        H
+        - rho * (jnp.outer(u, dx) + jnp.outer(dx, u))
+        + (rho * rho * s + rho) * jnp.outer(dx, dx)
+    )
+
+
+def _get_hessian_update(impl: str):
+    if impl == "reference":
+        return hessian_update_reference
+    if impl == "fast":
+        return hessian_update_fast
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.bfgs_update_single
+    raise ValueError(f"unknown hessian impl: {impl}")
+
+
+def _guarded_update(H, dx, dg, update_fn):
+    """Skip the update on curvature breakdown (δxᵀδg ≈ 0) to avoid NaNs.
+
+    The paper's CUDA kernel divides unguarded; any practical port needs this
+    guard (documented in DESIGN.md §8)."""
+    curv = jnp.dot(dx, dg)
+    ok = jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
+    safe_dg = jnp.where(ok, dg, jnp.ones_like(dg))  # avoid 1/0 inside update
+    safe_dx = jnp.where(ok, dx, jnp.ones_like(dx))
+    newH = update_fn(H, safe_dx, safe_dg)
+    return jnp.where(ok, newH, H)
+
+
+# ---------------------------------------------------------------------------
+# One BFGS iteration for a single lane
+# ---------------------------------------------------------------------------
+class LaneState(NamedTuple):
+    x: jnp.ndarray
+    f: jnp.ndarray
+    g: jnp.ndarray
+    H: jnp.ndarray
+    converged: jnp.ndarray  # bool
+    failed: jnp.ndarray  # bool (NaN/Inf escape)
+    n_evals: jnp.ndarray  # int32 objective-eval counter (profiling)
+
+
+def _lane_init(f, vg, x0, theta):
+    fval, g = vg(x0)
+    H = jnp.eye(x0.shape[0], dtype=x0.dtype)
+    gn = jnp.linalg.norm(g)
+    return LaneState(
+        x=x0,
+        f=fval,
+        g=g,
+        H=H,
+        converged=gn < theta,
+        failed=jnp.logical_not(jnp.isfinite(fval)),
+        n_evals=jnp.asarray(1 + x0.shape[0], jnp.int32),
+    )
+
+
+def _lane_step(f, vg, opts: BFGSOptions, state: LaneState) -> LaneState:
+    """One quasi-Newton step (Alg. 4 lines 10-16) with masking for frozen lanes."""
+    x, fv, g, H = state.x, state.f, state.g, state.H
+    active = jnp.logical_not(jnp.logical_or(state.converged, state.failed))
+
+    p = -(H @ g)
+    # Safeguard: if p is not a descent direction (can happen after numerical
+    # breakdown), restart from steepest descent — standard practice.
+    descent = jnp.dot(p, g) < 0
+    p = jnp.where(descent, p, -g)
+
+    if opts.linesearch == "armijo":
+        ls = armijo_backtracking(
+            f, x, p, fv, g, c1=opts.ls_c1, max_iters=opts.ls_iters
+        )
+    elif opts.linesearch == "wolfe":
+        ls = wolfe_linesearch(f, x, p, fv, g, vg, max_iters=opts.ls_iters)
+    else:
+        raise ValueError(opts.linesearch)
+
+    x_new = x + ls.alpha * p
+    f_new, g_new = vg(x_new)
+    dx = x_new - x
+    dg = g_new - g
+    H_new = _guarded_update(H, dx, dg, _get_hessian_update(opts.hessian_impl))
+
+    gn = jnp.linalg.norm(g_new)
+    now_converged = gn < opts.theta
+    now_failed = jnp.logical_not(
+        jnp.logical_and(jnp.isfinite(f_new), jnp.all(jnp.isfinite(g_new)))
+    )
+
+    def keep(new, old):
+        return jnp.where(active, new, old)
+
+    return LaneState(
+        x=keep(x_new, x),
+        f=keep(f_new, fv),
+        g=keep(g_new, g),
+        H=keep(H_new, H),
+        converged=jnp.where(active, now_converged, state.converged),
+        failed=jnp.where(active, now_failed, state.failed),
+        n_evals=state.n_evals
+        + jnp.where(active, ls.n_evals + 1 + x.shape[0], 0).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched multistart BFGS (Alg. 10 analogue)
+# ---------------------------------------------------------------------------
+def batched_bfgs(
+    f: Callable,
+    x0: jnp.ndarray,  # (B, D) starting points (the post-PSO swarm)
+    opts: BFGSOptions = BFGSOptions(),
+    pcount: Optional[Callable] = None,  # cross-device converged-count reducer
+) -> BFGSResult:
+    """Run B independent BFGS solves until required_c of them converge.
+
+    `pcount` lets the distributed driver plug a psum across the mesh so the
+    stop flag is global (see core/distributed.py); default is local sum.
+    """
+    B = x0.shape[0]
+    required_c = opts.required_c if opts.required_c is not None else B
+    vg = value_and_grad_fn(f, opts.ad_mode)
+    count = pcount if pcount is not None else (lambda c: c)
+
+    init = jax.vmap(lambda x: _lane_init(f, vg, x, opts.theta))(x0)
+
+    def counts(state):
+        """Global (converged, active) lane counts. The collective (when the
+        distributed driver passes a psum) lives in the loop *body*, so the
+        while cond only reads replicated scalars from the carry."""
+        n_conv = count(jnp.sum(state.converged.astype(jnp.int32)))
+        n_act = count(
+            jnp.sum(
+                jnp.logical_not(
+                    jnp.logical_or(state.converged, state.failed)
+                ).astype(jnp.int32)
+            )
+        )
+        return n_conv, n_act
+
+    def cond(carry):
+        k, state, n_conv, n_act = carry
+        return jnp.logical_and(
+            k < opts.iter_bfgs,
+            jnp.logical_and(n_conv < required_c, n_act > 0),
+        )
+
+    def body(carry):
+        k, state, _, _ = carry
+        state = jax.vmap(functools.partial(_lane_step, f, vg, opts))(state)
+        n_conv, n_act = counts(state)
+        return (k + 1, state, n_conv, n_act)
+
+    n_conv0, n_act0 = counts(init)
+    k, state, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), init, n_conv0, n_act0)
+    )
+
+    status = jnp.where(
+        state.converged,
+        CONVERGED,
+        jnp.where(jnp.logical_or(state.failed, k >= opts.iter_bfgs), DIVERGED, STOPPED),
+    ).astype(jnp.int32)
+    return BFGSResult(
+        x=state.x,
+        fval=state.f,
+        grad_norm=jax.vmap(jnp.linalg.norm)(state.g),
+        status=status,
+        iterations=k,
+        n_converged=jnp.sum(state.converged.astype(jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serial BFGS (Alg. 4) — used by the sequential ZEUS baseline (Fig. 2)
+# ---------------------------------------------------------------------------
+class SerialResult(NamedTuple):
+    x: jnp.ndarray
+    fval: jnp.ndarray
+    grad_norm: jnp.ndarray
+    status: jnp.ndarray
+    iterations: jnp.ndarray
+
+
+def serial_bfgs(f: Callable, x0: jnp.ndarray, opts: BFGSOptions = BFGSOptions()):
+    vg = value_and_grad_fn(f, opts.ad_mode)
+    init = _lane_init(f, vg, x0, opts.theta)
+
+    def cond(carry):
+        k, s = carry
+        active = jnp.logical_not(jnp.logical_or(s.converged, s.failed))
+        return jnp.logical_and(k < opts.iter_bfgs, active)
+
+    def body(carry):
+        k, s = carry
+        return (k + 1, _lane_step(f, vg, opts, s))
+
+    k, s = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), init))
+    status = jnp.where(s.converged, CONVERGED, DIVERGED).astype(jnp.int32)
+    return SerialResult(
+        x=s.x,
+        fval=s.f,
+        grad_norm=jnp.linalg.norm(s.g),
+        status=status,
+        iterations=k,
+    )

@@ -1,0 +1,129 @@
+"""Solution clustering + confidence report (paper §VII-B future work, realized).
+
+After a multistart run, converged iterates are grouped into candidate basins
+by coordinate distance (single-linkage over a radius) or by function value.
+Confidence that the lowest cluster is the global minimum grows with the
+number of independent lanes that landed in it and with the absence of any
+lower value — exactly the iterate-until-confident procedure the paper
+sketches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core import bfgs as bfgs_mod
+from repro.core.bfgs import BFGSResult
+
+
+@dataclasses.dataclass
+class Cluster:
+    center: np.ndarray
+    fval: float
+    count: int
+    members: np.ndarray  # indices into the lane axis
+
+
+@dataclasses.dataclass
+class ConfidenceReport:
+    clusters: List[Cluster]
+    best_cluster: Cluster
+    confidence: float  # fraction of converged lanes in the best cluster
+    n_converged: int
+    n_lanes: int
+
+    def summary(self) -> str:
+        return (
+            f"{len(self.clusters)} candidate basins from "
+            f"{self.n_converged}/{self.n_lanes} converged lanes; best "
+            f"f={self.best_cluster.fval:.6g} holds {self.best_cluster.count} "
+            f"lanes (confidence {self.confidence:.1%})"
+        )
+
+
+def cluster_solutions(
+    res: BFGSResult,
+    radius: float = 1e-2,
+    by: str = "coords",
+    value_tol: float = 1e-6,
+) -> ConfidenceReport:
+    x = np.asarray(res.x)
+    f = np.asarray(res.fval)
+    status = np.asarray(res.status)
+    conv = np.nonzero(status == bfgs_mod.CONVERGED)[0]
+    n_lanes = x.shape[0]
+
+    if conv.size == 0:
+        # fall back: treat the best lane as a single unconfirmed cluster
+        i = int(np.argmin(f))
+        c = Cluster(center=x[i], fval=float(f[i]), count=0, members=np.array([i]))
+        return ConfidenceReport([c], c, 0.0, 0, n_lanes)
+
+    order = conv[np.argsort(f[conv])]
+    clusters: List[Cluster] = []
+    assigned = np.full(n_lanes, -1)
+    for i in order:
+        placed = False
+        for ci, c in enumerate(clusters):
+            if by == "coords":
+                close = np.linalg.norm(x[i] - c.center) <= radius
+            else:  # by function value
+                close = abs(f[i] - c.fval) <= value_tol * max(1.0, abs(c.fval))
+            if close:
+                assigned[i] = ci
+                placed = True
+                break
+        if not placed:
+            assigned[i] = len(clusters)
+            clusters.append(Cluster(center=x[i].copy(), fval=float(f[i]),
+                                    count=0, members=np.empty(0, int)))
+
+    for ci, c in enumerate(clusters):
+        members = np.nonzero(assigned == ci)[0]
+        c.members = members
+        c.count = int(members.size)
+        c.center = x[members].mean(axis=0)
+        c.fval = float(f[members].min())
+
+    clusters.sort(key=lambda c: c.fval)
+    best = clusters[0]
+    return ConfidenceReport(
+        clusters=clusters,
+        best_cluster=best,
+        confidence=best.count / conv.size,
+        n_converged=int(conv.size),
+        n_lanes=n_lanes,
+    )
+
+
+def run_until_confident(
+    run_fn,
+    keys,
+    min_lanes_in_best: int = 10,
+    radius: float = 1e-2,
+) -> ConfidenceReport:
+    """§VII-B iterative procedure: keep launching batches until the lowest
+    cluster has accumulated `min_lanes_in_best` convergences.
+
+    `run_fn(key) -> BFGSResult`; `keys` bounds the number of rounds."""
+    agg_x, agg_f, agg_s = [], [], []
+    report = None
+    for key in keys:
+        res = run_fn(key)
+        agg_x.append(np.asarray(res.x))
+        agg_f.append(np.asarray(res.fval))
+        agg_s.append(np.asarray(res.status))
+        merged = BFGSResult(
+            x=np.concatenate(agg_x),
+            fval=np.concatenate(agg_f),
+            grad_norm=np.zeros(sum(a.shape[0] for a in agg_x)),
+            status=np.concatenate(agg_s),
+            iterations=res.iterations,
+            n_converged=np.sum(np.concatenate(agg_s) == bfgs_mod.CONVERGED),
+        )
+        report = cluster_solutions(merged, radius=radius)
+        if report.best_cluster.count >= min_lanes_in_best:
+            break
+    return report

@@ -1,0 +1,182 @@
+"""Faithful dual-number forward-mode AD (paper §III-C, Alg. 5).
+
+The paper ships a small operator-overloading dual-number library so user
+objectives get exact gradients without hand derivation. JAX's `jvp` *is*
+dual-number AD under the hood; this module reproduces the paper's explicit
+construction — a `Dual(val, tan)` pair with overloaded arithmetic — so we can
+(a) test it against jax.jvp/jax.grad to machine precision and (b) run the
+paper-faithful `forward_ad` loop of Alg. 5 (one pass per input dimension).
+
+Everything here stays jnp-traceable: a Dual of arrays vmaps and jits fine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Scalar = Union[float, int, jnp.ndarray]
+
+
+def _tan_of(other, like):
+    if isinstance(other, Dual):
+        return other.tan
+    return jnp.zeros_like(like)
+
+
+def _val_of(other):
+    return other.val if isinstance(other, Dual) else other
+
+
+@dataclasses.dataclass
+class Dual:
+    """a + b*eps with eps^2 = 0. `val` carries the primal, `tan` the tangent."""
+
+    val: jnp.ndarray
+    tan: jnp.ndarray
+
+    # -- ring ops ----------------------------------------------------------
+    def __add__(self, other):
+        return Dual(self.val + _val_of(other), self.tan + _tan_of(other, self.tan))
+
+    __radd__ = __add__
+
+    def __neg__(self):
+        return Dual(-self.val, -self.tan)
+
+    def __sub__(self, other):
+        return Dual(self.val - _val_of(other), self.tan - _tan_of(other, self.tan))
+
+    def __rsub__(self, other):
+        return Dual(_val_of(other) - self.val, _tan_of(other, self.tan) - self.tan)
+
+    def __mul__(self, other):
+        ov, ot = _val_of(other), _tan_of(other, self.tan)
+        return Dual(self.val * ov, self.tan * ov + self.val * ot)
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other):
+        ov, ot = _val_of(other), _tan_of(other, self.tan)
+        return Dual(self.val / ov, (self.tan * ov - self.val * ot) / (ov * ov))
+
+    def __rtruediv__(self, other):
+        ov, ot = _val_of(other), _tan_of(other, self.tan)
+        return Dual(ov / self.val, (ot * self.val - ov * self.tan) / (self.val**2))
+
+    def __pow__(self, n):
+        if isinstance(n, Dual):
+            # a^b = exp(b log a)
+            return dexp(n * dlog(self))
+        return Dual(self.val**n, n * self.val ** (n - 1) * self.tan)
+
+    # comparisons operate on primals (branching on values, like the paper)
+    def __lt__(self, other):
+        return self.val < _val_of(other)
+
+    def __le__(self, other):
+        return self.val <= _val_of(other)
+
+    def __gt__(self, other):
+        return self.val > _val_of(other)
+
+    def __ge__(self, other):
+        return self.val >= _val_of(other)
+
+
+# -- transcendental ops used by the paper's test functions ------------------
+def dsin(d: Dual) -> Dual:
+    return Dual(jnp.sin(d.val), jnp.cos(d.val) * d.tan)
+
+
+def dcos(d: Dual) -> Dual:
+    return Dual(jnp.cos(d.val), -jnp.sin(d.val) * d.tan)
+
+
+def dexp(d: Dual) -> Dual:
+    e = jnp.exp(d.val)
+    return Dual(e, e * d.tan)
+
+
+def dlog(d: Dual) -> Dual:
+    return Dual(jnp.log(d.val), d.tan / d.val)
+
+
+def dsqrt(d: Dual) -> Dual:
+    s = jnp.sqrt(d.val)
+    return Dual(s, 0.5 * d.tan / s)
+
+
+def dsum(duals) -> Dual:
+    """Sum of a python list of Duals (the seq. library's accumulation)."""
+    out = duals[0]
+    for d in duals[1:]:
+        out = out + d
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Alg. 5 — FORWARDAD: one primal evaluation per input dimension, seeding the
+# tangent of coordinate i with 1. f_dual consumes a *list* of Duals (the
+# paper's xDual array) and returns one Dual.
+# ---------------------------------------------------------------------------
+def forward_ad(f_dual: Callable, x: jnp.ndarray) -> jnp.ndarray:
+    dim = x.shape[0]
+    grads = []
+    for i in range(dim):
+        xdual = [
+            Dual(x[j], jnp.ones(()) if j == i else jnp.zeros(())) for j in range(dim)
+        ]
+        grads.append(f_dual(xdual).tan)
+    return jnp.stack(grads)
+
+
+def value_and_forward_ad(f_dual: Callable, x: jnp.ndarray):
+    xdual0 = [Dual(x[j], jnp.zeros(())) for j in range(x.shape[0])]
+    return f_dual(xdual0).val, forward_ad(f_dual, x)
+
+
+# ---------------------------------------------------------------------------
+# Dual-number versions of the paper's test functions, written against the
+# overloaded ops above — used by tests to validate the library end-to-end.
+# ---------------------------------------------------------------------------
+def rosenbrock_dual(xd):
+    terms = []
+    for i in range(len(xd) - 1):
+        terms.append((1.0 - xd[i]) ** 2 + 100.0 * (xd[i + 1] - xd[i] ** 2) ** 2)
+    return dsum(terms)
+
+
+def rastrigin_dual(xd):
+    a = 10.0
+    terms = [xd[i] * xd[i] - a * dcos(xd[i] * (2.0 * jnp.pi)) for i in range(len(xd))]
+    return dsum(terms) + a * len(xd)
+
+
+def sphere_dual(xd):
+    return dsum([d * d for d in xd])
+
+
+# ---------------------------------------------------------------------------
+# Production-path gradients. `grad_fn(f, mode)` returns value_and_grad with
+# the requested differentiation mode:
+#   forward  — jax.jvp per basis vector (vectorized Alg. 5; exact dual numbers)
+#   reverse  — jax.value_and_grad (beyond-paper option)
+# ---------------------------------------------------------------------------
+def value_and_grad_fn(f: Callable, mode: str = "forward") -> Callable:
+    if mode == "reverse":
+        return jax.value_and_grad(f)
+
+    if mode == "forward":
+
+        def vg(x):
+            dim = x.shape[0]
+            basis = jnp.eye(dim, dtype=x.dtype)
+            val, tangents = jax.vmap(lambda v: jax.jvp(f, (x,), (v,)))(basis)
+            return val[0], tangents
+
+        return vg
+
+    raise ValueError(f"unknown AD mode: {mode}")

@@ -1,0 +1,216 @@
+"""L-BFGS — the paper's §VII-B future work, realized (beyond-paper).
+
+Limited-memory BFGS removes the O(D²) inverse-Hessian state that the paper
+identifies as both its runtime hot spot and its scaling wall. The two-loop
+recursion keeps only the last `m` (δx, δg) pairs: O(mD) memory, O(mD) work
+per step — which is what makes multistart quasi-Newton applicable to the
+million-parameter sub-problems in §Arch-applicability (tiny-LM training).
+
+Implemented as fixed-size circular buffers so the whole solve stays inside
+lax.while_loop and vmaps across lanes exactly like core/bfgs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfgs import CONVERGED, DIVERGED, STOPPED, BFGSResult
+from repro.core.dual import value_and_grad_fn
+from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+
+_CURV_EPS = 1e-10
+
+
+@dataclasses.dataclass(frozen=True)
+class LBFGSOptions:
+    iter_max: int = 100
+    memory: int = 10
+    theta: float = 1e-5
+    required_c: Optional[int] = None
+    ls_iters: int = 20
+    ls_c1: float = 1e-4
+    linesearch: str = "armijo"
+    ad_mode: str = "reverse"  # reverse is the right default at high D
+
+
+class LBFGSLane(NamedTuple):
+    x: jnp.ndarray  # (D,)
+    f: jnp.ndarray
+    g: jnp.ndarray  # (D,)
+    s_buf: jnp.ndarray  # (m, D) δx history
+    y_buf: jnp.ndarray  # (m, D) δg history
+    rho_buf: jnp.ndarray  # (m,) 1/(sᵀy); 0 marks an empty slot
+    head: jnp.ndarray  # int32 — next write slot
+    n_pairs: jnp.ndarray  # int32 — valid pairs stored
+    converged: jnp.ndarray
+    failed: jnp.ndarray
+
+
+def two_loop_direction(lane: LBFGSLane) -> jnp.ndarray:
+    """Standard two-loop recursion over the circular (s, y) buffers."""
+    m = lane.s_buf.shape[0]
+    q = lane.g
+
+    def newest_to_oldest(i):
+        # i = 0 is the most recent pair
+        return (lane.head - 1 - i) % m
+
+    def bwd(i, carry):
+        q, alphas = carry
+        idx = newest_to_oldest(i)
+        valid = i < lane.n_pairs
+        rho = lane.rho_buf[idx]
+        alpha = jnp.where(valid, rho * jnp.dot(lane.s_buf[idx], q), 0.0)
+        q = q - alpha * lane.y_buf[idx]
+        return q, alphas.at[i].set(alpha)
+
+    q, alphas = jax.lax.fori_loop(0, m, bwd, (q, jnp.zeros((m,), q.dtype)))
+
+    # Initial Hessian scaling gamma = sᵀy / yᵀy of the newest pair
+    newest = newest_to_oldest(0)
+    y = lane.y_buf[newest]
+    gamma = jnp.where(
+        lane.n_pairs > 0,
+        jnp.dot(lane.s_buf[newest], y) / jnp.maximum(jnp.dot(y, y), 1e-30),
+        1.0,
+    )
+    r = gamma * q
+
+    def fwd(i, r):
+        j = m - 1 - i  # oldest valid first
+        idx = newest_to_oldest(j)
+        valid = j < lane.n_pairs
+        rho = lane.rho_buf[idx]
+        beta = jnp.where(valid, rho * jnp.dot(lane.y_buf[idx], r), 0.0)
+        return r + (alphas[j] - beta) * lane.s_buf[idx]
+
+    r = jax.lax.fori_loop(0, m, fwd, r)
+    return -r
+
+
+def _lane_init(vg, x0, theta, m):
+    fval, g = vg(x0)
+    D = x0.shape[0]
+    return LBFGSLane(
+        x=x0,
+        f=fval,
+        g=g,
+        s_buf=jnp.zeros((m, D), x0.dtype),
+        y_buf=jnp.zeros((m, D), x0.dtype),
+        rho_buf=jnp.zeros((m,), x0.dtype),
+        head=jnp.zeros((), jnp.int32),
+        n_pairs=jnp.zeros((), jnp.int32),
+        converged=jnp.linalg.norm(g) < theta,
+        failed=jnp.logical_not(jnp.isfinite(fval)),
+    )
+
+
+def _lane_step(f, vg, opts: LBFGSOptions, lane: LBFGSLane) -> LBFGSLane:
+    active = jnp.logical_not(jnp.logical_or(lane.converged, lane.failed))
+    p = two_loop_direction(lane)
+    descent = jnp.dot(p, lane.g) < 0
+    p = jnp.where(descent, p, -lane.g)
+
+    if opts.linesearch == "armijo":
+        ls = armijo_backtracking(f, lane.x, p, lane.f, lane.g,
+                                 c1=opts.ls_c1, max_iters=opts.ls_iters)
+    else:
+        ls = wolfe_linesearch(f, lane.x, p, lane.f, lane.g, vg,
+                              max_iters=opts.ls_iters)
+
+    x_new = lane.x + ls.alpha * p
+    f_new, g_new = vg(x_new)
+    s, y = x_new - lane.x, g_new - lane.g
+    curv = jnp.dot(s, y)
+    ok = jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
+
+    m = lane.s_buf.shape[0]
+    slot = lane.head % m
+    s_buf = jnp.where(ok, lane.s_buf.at[slot].set(s), lane.s_buf)
+    y_buf = jnp.where(ok, lane.y_buf.at[slot].set(y), lane.y_buf)
+    rho_buf = jnp.where(
+        ok, lane.rho_buf.at[slot].set(1.0 / jnp.where(ok, curv, 1.0)), lane.rho_buf
+    )
+    head = jnp.where(ok, (lane.head + 1) % m, lane.head)
+    n_pairs = jnp.where(ok, jnp.minimum(lane.n_pairs + 1, m), lane.n_pairs)
+
+    gn = jnp.linalg.norm(g_new)
+    now_conv = gn < opts.theta
+    now_fail = jnp.logical_not(
+        jnp.logical_and(jnp.isfinite(f_new), jnp.all(jnp.isfinite(g_new)))
+    )
+
+    def keep(new, old):
+        return jnp.where(active, new, old)
+
+    return LBFGSLane(
+        x=keep(x_new, lane.x),
+        f=keep(f_new, lane.f),
+        g=keep(g_new, lane.g),
+        s_buf=keep(s_buf, lane.s_buf),
+        y_buf=keep(y_buf, lane.y_buf),
+        rho_buf=keep(rho_buf, lane.rho_buf),
+        head=jnp.where(active, head, lane.head),
+        n_pairs=jnp.where(active, n_pairs, lane.n_pairs),
+        converged=jnp.where(active, now_conv, lane.converged),
+        failed=jnp.where(active, now_fail, lane.failed),
+    )
+
+
+def batched_lbfgs(
+    f: Callable,
+    x0: jnp.ndarray,  # (B, D)
+    opts: LBFGSOptions = LBFGSOptions(),
+    pcount: Optional[Callable] = None,
+) -> BFGSResult:
+    B = x0.shape[0]
+    required_c = opts.required_c if opts.required_c is not None else B
+    vg = value_and_grad_fn(f, opts.ad_mode)
+    count = pcount if pcount is not None else (lambda c: c)
+
+    init = jax.vmap(lambda x: _lane_init(vg, x, opts.theta, opts.memory))(x0)
+
+    def counts(lane):
+        n_conv = count(jnp.sum(lane.converged.astype(jnp.int32)))
+        n_act = count(
+            jnp.sum(
+                jnp.logical_not(
+                    jnp.logical_or(lane.converged, lane.failed)
+                ).astype(jnp.int32)
+            )
+        )
+        return n_conv, n_act
+
+    def cond(carry):
+        k, lane, n_conv, n_act = carry
+        return jnp.logical_and(
+            k < opts.iter_max, jnp.logical_and(n_conv < required_c, n_act > 0)
+        )
+
+    def body(carry):
+        k, lane, _, _ = carry
+        lane = jax.vmap(functools.partial(_lane_step, f, vg, opts))(lane)
+        n_conv, n_act = counts(lane)
+        return (k + 1, lane, n_conv, n_act)
+
+    n_conv0, n_act0 = counts(init)
+    k, lane, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), init, n_conv0, n_act0)
+    )
+    status = jnp.where(
+        lane.converged,
+        CONVERGED,
+        jnp.where(jnp.logical_or(lane.failed, k >= opts.iter_max), DIVERGED, STOPPED),
+    ).astype(jnp.int32)
+    return BFGSResult(
+        x=lane.x,
+        fval=lane.f,
+        grad_norm=jax.vmap(jnp.linalg.norm)(lane.g),
+        status=status,
+        iterations=k,
+        n_converged=jnp.sum(lane.converged.astype(jnp.int32)),
+    )

@@ -1,0 +1,153 @@
+"""Benchmark objective functions from the paper (§V-B) plus the dijet model.
+
+Every objective is a pure function f: R^dim -> R written in jnp so it can be
+vmapped over particles, differentiated in forward or reverse mode, and lowered
+inside pallas/pjit. Each comes with its search `range` and the true optimum,
+used by benchmarks to compute the paper's Euclidean error metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    name: str
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    lower: float
+    upper: float
+    # true minimizer for a given dim (None when dim-dependent/unknown)
+    minimizer: Optional[Callable[[int], np.ndarray]] = None
+    min_value: float = 0.0
+
+    def x_star(self, dim: int) -> np.ndarray:
+        assert self.minimizer is not None
+        return self.minimizer(dim)
+
+
+def rosenbrock(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper §V-B1. Global minimum f=0 at x=(1,...,1)."""
+    return jnp.sum((1.0 - x[:-1]) ** 2 + 100.0 * (x[1:] - x[:-1] ** 2) ** 2)
+
+
+def rastrigin(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper §V-B2. A=10; global minimum f=0 at the origin; 11^d local minima
+    in [-5.12, 5.12]^d."""
+    a = 10.0
+    return a * x.shape[0] + jnp.sum(x * x - a * jnp.cos(2.0 * jnp.pi * x))
+
+
+def ackley(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper §V-B3. Gradient is discontinuous at the global minimum (origin) —
+    the paper's documented failure mode for the |grad|<theta criterion."""
+    d = x.shape[0]
+    s1 = jnp.sqrt(jnp.sum(x * x) / d)
+    s2 = jnp.sum(jnp.cos(2.0 * jnp.pi * x)) / d
+    return -20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + jnp.e + 20.0
+
+
+def goldstein_price(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper §V-B4. 2-D only. Global minimum f=3 at (0, -1)."""
+    x1, x2 = x[0], x[1]
+    t1 = 1.0 + (x1 + x2 + 1.0) ** 2 * (
+        19.0 - 14.0 * x1 + 3.0 * x1 ** 2 - 14.0 * x2 + 6.0 * x1 * x2 + 3.0 * x2 ** 2
+    )
+    t2 = 30.0 + (2.0 * x1 - 3.0 * x2) ** 2 * (
+        18.0 - 32.0 * x1 + 12.0 * x1 ** 2 + 48.0 * x2 - 36.0 * x1 * x2 + 27.0 * x2 ** 2
+    )
+    return t1 * t2
+
+
+def sphere(x: jnp.ndarray) -> jnp.ndarray:
+    """Convex sanity objective (not in the paper; used by property tests)."""
+    return jnp.sum(x * x)
+
+
+# ---------------------------------------------------------------------------
+# Dijet mass spectrum fit (paper §V-G / Fig. 5).
+#
+# Standard CMS/ATLAS dijet parameterisation:
+#   dN/dm = p0 * (1 - m/sqrt(s))^p1 / (m/sqrt(s))^(p2 + p3*log(m/sqrt(s)))
+# We fit (log p0, p1, p2, p3) by Poisson negative log-likelihood over binned
+# counts. `make_dijet_nll` returns (nll, simulate) so benchmarks can generate
+# the pseudo-data exactly the way the paper's Fig. 5 does.
+# ---------------------------------------------------------------------------
+SQRT_S = 13000.0  # GeV
+
+
+def dijet_rate(params: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    logp0, p1, p2, p3 = params[0], params[1], params[2], params[3]
+    xm = m / SQRT_S
+    log_rate = (
+        logp0
+        + p1 * jnp.log1p(-xm)
+        - (p2 + p3 * jnp.log(xm)) * jnp.log(xm)
+    )
+    return jnp.exp(log_rate)
+
+
+def make_dijet_nll(bin_edges: np.ndarray, counts: np.ndarray):
+    centers = jnp.asarray(0.5 * (bin_edges[:-1] + bin_edges[1:]))
+    widths = jnp.asarray(bin_edges[1:] - bin_edges[:-1])
+    counts = jnp.asarray(counts)
+
+    n_bins = centers.shape[0]
+    log_widths = jnp.log(widths)
+
+    def nll(params: jnp.ndarray) -> jnp.ndarray:
+        # log-space Poisson NLL (per bin). No mu clamp: clamping creates a
+        # zero-gradient plateau at extreme params where |grad|<Θ falsely
+        # "converges" — the paper's §VI failure mode, manufactured. In log
+        # space extreme params overflow to inf and the lane FAILS instead.
+        logp0, p1, p2, p3 = params[0], params[1], params[2], params[3]
+        xm = centers / SQRT_S
+        log_mu = (
+            logp0 + p1 * jnp.log1p(-xm) - (p2 + p3 * jnp.log(xm)) * jnp.log(xm)
+            + log_widths
+        )
+        return jnp.sum(jnp.exp(log_mu) - counts * log_mu) / n_bins
+
+    return nll
+
+
+def simulate_dijet_counts(
+    true_params: np.ndarray, bin_edges: np.ndarray, seed: int = 0
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = 0.5 * (bin_edges[:-1] + bin_edges[1:])
+    widths = bin_edges[1:] - bin_edges[:-1]
+    mu = np.asarray(dijet_rate(jnp.asarray(true_params), jnp.asarray(centers))) * widths
+    return rng.poisson(mu).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+OBJECTIVES = {
+    "rosenbrock": Objective(
+        "rosenbrock", rosenbrock, -5.0, 10.0, minimizer=lambda d: np.ones(d)
+    ),
+    "rastrigin": Objective(
+        "rastrigin", rastrigin, -5.12, 5.12, minimizer=lambda d: np.zeros(d)
+    ),
+    "ackley": Objective(
+        "ackley", ackley, -32.768, 32.768, minimizer=lambda d: np.zeros(d)
+    ),
+    "goldstein_price": Objective(
+        "goldstein_price",
+        goldstein_price,
+        -2.0,
+        2.0,
+        minimizer=lambda d: np.array([0.0, -1.0]),
+        min_value=3.0,
+    ),
+    "sphere": Objective("sphere", sphere, -5.0, 5.0, minimizer=lambda d: np.zeros(d)),
+}
+
+
+def get_objective(name: str) -> Objective:
+    return OBJECTIVES[name]

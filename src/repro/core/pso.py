@@ -1,0 +1,175 @@
+"""Particle Swarm Optimization phase (paper §III-A, Algs. 2/3/8/9).
+
+Bulk-synchronous TPU adaptation of the CUDA kernels:
+- Alg. 8 (init kernel): all particles initialised at once from a counter-based
+  threefry key (replaces per-thread cuRAND); the atomicMin race for the global
+  best becomes a deterministic argmin reduction.
+- Alg. 9 (iteration kernel): one fused vectorised update of velocities,
+  positions, personal bests; global best by argmin (+ optional cross-device
+  pmin supplied by the distributed driver).
+
+Paper hyperparameters: w=0.5, c1=1.2, c2=1.5 (from Deboucha et al. 2020).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PSOOptions:
+    n_particles: int = 1024
+    iter_pso: int = 5
+    w: float = 0.5  # inertia
+    c1: float = 1.2  # cognitive coefficient
+    c2: float = 1.5  # social coefficient
+    clip_to_range: bool = False  # paper does not clip; optional extension
+    use_kernel: bool = False  # route the v/x update through the fused
+    # Pallas kernel (kernels/pso_step.py); default off on CPU where
+    # interpret mode is slower than XLA's own fusion
+
+
+class SwarmState(NamedTuple):
+    x: jnp.ndarray  # (N, D) positions ("swarm")
+    v: jnp.ndarray  # (N, D) velocities
+    px: jnp.ndarray  # (N, D) personal best positions
+    pf: jnp.ndarray  # (N,)  personal best values
+    gx: jnp.ndarray  # (D,)  global best position
+    gf: jnp.ndarray  # ()    global best value
+    key: jnp.ndarray  # PRNG key
+
+
+def _global_best(x, fvals, gx, gf, pmin: Optional[Callable]):
+    """argmin over this shard, then optional cross-device (value, pos) min."""
+    i = jnp.argmin(fvals)
+    cand_f, cand_x = fvals[i], x[i]
+    better = cand_f < gf
+    gf = jnp.where(better, cand_f, gf)
+    gx = jnp.where(better, cand_x, gx)
+    if pmin is not None:
+        gf, gx = pmin(gf, gx)
+    return gx, gf
+
+
+def init_swarm(
+    f: Callable,
+    key: jnp.ndarray,
+    n: int,
+    dim: int,
+    lower: float,
+    upper: float,
+    pmin: Optional[Callable] = None,
+    dtype=jnp.float32,
+) -> SwarmState:
+    """Alg. 2/8: uniform positions in [lower, upper], velocities in ±range."""
+    kx, kv, knext = jax.random.split(key, 3)
+    vel_range = upper - lower
+    x = jax.random.uniform(kx, (n, dim), dtype, lower, upper)
+    v = jax.random.uniform(kv, (n, dim), dtype, -vel_range, vel_range)
+    pf = jax.vmap(f)(x)
+    gx, gf = _global_best(x, pf, x[0], jnp.asarray(jnp.inf, dtype), pmin)
+    return SwarmState(x=x, v=v, px=x, pf=pf, gx=gx, gf=gf, key=knext)
+
+
+def pso_step(
+    f: Callable,
+    state: SwarmState,
+    opts: PSOOptions,
+    lower: float,
+    upper: float,
+    pmin: Optional[Callable] = None,
+) -> SwarmState:
+    """Alg. 3/9: velocity/position update + personal/global best refresh."""
+    k1, k2, knext = jax.random.split(state.key, 3)
+    n, dim = state.x.shape
+    r1 = jax.random.uniform(k1, (n, dim), state.x.dtype)
+    r2 = jax.random.uniform(k2, (n, dim), state.x.dtype)
+
+    if opts.use_kernel:
+        from repro.kernels import ops as kernel_ops
+        x, v = kernel_ops.pso_step_update(
+            state.x, state.v, state.px, state.gx, r1, r2,
+            opts.w, opts.c1, opts.c2)
+    else:
+        v = (
+            opts.w * state.v
+            + opts.c1 * r1 * (state.px - state.x)
+            + opts.c2 * r2 * (state.gx[None, :] - state.x)
+        )
+        x = state.x + v
+    if opts.clip_to_range:
+        x = jnp.clip(x, lower, upper)
+
+    fvals = jax.vmap(f)(x)
+    improved = fvals < state.pf
+    pf = jnp.where(improved, fvals, state.pf)
+    px = jnp.where(improved[:, None], x, state.px)
+    gx, gf = _global_best(x, fvals, state.gx, state.gf, pmin)
+    return SwarmState(x=x, v=v, px=px, pf=pf, gx=gx, gf=gf, key=knext)
+
+
+def run_pso(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: PSOOptions,
+    pmin: Optional[Callable] = None,
+    dtype=jnp.float32,
+) -> SwarmState:
+    """Phase 1 of ZEUS: init + iter_pso synchronous swarm iterations."""
+    state = init_swarm(f, key, opts.n_particles, dim, lower, upper, pmin, dtype)
+
+    def body(_, s):
+        return pso_step(f, s, opts, lower, upper, pmin)
+
+    return jax.lax.fori_loop(0, opts.iter_pso, body, state)
+
+
+def sequential_pso(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: PSOOptions,
+) -> SwarmState:
+    """Algs. 2/3 run particle-by-particle in python (the Fig. 2 baseline).
+
+    Faithful to the *sequential* semantics: the global best propagates
+    within an iteration (particle i+1 sees particle i's update), unlike the
+    bulk-synchronous parallel version.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    n = opts.n_particles
+    vel_range = upper - lower
+    x = rng.uniform(lower, upper, (n, dim))
+    v = rng.uniform(-vel_range, vel_range, (n, dim))
+    px = x.copy()
+    pf = np.array([float(f(jnp.asarray(x[i]))) for i in range(n)])
+    gi = int(np.argmin(pf))
+    gx, gf = px[gi].copy(), float(pf[gi])
+
+    for _ in range(opts.iter_pso):
+        for i in range(n):
+            r1, r2 = rng.uniform(size=dim), rng.uniform(size=dim)
+            v[i] = (
+                opts.w * v[i] + opts.c1 * r1 * (px[i] - x[i]) + opts.c2 * r2 * (gx - x[i])
+            )
+            x[i] = x[i] + v[i]
+            fv = float(f(jnp.asarray(x[i])))
+            if fv < pf[i]:
+                pf[i], px[i] = fv, x[i]
+            if fv < gf:
+                gf, gx = fv, x[i].copy()
+
+    return SwarmState(
+        x=jnp.asarray(x), v=jnp.asarray(v), px=jnp.asarray(px), pf=jnp.asarray(pf),
+        gx=jnp.asarray(gx), gf=jnp.asarray(gf), key=key,
+    )

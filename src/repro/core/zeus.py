@@ -1,0 +1,141 @@
+"""The ZEUS driver (paper Alg. 1 sequential / Alg. 7 parallel).
+
+Phase 1: PSO improves N random starting points (skipped when iter_pso=0 —
+"randomness improved by PSO" is an *option*, §III-A2).
+Phase 2: multistart quasi-Newton (BFGS or L-BFGS) from the swarm, stopping
+early once `required_c` lanes have converged.
+Finale:  parallel reduction for the best converged iterate (Alg. 7 line 10)
+plus the §VII-B confidence clustering, realized in core/clustering.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfgs as bfgs_mod
+from repro.core import lbfgs as lbfgs_mod
+from repro.core.bfgs import BFGSOptions, BFGSResult, batched_bfgs, serial_bfgs
+from repro.core.lbfgs import LBFGSOptions, batched_lbfgs
+from repro.core.pso import PSOOptions, run_pso, sequential_pso
+
+
+@dataclasses.dataclass(frozen=True)
+class ZeusOptions:
+    pso: PSOOptions = PSOOptions()
+    bfgs: BFGSOptions = BFGSOptions()
+    lbfgs: Optional[LBFGSOptions] = None  # set to use L-BFGS for phase 2
+    use_pso: bool = True
+    dtype: str = "float32"
+
+
+class ZeusResult(NamedTuple):
+    best_x: jnp.ndarray  # (D,) estimated global minimizer
+    best_f: jnp.ndarray  # ()
+    raw: BFGSResult  # all lanes (for clustering / diagnostics)
+    n_converged: jnp.ndarray
+    pso_best_f: jnp.ndarray  # global best after phase 1 (diagnostics)
+
+
+def _phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
+    if opts.lbfgs is not None:
+        return batched_lbfgs(f, x0, opts.lbfgs, pcount=pcount)
+    return batched_bfgs(f, x0, opts.bfgs, pcount=pcount)
+
+
+def _select_best(res: BFGSResult) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Parallel reduction: best *converged* lane; fall back to best overall."""
+    fv = jnp.where(res.status == bfgs_mod.CONVERGED, res.fval, jnp.inf)
+    any_conv = jnp.any(jnp.isfinite(fv))
+    fv = jnp.where(any_conv, fv, res.fval)
+    i = jnp.argmin(fv)
+    return res.x[i], fv[i]
+
+
+def zeus(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: ZeusOptions = ZeusOptions(),
+) -> ZeusResult:
+    """Single-host ZEUS (Alg. 7). jit-able end to end."""
+    dtype = jnp.dtype(opts.dtype)
+    swarm = run_pso(f, key, dim, lower, upper, opts.pso, dtype=dtype)
+    # iter_pso=0 still initialises the swarm — pure random multistart.
+    starts = swarm.x if opts.use_pso else jax.random.uniform(
+        key, (opts.pso.n_particles, dim), dtype, lower, upper
+    )
+    res = _phase2(f, starts, opts)
+    best_x, best_f = _select_best(res)
+    return ZeusResult(
+        best_x=best_x,
+        best_f=best_f,
+        raw=res,
+        n_converged=res.n_converged,
+        pso_best_f=swarm.gf,
+    )
+
+
+def zeus_jit(f, dim, lower, upper, opts: ZeusOptions = ZeusOptions()):
+    """Returns a jitted `key -> ZeusResult` closure (compile once, run many)."""
+    return jax.jit(lambda key: zeus(f, key, dim, lower, upper, opts))
+
+
+# ---------------------------------------------------------------------------
+# Sequential ZEUS (Alg. 1) — the Fig. 2 baseline. Runs SerialBFGS lane by
+# lane in python, stopping after required_c convergences, exactly like the
+# paper's sequential loop (lines 9-20).
+# ---------------------------------------------------------------------------
+class SequentialZeusResult(NamedTuple):
+    best_x: np.ndarray
+    best_f: float
+    n_converged: int
+    n_started: int
+    wall_time_s: float
+
+
+def sequential_zeus(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: ZeusOptions = ZeusOptions(),
+) -> SequentialZeusResult:
+    t0 = time.perf_counter()
+    if opts.use_pso and opts.pso.iter_pso > 0:
+        swarm = sequential_pso(f, key, dim, lower, upper, opts.pso)
+        starts = np.asarray(swarm.x)
+    else:
+        rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+        starts = rng.uniform(lower, upper, (opts.pso.n_particles, dim))
+
+    required_c = opts.bfgs.required_c or len(starts)
+    solve = jax.jit(functools.partial(serial_bfgs, f, opts=opts.bfgs))
+
+    best_x, best_f, c = None, np.inf, 0
+    n_started = 0
+    for x0 in starts:
+        n_started += 1
+        r = solve(jnp.asarray(x0, jnp.dtype(opts.dtype)))
+        fv = float(r.fval)
+        if fv < best_f:
+            best_x, best_f = np.asarray(r.x), fv
+        if int(r.status) == bfgs_mod.CONVERGED:
+            c += 1
+            if c >= required_c:
+                break  # Alg. 1 line 17: stop early once enough runs converged
+    return SequentialZeusResult(
+        best_x=best_x,
+        best_f=best_f,
+        n_converged=c,
+        n_started=n_started,
+        wall_time_s=time.perf_counter() - t0,
+    )

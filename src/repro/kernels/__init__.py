@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for ZEUS's measured hot spots (paper §IV-C, §VII-B):
+the batched BFGS inverse-Hessian update (+ fused next-direction), the batched
+search-direction matvec, the fused PSO update, and fused objective+gradient
+evaluation. ops.py holds the jit'd public wrappers; ref.py the jnp oracles."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

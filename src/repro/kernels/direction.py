@@ -1,0 +1,39 @@
+"""Pallas kernel: batched search direction p = -H g (Alg. 4 line 10).
+
+Tiled batched matvec. For large B we process a *tile of lanes* per grid
+step so the MXU sees a (TB·D, D)×(D,) workload per block instead of a thin
+single matvec; H tiles stream HBM→VMEM once each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _direction_kernel(h_ref, g_ref, out_ref):
+    H = h_ref[...]  # (TB, D, D)
+    g = g_ref[...]  # (TB, D)
+    # batched matvec on the MXU: contract last dim of H with g per lane
+    p = jax.lax.dot_general(
+        H, g, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (TB, D)
+    out_ref[...] = (-p).astype(out_ref.dtype)
+
+
+def direction_pallas(H, g, *, lane_tile: int = 8, interpret=False):
+    B, D, _ = H.shape
+    tb = min(lane_tile, B)
+    while B % tb:
+        tb -= 1
+    return pl.pallas_call(
+        _direction_kernel,
+        grid=(B // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, D, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((tb, D), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, D), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), H.dtype),
+        interpret=interpret,
+    )(H, g)

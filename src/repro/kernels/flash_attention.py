@@ -1,0 +1,124 @@
+"""Flash/Splash-style attention Pallas kernel (beyond-paper, LM substrate).
+
+Two §Perf lessons point here: the 32k-prefill cells stream O(S·chunk) f32
+accumulators through HBM in the jnp online-softmax path, and sequence
+parallelism is unprofitable until attention itself is sequence-distributed.
+This kernel keeps the online-softmax state (m, l, acc) in VMEM scratch
+across the KV-block grid dimension, so per q-block HBM traffic is one read
+of q + streamed k/v blocks + one write of the output — the flash-attention
+memory profile.
+
+Grid: (batch·q_heads, q_blocks, kv_blocks) — kv_blocks is the innermost
+(fastest) dimension, so the VMEM scratch carries state across it. GQA is
+handled in the k/v index maps (q head h reads kv head h // group).
+Causal masking is positional inside the kernel (full-block skips are a
+future grid-pruning optimization; masked blocks are computed-and-discarded
+here, which is correct if wasteful).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(scale, causal, block_q, block_k, q_ref, k_ref, v_ref,
+                  o_ref, m_scr, l_scr, acc_scr):
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (block_q, hd)
+    k = k_ref[0]  # (block_k, hd)
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    if causal:
+        qi = pl.program_id(1)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    p = jnp.exp(s - m_new)  # (block_q, block_k)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, Sq, H, hd). Sq % block_q == 0 and Sk % block_k == 0
+    (ops.py pads); GQA via H % KV == 0."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+
+    # (B, S, H, hd) -> (B*H, S, hd) lanes-major layout per head
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(_flash_kernel, scale, causal, bq, bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            # GQA: q head (bh % H) reads kv head (bh % H) // g
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, qi, kj, H=H, g=g:
+                         ((bh // H) * (H // g) + (bh % H) // g, kj, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, qi, kj, H=H, g=g:
+                         ((bh // H) * (H // g) + (bh % H) // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

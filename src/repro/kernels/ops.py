@@ -1,0 +1,154 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op:
+  * pads the lane dimension D to a multiple of 128 (MXU/VPU tile alignment;
+    zero padding is exact for every op here — see bfgs_update.py docstring),
+  * dispatches to the Pallas kernel on TPU, to interpret=True mode on CPU
+    (so the same kernel body is validated everywhere), or to the jnp
+    reference when REPRO_DISABLE_PALLAS=1.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bfgs_update import bfgs_update_pallas, update_direction_pallas
+from repro.kernels.direction import direction_pallas
+from repro.kernels.fused_obj import fused_value_grad_pallas
+from repro.kernels.pso_step import pso_step_pallas
+
+_LANE = 128  # TPU lane width
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_to(x: jnp.ndarray, size: int, axis: int) -> jnp.ndarray:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _padded_dim(d: int) -> int:
+    return ((d + _LANE - 1) // _LANE) * _LANE
+
+
+# -- batched BFGS inverse-Hessian update -------------------------------------
+def bfgs_update(H: jnp.ndarray, dx: jnp.ndarray, dg: jnp.ndarray) -> jnp.ndarray:
+    """H (B, D, D), dx/dg (B, D) -> H' (B, D, D)."""
+    if not _use_pallas():
+        return ref.bfgs_update_ref(H, dx, dg)
+    B, D, _ = H.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    out = bfgs_update_pallas(
+        Hp, _pad_to(dx, Dp, 1), _pad_to(dg, Dp, 1), interpret=_interpret()
+    )
+    return out[:, :D, :D]
+
+
+def bfgs_update_single(H: jnp.ndarray, dx: jnp.ndarray, dg: jnp.ndarray) -> jnp.ndarray:
+    """Single-lane variant used inside vmapped BFGS (core/bfgs.py)."""
+    return bfgs_update(H[None], dx[None], dg[None])[0]
+
+
+def bfgs_update_direction(H, dx, dg, g_new):
+    """Fused H' + p' = -H' g_new. Returns (H', p')."""
+    if not _use_pallas():
+        return ref.update_direction_ref(H, dx, dg, g_new)
+    B, D, _ = H.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    Hn, p = update_direction_pallas(
+        Hp,
+        _pad_to(dx, Dp, 1),
+        _pad_to(dg, Dp, 1),
+        _pad_to(g_new, Dp, 1),
+        interpret=_interpret(),
+    )
+    return Hn[:, :D, :D], p[:, :D]
+
+
+# -- batched direction --------------------------------------------------------
+def direction(H: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    if not _use_pallas():
+        return ref.direction_ref(H, g)
+    B, D, _ = H.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    out = direction_pallas(Hp, _pad_to(g, Dp, 1), interpret=_interpret())
+    return out[:, :D]
+
+
+# -- fused PSO step -----------------------------------------------------------
+def pso_step_update(x, v, px, gx, r1, r2, w, c1, c2):
+    if not _use_pallas():
+        return ref.pso_step_ref(x, v, px, gx, r1, r2, w, c1, c2)
+    N, D = x.shape
+    Dp = _padded_dim(D)
+    x_new, v_new = pso_step_pallas(
+        _pad_to(x, Dp, 1),
+        _pad_to(v, Dp, 1),
+        _pad_to(px, Dp, 1),
+        _pad_to(gx, Dp, 0),
+        _pad_to(r1, Dp, 1),
+        _pad_to(r2, Dp, 1),
+        w, c1, c2,
+        interpret=_interpret(),
+    )
+    return x_new[:, :D], v_new[:, :D]
+
+
+# -- fused objective + gradient -------------------------------------------------
+FUSED_OBJECTIVES = ("sphere", "rastrigin", "rosenbrock")
+
+
+def fused_value_grad(name: str, x: jnp.ndarray):
+    """x (N, D) -> (f (N,), g (N, D)); analytic fused kernels where available."""
+    if name not in FUSED_OBJECTIVES or not _use_pallas():
+        return getattr(ref, f"{name}_vg_ref")(x)
+    N, D = x.shape
+    Dp = _padded_dim(D)
+    if name == "rosenbrock" and Dp != D:
+        # zero padding is NOT exact for rosenbrock's coupled terms: the
+        # boundary term (x_{D+1} - x_D^2) would be polluted. Use the ref.
+        return ref.rosenbrock_vg_ref(x)
+    f, g = fused_value_grad_pallas(name, _pad_to(x, Dp, 1), interpret=_interpret())
+    if name == "rastrigin":
+        # each zero pad column contributes A - A*cos(0) = 0 to f: exact.
+        pass
+    return f, g[:, :D]
+
+
+# -- flash attention -----------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, scale=None,
+                    block_q=512, block_k=512):
+    """Flash/Splash attention: q (B,Sq,H,hd), k/v (B,Sk,KV,hd) -> (B,Sq,H,hd).
+
+    Sequence lengths must divide the block sizes after clamping (the LM
+    substrate's shapes are powers of two; ragged tails fall back to ref)."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    if not _use_pallas():
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _fa(q, k, v, causal=causal, scale=scale, block_q=bq, block_k=bk,
+               interpret=_interpret())

@@ -1,0 +1,62 @@
+"""Pallas kernel: fused PSO velocity+position update (Alg. 9 lines 9-10).
+
+One VMEM pass computes
+    v' = w v + c1 r1 (px − x) + c2 r2 (gx − x)
+    x' = x + v'
+for a (TN, D) tile of particles. Five elementwise HBM round-trips in the
+naive form collapse to one read of {x, v, px, r1, r2} + broadcast gx and one
+write of {x', v'}. Best bookkeeping (argmin reductions) stays outside — it
+is a cross-particle reduction, which XLA already emits optimally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pso_kernel(w, c1, c2, x_ref, v_ref, px_ref, gx_ref, r1_ref, r2_ref,
+                xout_ref, vout_ref):
+    x = x_ref[...]
+    v = v_ref[...]
+    px = px_ref[...]
+    gx = gx_ref[...]  # (1, D) broadcast tile
+    r1 = r1_ref[...]
+    r2 = r2_ref[...]
+    v_new = w * v + c1 * r1 * (px - x) + c2 * r2 * (gx - x)
+    x_new = x + v_new
+    vout_ref[...] = v_new.astype(vout_ref.dtype)
+    xout_ref[...] = x_new.astype(xout_ref.dtype)
+
+
+def pso_step_pallas(x, v, px, gx, r1, r2, w, c1, c2, *,
+                    particle_tile: int = 256, interpret=False):
+    N, D = x.shape
+    tn = min(particle_tile, N)
+    while N % tn:
+        tn -= 1
+    gx2 = gx[None, :]  # (1, D) so the block machinery can tile it
+    kernel = functools.partial(_pso_kernel, w, c1, c2)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((1, D), lambda n: (0, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), x.dtype),
+            jax.ShapeDtypeStruct((N, D), v.dtype),
+        ],
+        interpret=interpret,
+    )(x, v, px, gx2, r1, r2)

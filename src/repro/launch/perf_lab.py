@@ -1,0 +1,128 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb lab: lower one cell under named variants, diff rooflines.
+
+    PYTHONPATH=src python -m repro.launch.perf_lab \
+        --arch grok-1-314b --shape train_4k --variants baseline,seqpar,mb8
+
+Each variant = (rules overrides, TrainConfig tweaks). Results append to
+perf_lab_results.json; EXPERIMENTS.md §Perf narrates the hypothesis →
+change → before/after → verdict for each iteration.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.dryrun import analyze_cell
+from repro.sharding import rules_override
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig
+
+
+def tc(mb=16, moment="bfloat16", remat=True):
+    return TrainConfig(optimizer=OptimizerConfig(moment_dtype=moment),
+                       remat=remat, microbatches=mb, param_dtype="bfloat16")
+
+
+# variant name -> (rules overrides dict, TrainConfig or None)
+VARIANTS = {
+    "baseline": ({}, None),
+    # sequence-parallel residual stream: activations (and their TP psums /
+    # remat saves) shard S over the model axis
+    "seqpar": ({"seq": ("model",)}, None),
+    # fewer microbatches: FSDP weight re-gathers scale with microbatch count
+    "mb8": ({}, tc(mb=8)),
+    "mb4": ({}, tc(mb=4)),
+    "seqpar_mb8": ({"seq": ("model",)}, tc(mb=8)),
+    "seqpar_mb4": ({"seq": ("model",)}, tc(mb=4)),
+    # resident 2D-sharded expert weights (no FSDP re-gather): d over data,
+    # f over model; activations pay the reductions instead
+    # resident 2D expert weights for grok: E unsharded, d(data)×f(model);
+    # dispatched tokens' d sharded over data to match -> no weight gathers
+    "moe2d": ({"expert": (), "fsdp": ("data",), "moe_embed": ("data",)}, None),
+    "moe2d_mb4": ({"expert": (), "fsdp": ("data",), "moe_embed": ("data",)},
+                  tc(mb=4)),
+    "seqpar_moe2d_mb4": ({"seq": ("model",), "expert": (), "fsdp": ("data",),
+                          "moe_embed": ("data",)}, tc(mb=4)),
+    # + reduce-scatter h over its slot dim instead of all-reducing
+    "moe2d_h_rs": ({"expert": (), "fsdp": ("data",), "moe_embed": ("data",),
+                    "moe_cap": ("data",)}, None),
+    "seqpar_moe2d_h_rs": ({"seq": ("model",), "expert": (), "fsdp": ("data",),
+                           "moe_embed": ("data",), "moe_cap": ("data",)},
+                          None),
+    # d-sharded down-projection: w_down (E, f, d->model) resident; the big
+    # f-contraction all-reduce of xout becomes a small h all-gather
+    "dshard_down": ({"expert_mlp_down": (), "moe_embed_w": ("model",),
+                     "moe_embed": ("model",)}, None),
+    "seqpar_dshard_mb8": ({"seq": ("model",), "expert_mlp_down": (),
+                           "moe_embed_w": ("model",),
+                           "moe_embed": ("model",)}, tc(mb=8)),
+    # defer the xout reduction through the linear combine einsum
+    "fuse_combine_ar": ({"skip_xout_constraint": ("yes",)}, None),
+    # reduce-scatter the down-proj output over its slot dim (vs all-reduce)
+    "xout_rs": ({"moe_cap_out": ("model",)}, None),
+    # no remat (recompute off): flips flops down, memory up
+    "noremat_mb8": ({}, tc(mb=8, remat=False)),
+    # decode variants
+    "fori_inplace": ({}, None),  # in-place fori decode (code change marker)
+    "cache_seq_off": ({"cache_seq": ()}, None),
+    "decode_tp_batch": ({"cache_batch": ("pod", "data", "model"),
+                         "cache_seq": (), "batch": ("pod", "data", "model")},
+                        None),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="perf_lab_results.json")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for name in args.variants.split(","):
+        overrides, tcfg = VARIANTS[name]
+        key = f"{args.arch}|{args.shape}|{args.mesh}|{name}"
+        if key in results and results[key].get("status") == "ok":
+            print(f"[cached] {key}")
+            _summ(results[key])
+            continue
+        print(f"[variant {name}] lowering {args.arch}×{args.shape} ...",
+              flush=True)
+        try:
+            with rules_override(**overrides):
+                r = analyze_cell(args.arch, args.shape, args.mesh, tcfg=tcfg)
+            r["variant"] = name
+            results[key] = r
+            _summ(r)
+        except Exception as e:
+            import traceback
+            results[key] = {"status": "error", "error": str(e),
+                            "trace": traceback.format_exc()[-1500:]}
+            print(f"  ERROR: {e}")
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+def _summ(r):
+    t = r["terms"]
+    dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    print(f"  compute={t['compute_s']:.2f}s memory={t['memory_s']:.2f}s "
+          f"collective={t['collective_s']:.2f}s -> dominant "
+          f"{t['bottleneck']}={dom:.2f}s | peak "
+          f"{r['per_device_peak_bytes']/2**30:.1f}GiB | useful-flop "
+          f"{t['useful_flop_ratio']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.2e}"
+    return f"{x:.4f}" if x < 10 else f"{x:.1f}"
+
+
+def roofline_fraction(t):
+    """useful-model-time / dominant-term-time: how close the dominant term
+    is to the pure-compute ideal for the model's useful flops."""
+    from repro.launch.roofline import PEAK_FLOPS
+    ideal = t["model_flops"] / t.get("n_devices_", 256) / PEAK_FLOPS
+    dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return ideal / dom if dom > 0 else 0.0
+
+
+def render(results: dict, mesh_kind: str) -> str:
+    rows = []
+    hdr = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+           "bottleneck | model/HLO flop ratio | roofline frac | peak GiB/dev | "
+           "dominant collectives |")
+    sep = "|" + "---|" * 11
+    rows.append(hdr)
+    rows.append(sep)
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cell = f"{arch}|{shape}|{mesh_kind}"
+            r = results.get(cell)
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                rows.append(f"| {arch} | {shape} | SKIP ({r['reason'][:40]}…) "
+                            "| - | - | - | - | - | - | - | - |")
+                continue
+            if r["status"] == "error":
+                rows.append(f"| {arch} | {shape} | ERROR | - | - | - | - | - "
+                            "| - | - | - |")
+                continue
+            t = dict(r["terms"])
+            t["n_devices_"] = r["n_devices"]
+            frac = roofline_fraction(t)
+            colls = r.get("collectives", {})
+            top = sorted(colls.items(), key=lambda kv: -kv[1]["wire_bytes"])[:2]
+            coll_s = "; ".join(
+                f"{k}×{int(v['count'])} ({v['wire_bytes']/1e9:.1f}GB)"
+                for k, v in top) or "none"
+            rows.append(
+                f"| {arch} | {shape} | ok | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"**{t['bottleneck']}** | {t['useful_flop_ratio']:.2f} | "
+                f"{frac:.3f} | {fmt_bytes(r['per_device_peak_bytes'])} | "
+                f"{coll_s} |")
+    return "\n".join(rows)
+
+
+def summary(results: dict) -> str:
+    ok = [r for r in results.values() if r.get("status") == "ok"]
+    skip = [r for r in results.values() if r.get("status") == "skip"]
+    err = [r for r in results.values() if r.get("status") == "error"]
+    lines = [
+        f"- cells compiled OK: **{len(ok)}**, documented skips: {len(skip)}, "
+        f"errors: {len(err)}",
+    ]
+    worst = sorted(
+        (r for r in ok if r["mesh"] == "single"),
+        key=lambda r: roofline_fraction(
+            dict(r["terms"], n_devices_=r["n_devices"])),
+    )
+    if worst:
+        lines.append("- worst roofline fractions (single-pod): " + ", ".join(
+            f"{r['arch']}×{r['shape']} "
+            f"({roofline_fraction(dict(r['terms'], n_devices_=r['n_devices'])):.3f})"
+            for r in worst[:3]))
+        collbound = [r for r in ok if r["mesh"] == "single"
+                     and r["terms"]["bottleneck"] == "collective"]
+        lines.append(
+            "- collective-bound cells (single-pod): "
+            + (", ".join(f"{r['arch']}×{r['shape']}" for r in collbound)
+               or "none"))
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Summary\n")
+    print(summary(results))
+    for mesh in ("single", "multi"):
+        n_dev = 256 if mesh == "single" else 512
+        print(f"\n## Mesh: {mesh} ({n_dev} chips)\n")
+        print(render(results, mesh))
+
+
+if __name__ == "__main__":
+    main()

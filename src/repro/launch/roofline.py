@@ -1,0 +1,160 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds), per the assignment:
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes / HBM_bw
+    collective = wire_bytes / link_bw
+cost_analysis() reports the per-partition (per-device) SPMD module, so the
+terms are per-chip step latencies already — no further division by chips.
+
+Collective wire bytes are parsed from the post-partitioning HLO text:
+ring-algorithm wire costs per op (n = participating devices):
+    all-reduce      2 (n-1)/n × bytes
+    all-gather      (n-1)/n × out_bytes
+    reduce-scatter  (n-1)/n × in_bytes  (≈ out_bytes × (n-1))
+    all-to-all      (n-1)/n × bytes
+    collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ITOTILED = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOTILED.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    first = m.group(1).split("}")[0].strip("{} ")
+    ids = [t for t in first.split(",") if t.strip() != ""]
+    return max(len(ids), 1)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind totals: op count, payload bytes, ring wire bytes."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):  # avoid double counting async pairs
+            continue
+        payload = _shape_bytes(type_str)
+        n = _group_size(ls)
+        if kind == "all-reduce":
+            wire = 2 * (n - 1) / max(n, 1) * payload
+        elif kind == "all-gather":
+            wire = (n - 1) / max(n, 1) * payload  # payload = gathered output
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * payload  # payload = scattered output
+        elif kind == "all-to-all":
+            wire = (n - 1) / max(n, 1) * payload
+        else:  # collective-permute
+            wire = payload
+        d = out.setdefault(kind, {"count": 0, "payload_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["payload_bytes"] += payload
+        d["wire_bytes"] += wire
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    wire_bytes: float  # per-device collective bytes on the wire
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # 6·N·D (train) or 2·N·D (inference), GLOBAL
+    useful_flop_ratio: float  # model_flops_per_device / hlo_flops
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive_terms(
+    flops: float,
+    hbm_bytes: float,
+    collectives: Dict[str, Dict[str, float]],
+    model_flops_global: float,
+    n_devices: int,
+) -> RooflineTerms:
+    wire = sum(d["wire_bytes"] for d in collectives.values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    per_dev_model = model_flops_global / max(n_devices, 1)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        wire_bytes=wire,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_flop_ratio=per_dev_model / max(flops, 1.0),
+    )
+
+
+def model_flops_global(cfg, shape, n_params_active: int) -> float:
+    """6·N·D for training, 2·N·D for prefill, 2·N·B for one decode step."""
+    if shape.kind == "train":
+        return 6.0 * n_params_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_params_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_params_active * shape.global_batch  # decode: one token

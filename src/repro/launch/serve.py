@@ -1,0 +1,61 @@
+"""Serving launcher: batched generation with a persistent decode state.
+
+CPU smoke:
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch xlstm-125m --reduced --batch 4 --prompt-len 8 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.serve.decode import greedy_generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+
+    key = jax.random.key(args.seed)
+    params = model.init(key, jnp.float32)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    max_seq = args.prompt_len + args.new_tokens
+
+    t0 = time.time()
+    with mesh:
+        out = greedy_generate(
+            model, params, prompts, args.new_tokens, max_seq,
+            temperature=args.temperature, key=key,
+        )
+    dt = time.time() - t0
+    toks = args.batch * args.new_tokens
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print(np.asarray(out)[: min(2, args.batch)])
+    return out
+
+
+if __name__ == "__main__":
+    main()

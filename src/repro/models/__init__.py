@@ -1,0 +1,4 @@
+"""Model zoo for the assigned architectures (see repro.configs)."""
+from repro.models.registry import Model, build_model
+
+__all__ = ["Model", "build_model"]

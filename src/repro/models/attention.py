@@ -1,0 +1,240 @@
+"""GQA attention: full/sliding-window/cross, chunked online-softmax, decode.
+
+Memory posture: for long sequences the (S, S) score matrix never
+materializes — we lax.scan over KV chunks carrying the online-softmax
+(running max m, denominator l, accumulator acc) in f32. That keeps peak
+activation memory at O(S · chunk) per device, which is what lets the
+32k-prefill cells compile inside a v5e's HBM. (A Splash/Flash Pallas kernel
+is the natural next step; see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import apply_rope, softcap
+
+NEG_INF = -1e30
+_CHUNK = 1024  # KV chunk for the online-softmax path
+_DIRECT_MAX_SEQ = 2048  # below this, use the direct path
+
+
+def attn_specs(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("fsdp", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+        s["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+    return s
+
+
+def _rms_head(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _scale(cfg: ModelConfig) -> float:
+    if cfg.attn_scale_override is not None:
+        return cfg.attn_scale_override
+    return cfg.resolved_head_dim ** -0.5
+
+
+def project_qkv(p, x, positions, cfg: ModelConfig, rope: bool = True):
+    """x (B, S, d) -> q (B, S, H, hd), k/v (B, S, KV, hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"])
+        k = _rms_head(k, p["k_norm"])
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(Sq, Sk) additive bias from position predicates."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _direct_attention(q, k, v, q_pos, k_pos, cfg, causal, window):
+    """Materialized-scores path for short sequences (and the oracle in tests)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = (q * jnp.asarray(_scale(cfg), q.dtype)).reshape(B, Sq, KV, g, hd)
+    # bf16 operands with f32 MXU accumulation — the KV tensors are never
+    # up-converted (halves the dominant HBM stream of decode/prefill)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, cfg, causal, window):
+    """Online-softmax over KV chunks; no (Sq, Sk) materialization."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    chunk = min(_CHUNK, Sk)
+    n_chunks = Sk // chunk
+    rem = Sk - n_chunks * chunk
+    qg = (q * jnp.asarray(_scale(cfg), q.dtype)).reshape(B, Sq, KV, g, hd)
+
+    def attend_block(carry, kc, vc, kp):
+        m, l, acc = carry
+        s = jnp.einsum("bqhgk,bshk->bhgqs", qg, kc,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, cfg.attn_softcap)
+        s = s + _mask_bias(q_pos, kp, causal, window)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: fully-masked rows keep m = NEG_INF; exp(s - NEG_INF) ok via where
+        alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqs,bshk->bhgqk", pexp.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new)
+
+    m0 = jnp.full((B, KV, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, g, Sq, hd), jnp.float32)
+
+    if n_chunks > 0:
+        kc = k[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, KV, hd)
+        vc = v[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, KV, hd)
+        kpc = k_pos[: n_chunks * chunk].reshape(n_chunks, chunk)
+
+        def body(carry, inp):
+            kci, vci, kpi = inp
+            return attend_block(carry, kci, vci, kpi), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body,
+            (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpc),
+        )
+    else:
+        m, l, acc = m0, l0, a0
+    if rem:
+        m, l, acc = attend_block((m, l, acc), k[:, -rem:], v[:, -rem:], k_pos[-rem:])
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (B, KV, g, Sq, hd) -> (B, Sq, H, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    p,
+    x,
+    positions,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_states: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+):
+    """Self- or cross-attention over full sequences (train / prefill).
+
+    kv_states: (k, v) from an encoder for cross-attention (q from x only).
+    positions: (S,) shared across batch.
+    """
+    q, k, v = project_qkv(p, x, positions, cfg)
+    if kv_states is not None:
+        k, v = kv_states
+        k_pos = kv_positions
+    else:
+        k_pos = positions
+    Sk = k.shape[1]
+    fn = _direct_attention if Sk <= _DIRECT_MAX_SEQ else _chunked_attention
+    out = fn(q, k, v, positions, k_pos, cfg, causal, window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    """Encoder K/V for cross-attention (computed once, cached for decode)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a cache)
+# ---------------------------------------------------------------------------
+def decode_attention(
+    p,
+    x,  # (B, 1, d)
+    cache_k,  # (B, S_max, KV, hd)
+    cache_v,
+    pos,  # scalar int32 — write/read position
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    cross: bool = False,
+    cache_len: Optional[int] = None,
+):
+    """Returns (out (B, 1, d), new_cache_k, new_cache_v).
+
+    cross=True: cache holds precomputed encoder K/V; nothing is written.
+    """
+    positions = jnp.full((1,), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"])
+    if cfg.use_rope and not cross:
+        q = apply_rope(q, positions, cfg)
+
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if cfg.qk_norm:
+            k_new = _rms_head(k_new, p["k_norm"])
+        if cfg.use_rope:
+            k_new = apply_rope(k_new, positions, cfg)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+
+    B, S_max, KV, hd = cache_k.shape
+    H = q.shape[2]
+    g = H // KV
+    qg = (q * jnp.asarray(_scale(cfg), q.dtype)).reshape(B, 1, KV, g, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, cache_k.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, cfg.attn_softcap)
+
+    k_idx = jnp.arange(S_max)
+    limit = cache_len if cache_len is not None else (pos + 1 if not cross else S_max)
+    valid = k_idx < limit
+    if window > 0 and not cross:
+        valid &= k_idx > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v

@@ -1,0 +1,82 @@
+"""Parameter-spec system: one declaration drives init, sharding and dry-run.
+
+Each module declares its parameters as a nested dict of `ParamSpec(shape,
+logical_axes, init)`. From that single source we derive:
+  * `init_params`     — materialized arrays (smoke tests, real training),
+  * `abstract_params` — ShapeDtypeStructs (the dry-run never allocates),
+  * `axes_tree`       — logical axes resolved to NamedShardings per mesh.
+Stacked (scan-over-layers) blocks wrap their specs with `stack_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(n: int, tree):
+    """Prepend a ('layers', n) dim to every spec (stacked scan weights)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def _init_one(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(specs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_one(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if s.init == "normal" else jnp.float32
+        ),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def param_shardings(specs, mesh, rules=None):
+    return jax.tree.map(
+        lambda s: named_sharding(mesh, s.axes, s.shape, rules),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))

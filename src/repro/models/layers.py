@@ -1,0 +1,134 @@
+"""Shared layers: norms, MLPs, embeddings, RoPE, softcaps."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+
+# -- norms -------------------------------------------------------------------
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones")}
+    return {
+        "scale": ParamSpec((d,), ("embed",), "ones"),
+        "bias": ParamSpec((d,), ("embed",), "zeros"),
+    }
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(
+            jnp.float32
+        ) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -- MLP -----------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("fsdp", "mlp")),
+            "w_up": ParamSpec((d, f), ("fsdp", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "fsdp")),
+        }
+    return {
+        "w_in": ParamSpec((d, f), ("fsdp", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "fsdp")),
+    }
+
+
+def apply_mlp(p, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype), approximate=True)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# -- embeddings -------------------------------------------------------------------
+def embed_specs(cfg: ModelConfig):
+    s = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# -- positions -------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig) -> jnp.ndarray:
+    """Inverse frequencies for the RoPE'd fraction of head_dim."""
+    hd = cfg.resolved_head_dim
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig):
+    """x: (..., S, H, hd); positions: (..., S). Interleaved-pair convention;
+    with rope_fraction < 1 (chatglm 2D RoPE) only the leading slice rotates."""
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = rope_freqs(cfg)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal position embeddings."""
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def sinusoidal_position_at(pos, d_model: int) -> jnp.ndarray:
+    """(d_model,) absolute sinusoidal embedding at a traced position."""
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d_model)
+    out = jnp.zeros((d_model,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang))
+    out = out.at[1::2].set(jnp.cos(ang))
+    return out
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x

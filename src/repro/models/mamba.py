@@ -1,0 +1,219 @@
+"""Mamba2 (SSD) block + the shared chunked linear-recurrence engine.
+
+The state-space recurrence
+    h_t = a_t · h_{t-1} + i_t · (v_t ⊗ k_t),      y_t = q_t · h_t
+covers both Mamba2 (v=x, k=B, q=C, i=Δt, a=exp(Δt·A)) and the mLSTM of
+xLSTM (v/k/q as in attention, i/a from input/forget gates) — so one
+chunked SSD implementation serves both architectures (models/xlstm_block.py
+imports `chunked_linear_recurrence`).
+
+Chunked algorithm (Mamba2 paper §6): split L into chunks of Q, compute the
+causal intra-chunk (Q×Q) matrix (attention-like, runs on the MXU), carry the
+(H, P, N) state across chunks with a lax.scan. Memory O(L·Q), compute
+O(L·Q·(P+N)) — sub-quadratic in L, which is what makes the long_500k cells
+feasible for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import apply_norm
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked engine
+# ---------------------------------------------------------------------------
+def chunked_linear_recurrence(
+    v: jnp.ndarray,  # (B, L, H, P) "values" (mamba: x)
+    k: jnp.ndarray,  # (B, L, H, N) "keys"   (mamba: B, broadcast over heads)
+    q: jnp.ndarray,  # (B, L, H, N) "queries" (mamba: C)
+    log_a: jnp.ndarray,  # (B, L, H) per-step log decay (<= 0)
+    gate_i: jnp.ndarray,  # (B, L, H) input gate (mamba: Δt)
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # (B, H, P, N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B, L, H, P), h_final (B, H, P, N))."""
+    B, L, H, P = v.shape
+    N = k.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    n_chunks = L // Q
+
+    def to_chunks(x):
+        return x.reshape(B, n_chunks, Q, *x.shape[2:]).swapaxes(0, 1)
+
+    vc, kc, qc = to_chunks(v), to_chunks(k), to_chunks(q)
+    lac, gic = to_chunks(log_a), to_chunks(gate_i)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]  # (Qt, Qs): s <= t
+
+    def chunk_step(h, inp):
+        vq, kq, qq, la, gi = inp  # (B,Q,H,P), (B,Q,H,N), ..., (B,Q,H)
+        laf = la.astype(jnp.float32)
+        cum = jnp.cumsum(laf, axis=1)  # (B,Q,H) log decay up to & incl. t
+        # intra-chunk: M[t,s] = (q_t·k_s) · exp(cum_t - cum_s) · i_s, s <= t
+        qk = jnp.einsum("bthn,bshn->bhts", qq.astype(jnp.float32),
+                        kq.astype(jnp.float32))
+        dec = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qt,Qs,H)
+        dec = dec.transpose(0, 3, 1, 2)  # (B,H,Qt,Qs)
+        m = qk * jnp.exp(jnp.where(causal[None, None], dec, -jnp.inf)) * (
+            gi.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        )
+        y_intra = jnp.einsum("bhts,bshp->bthp", m, vq.astype(jnp.float32))
+        # inter-chunk: y_t += q_t · (exp(cum_t) · h_in)
+        y_inter = jnp.einsum(
+            "bthn,bhpn->bthp", qq.astype(jnp.float32), h
+        ) * jnp.exp(cum)[..., None]
+        # state to carry: h' = exp(cum_Q) h + Σ_s exp(cum_Q - cum_s) i_s v_s⊗k_s
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        contrib = jnp.einsum(
+            "bshp,bshn,bsh->bhpn",
+            vq.astype(jnp.float32),
+            kq.astype(jnp.float32),
+            (gi.astype(jnp.float32) * tail),
+        )
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
+        return h_new, (y_intra + y_inter).astype(v.dtype)
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (vc, kc, qc, lac, gic))
+    y = ys.swapaxes(0, 1).reshape(B, L, H, P)
+    return y, h_fin
+
+
+def linear_recurrence_step(
+    h: jnp.ndarray,  # (B, H, P, N)
+    v: jnp.ndarray,  # (B, H, P)
+    k: jnp.ndarray,  # (B, H, N)
+    q: jnp.ndarray,  # (B, H, N)
+    log_a: jnp.ndarray,  # (B, H)
+    gate_i: jnp.ndarray,  # (B, H)
+):
+    """Single decode step of the same recurrence. Returns (y (B,H,P), h')."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    h_new = a * h + (gate_i.astype(jnp.float32))[..., None, None] * (
+        v.astype(jnp.float32)[..., None] * k.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", q.astype(jnp.float32), h_new)
+    return y.astype(v.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba_dims(cfg: ModelConfig):
+    c = cfg.ssm
+    d_in = c.expand * cfg.d_model
+    n_heads = d_in // c.head_dim
+    return d_in, n_heads
+
+
+def mamba_specs(cfg: ModelConfig):
+    c = cfg.ssm
+    d = cfg.d_model
+    d_in, H = mamba_dims(cfg)
+    gn = c.n_groups * c.state_dim
+    conv_ch = d_in + 2 * gn
+    return {
+        "w_z": ParamSpec((d, d_in), ("fsdp", "ssm_inner")),
+        "w_x": ParamSpec((d, d_in), ("fsdp", "ssm_inner")),
+        "w_b": ParamSpec((d, gn), ("embed", None)),
+        "w_c": ParamSpec((d, gn), ("embed", None)),
+        "w_dt": ParamSpec((d, H), ("embed", None)),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "conv_w": ParamSpec((c.conv_width, conv_ch), ("conv_width", None)),
+        "a_log": ParamSpec((H,), (None,), "zeros"),
+        "d_skip": ParamSpec((H,), (None,), "ones"),
+        "norm": {"scale": ParamSpec((d_in,), ("ssm_inner",), "ones")},
+        "w_out": ParamSpec((d_in, d), ("ssm_inner", "fsdp")),
+    }
+
+
+def _depthwise_conv(x, w, state=None):
+    """Causal depthwise conv over seq. x (B, L, C), w (W, C).
+    With `state` (B, W-1, C) supplied (decode), prepends it instead of zeros.
+    Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1) :] if W > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # (B, W-1, conv_ch)
+    ssm: jnp.ndarray  # (B, H, P, N) f32
+
+
+def mamba_forward(p, x, cfg: ModelConfig, cache: MambaCache | None = None,
+                  decode: bool = False):
+    """x (B, L, d) -> (y (B, L, d), new_cache)."""
+    c = cfg.ssm
+    d_in, H = mamba_dims(cfg)
+    gn = c.n_groups * c.state_dim
+    B, L, _ = x.shape
+
+    z = x @ p["w_z"].astype(x.dtype)
+    xb = x @ p["w_x"].astype(x.dtype)
+    bmat = x @ p["w_b"].astype(x.dtype)
+    cmat = x @ p["w_c"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B, L, H)
+
+    conv_in = jnp.concatenate([xb, bmat, cmat], axis=-1)
+    conv_out, conv_state = _depthwise_conv(
+        conv_in, p["conv_w"].astype(x.dtype), cache.conv if cache else None
+    )
+    xb = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in : d_in + gn]
+    cmat = conv_out[..., d_in + gn :]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    log_a = dt * a[None, None, :]  # (B, L, H)
+
+    v = xb.reshape(B, L, H, c.head_dim)
+    # groups broadcast over heads (n_groups=1: same B/C for all heads)
+    k = jnp.repeat(
+        bmat.reshape(B, L, c.n_groups, c.state_dim), H // c.n_groups, axis=2
+    )
+    q = jnp.repeat(
+        cmat.reshape(B, L, c.n_groups, c.state_dim), H // c.n_groups, axis=2
+    )
+
+    if decode:
+        assert L == 1
+        y, h_new = linear_recurrence_step(
+            cache.ssm, v[:, 0], k[:, 0], q[:, 0], log_a[:, 0], dt[:, 0]
+        )
+        y = y[:, None]
+    else:
+        h0 = cache.ssm if cache else None
+        y, h_new = chunked_linear_recurrence(v, k, q, log_a, dt, c.chunk_size, h0)
+
+    y = y + v * p["d_skip"].astype(jnp.float32).reshape(1, 1, H, 1).astype(v.dtype)
+    y = y.reshape(B, L, d_in)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, MambaCache(conv=conv_state, ssm=h_new)
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, dtype):
+    c = cfg.ssm
+    d_in, H = mamba_dims(cfg)
+    conv_ch = d_in + 2 * c.n_groups * c.state_dim
+    return MambaCache(
+        conv=jax.ShapeDtypeStruct((batch, c.conv_width - 1, conv_ch), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, H, c.head_dim, c.state_dim), jnp.float32),
+    )

@@ -1,0 +1,491 @@
+"""Model registry: ModelConfig -> Model (specs, forward, decode, input_specs).
+
+`Model` is the single object the trainer, server, dry-run and smoke tests
+consume. Nothing here allocates parameters — `init` does on request,
+`abstract_params` never does (dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba as mamba_mod
+from repro.models import transformer as T
+from repro.models import xlstm_block as xlstm_mod
+from repro.models.common import (
+    ParamSpec,
+    abstract_params,
+    count_params,
+    init_params,
+    param_shardings,
+    stack_specs,
+)
+from repro.sharding import constrain, named_sharding
+
+
+def _scan_stack(fn, params_stacked, x, remat: bool, extra_carry=None):
+    """Scan `fn(p_layer, x, carry) -> (x, carry)` over stacked weights."""
+    body_fn = fn
+    if remat:
+        body_fn = jax.checkpoint(fn, prevent_cse=False)
+
+    def body(carry, p_layer):
+        x, extra = carry
+        x, extra = body_fn(p_layer, x, extra)
+        return (x, extra), None
+
+    (x, extra), _ = jax.lax.scan(body, (x, extra_carry), params_stacked)
+    return x, extra
+
+
+def _scan_decode(fn, params_stacked, cache_stacked, x):
+    """Decode through stacked layers with IN-PLACE cache updates.
+
+    A lax.scan with ys=new_caches allocates a second full cache (xs + ys
+    both live) — at 32k context that doubles serving HBM. A fori_loop whose
+    carry holds the whole stacked cache and writes one layer's slice per
+    iteration lets XLA alias the while-loop carry buffer: one cache, updated
+    in place (the donated DecodeState input aliases the output)."""
+    n_layers = jax.tree.leaves(params_stacked)[0].shape[0]
+
+    def body(i, carry):
+        x, caches = carry
+        p_layer = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params_stacked)
+        cache_layer = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            caches)
+        x, new_cache = fn(p_layer, x, cache_layer)
+        caches = jax.tree.map(
+            lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                buf, new.astype(buf.dtype), i, 0),
+            caches, new_cache)
+        return (x, caches)
+
+    x, new_caches = jax.lax.fori_loop(
+        0, n_layers, body, (x, cache_stacked))
+    return x, new_caches
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs = self._build_specs()
+
+    def rules_context(self):
+        """Context manager applying this arch's sharding overrides."""
+        from repro.sharding import rules_override
+        return rules_override(**dict(
+            (k, tuple(v)) for k, v in self.cfg.sharding_overrides))
+
+    # -- parameters ---------------------------------------------------------
+    def _build_specs(self):
+        cfg = self.cfg
+        specs: Dict[str, Any] = {"embed": L.embed_specs(cfg)}
+        if cfg.family in ("dense", "vlm"):
+            if cfg.local_global_period:
+                pairs = cfg.num_layers // cfg.local_global_period
+                specs["blocks"] = stack_specs(
+                    pairs,
+                    {
+                        "local": T.attn_block_specs(cfg),
+                        "global": T.attn_block_specs(cfg),
+                    },
+                )
+            else:
+                specs["blocks"] = stack_specs(cfg.num_layers, T.attn_block_specs(cfg))
+        elif cfg.family == "moe":
+            specs["blocks"] = stack_specs(cfg.num_layers, T.moe_block_specs(cfg))
+        elif cfg.family == "hybrid":
+            seg_sizes = self._hybrid_segments()
+            specs["mamba_segs"] = [
+                stack_specs(n, T.mamba_block_specs(cfg)) for n in seg_sizes
+            ]
+            specs["shared_attn"] = T.attn_block_specs(cfg)
+        elif cfg.family == "ssm":  # xlstm
+            specs["xl_segs"] = []
+            for kind, n in self._xlstm_segments():
+                if kind == "slstm":
+                    specs["xl_segs"].append(
+                        {"kind_slstm": xlstm_mod.slstm_specs(cfg)}
+                    )
+                else:
+                    specs["xl_segs"].append(
+                        {"kind_mlstm": stack_specs(n, xlstm_mod.mlstm_specs(cfg))}
+                    )
+        elif cfg.family == "audio":  # whisper enc-dec
+            specs["enc_blocks"] = stack_specs(
+                cfg.num_encoder_layers, T.attn_block_specs(cfg)
+            )
+            specs["enc_norm"] = L.norm_specs(cfg)
+            specs["dec_blocks"] = stack_specs(
+                cfg.num_layers, T.attn_block_specs(cfg, cross=True)
+            )
+        else:
+            raise ValueError(cfg.family)
+        specs["final_norm"] = L.norm_specs(cfg)
+        return specs
+
+    def _hybrid_segments(self):
+        cfg = self.cfg
+        k = cfg.hybrid_attn_period
+        full, rem = divmod(cfg.num_layers, k)
+        return [k] * full + ([rem] if rem else [])
+
+    def _xlstm_segments(self):
+        cfg = self.cfg
+        k = cfg.xlstm_slstm_every
+        segs = []
+        i = 0
+        while i < cfg.num_layers:
+            if k and i % k == 0:
+                segs.append(("slstm", 1))
+                i += 1
+                run = min(k - 1, cfg.num_layers - i)
+            else:
+                run = cfg.num_layers - i
+            if run > 0:
+                segs.append(("mlstm", run))
+                i += run
+        return segs
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.specs, key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract_params(self.specs, dtype)
+
+    def param_shardings(self, mesh, rules=None):
+        return param_shardings(self.specs, mesh, rules)
+
+    def n_params(self) -> int:
+        return count_params(self.specs)
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed_in(self, params, batch, dtype):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"]).astype(dtype)
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        if cfg.tie_embeddings:  # gemma-style sqrt(d) embedding scale
+            x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+        if not cfg.use_rope and cfg.family != "audio":
+            S = x.shape[1]
+            x = x + L.sinusoidal_positions(S, cfg.d_model).astype(dtype)[None]
+        return x
+
+    # -- forward (train / prefill) ------------------------------------------
+    def forward(self, params, batch, mesh=None, remat=False,
+                last_only: bool = False):
+        """Returns (logits, aux_loss). last_only=True: unembed only the
+        final position (serving prefill) — logits (B, 1, V)."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = self._embed_in(params, batch, dtype)
+        B, S, _ = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)
+        if mesh is not None:
+            x = constrain(x, mesh, ("batch", "seq", "embed"))
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "vlm"):
+            if cfg.local_global_period:
+                def pair_fn(p, x, carry):
+                    x = T.attn_block_forward(
+                        p["local"], x, positions, cfg,
+                        window=cfg.sliding_window, mesh=mesh)
+                    x = T.attn_block_forward(
+                        p["global"], x, positions, cfg, mesh=mesh)
+                    return x, carry
+                x, _ = _scan_stack(pair_fn, params["blocks"], x, remat)
+            else:
+                def fn(p, x, carry):
+                    return T.attn_block_forward(
+                        p, x, positions, cfg, window=cfg.sliding_window,
+                        mesh=mesh), carry
+                x, _ = _scan_stack(fn, params["blocks"], x, remat)
+
+        elif cfg.family == "moe":
+            def fn(p, x, aux):
+                x, a = T.moe_block_forward(p, x, positions, cfg, mesh=mesh)
+                return x, aux + a
+            x, aux = _scan_stack(fn, params["blocks"], x, remat, aux)
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+            for i, seg in enumerate(params["mamba_segs"]):
+                def fn(p, x, carry):
+                    x, _ = T.mamba_block_forward(p, x, cfg, mesh=mesh)
+                    return x, carry
+                x, _ = _scan_stack(fn, seg, x, remat)
+                if i < len(self._hybrid_segments()) and self.cfg.hybrid_attn_period:
+                    x = T.attn_block_forward(
+                        shared, x, positions, cfg, mesh=mesh)
+
+        elif cfg.family == "ssm":
+            for seg, spec in zip(params["xl_segs"], self._xlstm_segments()):
+                kind, n = spec
+                if kind == "slstm":
+                    o, _ = xlstm_mod.slstm_forward(seg["kind_slstm"], x, cfg)
+                    x = x + o
+                else:
+                    def fn(p, x, carry):
+                        o, _ = xlstm_mod.mlstm_forward(p, x, cfg)
+                        return x + o, carry
+                    x, _ = _scan_stack(fn, seg["kind_mlstm"], x, remat)
+
+        elif cfg.family == "audio":
+            enc, dec_tokens = batch["frames"].astype(dtype), batch["tokens"]
+            S_enc = enc.shape[1]
+            enc = enc + L.sinusoidal_positions(S_enc, cfg.d_model).astype(dtype)[None]
+            enc_pos = jnp.arange(S_enc, dtype=jnp.int32)
+            def efn(p, x, carry):
+                return T.attn_block_forward(
+                    p, x, enc_pos, cfg, causal=False, mesh=mesh), carry
+            enc, _ = _scan_stack(efn, params["enc_blocks"], enc, remat)
+            enc = L.apply_norm(params["enc_norm"], enc, cfg.norm_kind)
+
+            x = L.embed_tokens(params["embed"], dec_tokens).astype(dtype)
+            S_dec = x.shape[1]
+            x = x + L.sinusoidal_positions(S_dec, cfg.d_model).astype(dtype)[None]
+            positions = jnp.arange(S_dec, dtype=jnp.int32)
+            def dfn(p, x, carry):
+                return T.attn_block_forward(
+                    p, x, positions, cfg, enc_out=enc, enc_positions=enc_pos,
+                    mesh=mesh), carry
+            x, _ = _scan_stack(dfn, params["dec_blocks"], x, remat)
+
+        if last_only:
+            x = x[:, -1:]
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        logits = L.unembed(params["embed"], x, cfg)
+        return logits, aux
+
+    # -- caches ----------------------------------------------------------------
+    def cache_specs(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            if cfg.local_global_period:
+                pairs = cfg.num_layers // cfg.local_global_period
+                return {
+                    "local": T.kv_cache_specs(
+                        cfg, pairs, batch, max_seq, dtype, cfg.sliding_window
+                    ),
+                    "global": T.kv_cache_specs(cfg, pairs, batch, max_seq, dtype),
+                }
+            return T.kv_cache_specs(cfg, cfg.num_layers, batch, max_seq, dtype)
+        if cfg.family == "hybrid":
+            segs = self._hybrid_segments()
+            return {
+                "mamba": [
+                    jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                        mamba_mod.mamba_cache_specs(cfg, batch, dtype),
+                    )
+                    for n in segs
+                ],
+                "shared_attn": T.kv_cache_specs(
+                    cfg, len(segs), batch, max_seq, dtype
+                ),
+            }
+        if cfg.family == "ssm":
+            out = []
+            for kind, n in self._xlstm_segments():
+                if kind == "slstm":
+                    out.append(xlstm_mod.slstm_cache_specs(cfg, batch, dtype))
+                else:
+                    out.append(
+                        jax.tree.map(
+                            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                            xlstm_mod.mlstm_cache_specs(cfg, batch, dtype),
+                        )
+                    )
+            return out
+        if cfg.family == "audio":
+            return {
+                "self": T.kv_cache_specs(cfg, cfg.num_layers, batch, max_seq, dtype),
+                "cross": T.kv_cache_specs(cfg, cfg.num_layers, batch, max_seq, dtype),
+            }
+        raise ValueError(cfg.family)
+
+    def cache_shardings(self, mesh, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        axes = ("layers", "cache_batch", "cache_seq", "cache_heads", "head_dim")
+        def shard_one(s):
+            if len(s.shape) == len(axes):
+                return named_sharding(mesh, axes, s.shape)
+            # ssm caches: (layers, B, ...) -> shard batch dim
+            ax = ("layers", "cache_batch") + (None,) * (len(s.shape) - 2)
+            if len(s.shape) < 2:
+                ax = (None,) * len(s.shape)
+            return named_sharding(mesh, ax, s.shape)
+        return jax.tree.map(
+            shard_one,
+            self.cache_specs(batch, max_seq, dtype),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    # -- decode ----------------------------------------------------------------
+    def decode_step(self, params, cache, tokens, pos, mesh=None):
+        """tokens (B, 1); pos scalar int32. Returns (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = L.embed_tokens(params["embed"], tokens).astype(dtype)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+        if not cfg.use_rope:
+            x = x + L.sinusoidal_position_at(
+                jnp.asarray(pos), cfg.d_model
+            ).astype(dtype)[None, None]
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            if cfg.local_global_period:
+                def pair_fn(x, xs):
+                    p, (cl, cg) = xs
+                    x, ncl = T.attn_block_decode(
+                        p["local"], x, cl, pos, cfg, window=cfg.sliding_window)
+                    x, ncg = T.attn_block_decode(p["global"], x, cg, pos, cfg)
+                    return x, (ncl, ncg)
+                kcache = (cache["local"], cache["global"])
+                x, (nl, ng) = jax.lax.scan(
+                    lambda x, xs: pair_fn(x, xs), x,
+                    (params["blocks"], kcache))
+                new_cache = {"local": nl, "global": ng}
+            elif cfg.family == "moe":
+                def fn(p, x, c):
+                    return T.moe_block_decode(p, x, c, pos, cfg, mesh)
+                x, new_cache = _scan_decode(fn, params["blocks"], cache, x)
+            else:
+                def fn(p, x, c):
+                    return T.attn_block_decode(p, x, c, pos, cfg)
+                x, new_cache = _scan_decode(fn, params["blocks"], cache, x)
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+            new_mamba, new_attn = [], []
+            n_segs = len(params["mamba_segs"])
+            for i, seg in enumerate(params["mamba_segs"]):
+                def fn(x, xs):
+                    p, c = xs
+                    x, nc = T.mamba_block_forward(p, x, cfg, c, decode=True)
+                    return x, nc
+                x, nc = jax.lax.scan(fn, x, (seg, cache["mamba"][i]))
+                new_mamba.append(nc)
+                sc = T.KVCache(
+                    k=cache["shared_attn"].k[i], v=cache["shared_attn"].v[i]
+                )
+                x, nsc = T.attn_block_decode(shared, x, sc, pos, cfg)
+                new_attn.append(nsc)
+            new_cache = {
+                "mamba": new_mamba,
+                "shared_attn": T.KVCache(
+                    k=jnp.stack([c.k for c in new_attn]),
+                    v=jnp.stack([c.v for c in new_attn]),
+                ),
+            }
+
+        elif cfg.family == "ssm":
+            new_segs = []
+            for seg, spec, c in zip(params["xl_segs"], self._xlstm_segments(), cache):
+                kind, n = spec
+                if kind == "slstm":
+                    o, nc = xlstm_mod.slstm_forward(
+                        seg["kind_slstm"], x, cfg, c, decode=True)
+                    x = x + o
+                else:
+                    def fn(x, xs):
+                        p, cc = xs
+                        o, nc = xlstm_mod.mlstm_forward(p, x, cfg, cc, decode=True)
+                        return x + o, nc
+                    x, nc = jax.lax.scan(fn, x, (seg["kind_mlstm"], c))
+                new_segs.append(nc)
+            new_cache = new_segs
+
+        elif cfg.family == "audio":
+            def fn(x, xs):
+                p, (cs, cx) = xs
+                x, ncs = T.attn_block_decode(p, x, cs, pos, cfg, cross_cache=cx)
+                return x, ncs
+            x, new_self = jax.lax.scan(
+                fn, x, (params["dec_blocks"], (cache["self"], cache["cross"])))
+            new_cache = {"self": new_self, "cross": cache["cross"]}
+
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        logits = L.unembed(params["embed"], x, cfg)
+        return logits, new_cache
+
+    # -- encoder-decoder serving ----------------------------------------------
+    def encode(self, params, batch, mesh=None):
+        """Whisper: run the encoder and precompute per-decoder-layer cross
+        K/V — the immutable half of the serving cache. Returns a KVCache
+        stacked over decoder layers: (L, B, S_enc, KV, hd)."""
+        cfg = self.cfg
+        assert cfg.family == "audio", "encode() is for enc-dec models"
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        enc = batch["frames"].astype(dtype)
+        S_enc = enc.shape[1]
+        enc = enc + L.sinusoidal_positions(S_enc, cfg.d_model).astype(dtype)[None]
+        enc_pos = jnp.arange(S_enc, dtype=jnp.int32)
+
+        def efn(p, x, carry):
+            return T.attn_block_forward(
+                p, x, enc_pos, cfg, causal=False, mesh=mesh), carry
+
+        enc, _ = _scan_stack(efn, params["enc_blocks"], enc, remat=False)
+        enc = L.apply_norm(params["enc_norm"], enc, cfg.norm_kind)
+
+        xattn = params["dec_blocks"]["xattn"]  # stacked (L, ...)
+        k = jnp.einsum("bsd,ldhk->lbshk", enc, xattn["wk"].astype(enc.dtype))
+        v = jnp.einsum("bsd,ldhk->lbshk", enc, xattn["wv"].astype(enc.dtype))
+        return T.KVCache(k=k, v=v)
+
+    # -- input specs (dry-run stand-ins; no allocation) -----------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dtype = jnp.bfloat16
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        if cfg.family == "vlm":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.num_patches, cfg.d_model), dtype
+                ),
+            }
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def input_shardings(self, mesh, shape: ShapeConfig):
+        def shard_one(s):
+            if len(s.shape) == 3:
+                return named_sharding(mesh, ("batch", "seq", "embed"), s.shape)
+            return named_sharding(mesh, ("batch",) + (None,) * (len(s.shape) - 1),
+                                  s.shape)
+        return jax.tree.map(
+            shard_one, self.input_specs(shape),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return _cached_model(cfg)

@@ -1,0 +1,231 @@
+"""Model assembly: blocks → pattern-grouped scan stacks → full models.
+
+Every homogeneous run of layers is a lax.scan over stacked weights, so HLO
+size is independent of depth (94-layer MoE lowers in seconds). Heterogeneous
+stacks scan over *pattern groups*:
+  gemma2   — scan over 13 (local, global) pairs;
+  zamba2   — python loop over segments: scan(6 mamba) + shared attn block;
+  xlstm    — [sLSTM, scan(5 mLSTM)] × 2;
+  whisper  — scan(24 enc) then scan(24 dec with cross-attention).
+
+Caches: full-attention layers carry (B, S, KV, hd) K/V; sliding-window
+layers carry ring buffers of length `window`; SSM layers carry (conv, state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm_block as xlstm_mod
+from repro.models.common import ParamSpec, stack_specs
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Block specs
+# ---------------------------------------------------------------------------
+def attn_block_specs(cfg: ModelConfig, with_mlp=True, cross=False, d_ff=None):
+    s = {
+        "ln1": L.norm_specs(cfg),
+        "attn": attn_mod.attn_specs(cfg),
+    }
+    if cross:
+        s["ln_x"] = L.norm_specs(cfg)
+        s["xattn"] = attn_mod.attn_specs(cfg)
+    if with_mlp:
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg, d_ff)
+    if cfg.post_norm:
+        s["post1"] = L.norm_specs(cfg)
+        if with_mlp:
+            s["post2"] = L.norm_specs(cfg)
+    return s
+
+
+def moe_block_specs(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "attn": attn_mod.attn_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+        "moe": moe_mod.moe_specs(cfg),
+    }
+
+
+def mamba_block_specs(cfg: ModelConfig):
+    return {"ln": L.norm_specs(cfg), "mamba": mamba_mod.mamba_specs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence) and decode (single token)
+# ---------------------------------------------------------------------------
+def _post(p, name, x, cfg):
+    return L.apply_norm(p[name], x, cfg.norm_kind) if cfg.post_norm else x
+
+
+def attn_block_forward(p, x, positions, cfg, *, causal=True, window=0,
+                       enc_out=None, enc_positions=None, return_kv=False,
+                       mesh=None):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    q, k, v = attn_mod.project_qkv(p["attn"], h, positions, cfg)
+    Sk = k.shape[1]
+    fn = (attn_mod._direct_attention if Sk <= attn_mod._DIRECT_MAX_SEQ
+          else attn_mod._chunked_attention)
+    o = fn(q, k, v, positions, positions, cfg, causal, window)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(o.dtype))
+    x = x + _post(p, "post1", o, cfg)
+
+    if enc_out is not None:
+        h = L.apply_norm(p["ln_x"], x, cfg.norm_kind)
+        xo = attn_mod.attention(
+            p["xattn"], h, positions, cfg, causal=False,
+            kv_states=attn_mod.cross_kv(p["xattn"], enc_out, cfg),
+            kv_positions=enc_positions,
+        )
+        x = x + xo
+
+    if "mlp" in p:
+        h = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+        o = L.apply_mlp(p["mlp"], h, cfg.mlp_kind)
+        x = x + _post(p, "post2", o, cfg)
+    if mesh is not None:
+        x = constrain(x, mesh, ("batch", "seq", "embed"))
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def moe_block_forward(p, x, positions, cfg, *, window=0, return_kv=False,
+                      mesh=None):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    q, k, v = attn_mod.project_qkv(p["attn"], h, positions, cfg)
+    Sk = k.shape[1]
+    fn = (attn_mod._direct_attention if Sk <= attn_mod._DIRECT_MAX_SEQ
+          else attn_mod._chunked_attention)
+    o = fn(q, k, v, positions, positions, cfg, True, window)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(o.dtype))
+    x = x + o
+    h = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+    o, aux = moe_mod.apply_moe(p["moe"], h, cfg, mesh)
+    x = x + o
+    if mesh is not None:
+        x = constrain(x, mesh, ("batch", "seq", "embed"))
+    if return_kv:
+        return x, aux, (k, v)
+    return x, aux
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_cache, KV, hd) — S_cache = max_seq or window
+    v: jnp.ndarray
+
+
+def attn_block_decode(p, x, cache: KVCache, pos, cfg, *, window=0,
+                      cross_cache: Optional[KVCache] = None):
+    """x (B,1,d); ring-buffer writes for window layers."""
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    S_cache = cache.k.shape[1]
+    if window > 0 and S_cache == window:
+        write_pos = pos % window
+        o, ck, cv = _ring_decode(p["attn"], h, cache, pos, write_pos, cfg, window)
+    else:
+        o, ck, cv = attn_mod.decode_attention(
+            p["attn"], h, cache.k, cache.v, pos, cfg, window=window
+        )
+    x = x + _post(p, "post1", o, cfg)
+    new_cache = KVCache(k=ck, v=cv)
+
+    if cross_cache is not None:
+        h = L.apply_norm(p["ln_x"], x, cfg.norm_kind)
+        xo, _, _ = attn_mod.decode_attention(
+            p["xattn"], h, cross_cache.k, cross_cache.v, pos, cfg, cross=True
+        )
+        x = x + xo
+
+    if "mlp" in p:
+        h = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+        o = L.apply_mlp(p["mlp"], h, cfg.mlp_kind)
+        x = x + _post(p, "post2", o, cfg)
+    return x, new_cache
+
+
+def _ring_decode(pa, h, cache: KVCache, pos, write_pos, cfg, window):
+    """Sliding-window decode against a ring buffer of length `window`."""
+    positions = jnp.full((1,), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", h, pa["wq"].astype(h.dtype))
+    k_new = jnp.einsum("bsd,dhk->bshk", h, pa["wk"].astype(h.dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", h, pa["wv"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = attn_mod._rms_head(q, pa["q_norm"])
+        k_new = attn_mod._rms_head(k_new, pa["k_norm"])
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg)
+        k_new = L.apply_rope(k_new, positions, cfg)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                             write_pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                             write_pos, axis=1)
+
+    B, W, KV, hd = ck.shape
+    H = q.shape[2]
+    g = H // KV
+    qg = (q * jnp.asarray(attn_mod._scale(cfg), q.dtype)).reshape(B, 1, KV, g, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, ck.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    s = L.softcap(s, cfg.attn_softcap)
+    # slot i currently holds absolute position pos - ((pos - i) mod W)
+    slot = jnp.arange(W)
+    abs_pos = pos - jnp.mod(pos - slot, W)
+    valid = abs_pos >= 0
+    s = jnp.where(valid[None, None, None, None, :], s, attn_mod.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H, hd).astype(h.dtype)
+    o = jnp.einsum("bshk,hkd->bsd", o, pa["wo"].astype(h.dtype))
+    return o, ck, cv
+
+
+def moe_block_decode(p, x, cache: KVCache, pos, cfg, mesh=None):
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    o, ck, cv = attn_mod.decode_attention(p["attn"], h, cache.k, cache.v, pos, cfg)
+    x = x + o
+    h = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+    o, _ = moe_mod.apply_moe(p["moe"], h, cfg, mesh)
+    return x + o, KVCache(k=ck, v=cv)
+
+
+def mamba_block_forward(p, x, cfg, cache=None, decode=False, mesh=None):
+    h = L.apply_norm(p["ln"], x, cfg.norm_kind)
+    o, new_cache = mamba_mod.mamba_forward(p["mamba"], h, cfg, cache, decode)
+    x = x + o
+    if mesh is not None and not decode:
+        x = constrain(x, mesh, ("batch", "seq", "embed"))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache spec helpers
+# ---------------------------------------------------------------------------
+def kv_cache_specs(cfg: ModelConfig, n_layers: int, batch: int, seq: int,
+                   dtype, window: int = 0) -> KVCache:
+    s = min(window, seq) if window > 0 else seq
+    shape = (n_layers, batch, s, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, dtype),
+        v=jax.ShapeDtypeStruct(shape, dtype),
+    )
+
+
+def materialize_cache(spec_tree):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

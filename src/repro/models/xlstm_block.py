@@ -1,0 +1,201 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is a gated linear-attention recurrence — it reuses the chunked SSD
+engine from models/mamba.py (v=values, k=keys, q=queries, decay=forget gate,
+input gate=i). The mLSTM normalizer state n_t = Σ decays·i_s·k_s is carried
+by augmenting the value vectors with a constant-1 channel, so one engine
+pass yields both numerator and denominator; output y = ŷ / max(|n·q|, 1).
+
+Gating: we use log-sigmoid forget gates and sigmoid input gates (the
+bounded, stabilizer-free variant) rather than the paper's exp-input gate
+with running-max stabilization — structurally identical recurrence,
+numerically simpler under bf16; noted in DESIGN.md §8.
+
+sLSTM keeps the exponential-gating + running-max stabilizer of the xLSTM
+paper and block-diagonal recurrent weights per head; it is inherently
+sequential (h_{t-1} feeds the gate pre-activations), so it runs as a
+lax.scan over time — the reason only 2 of 12 layers are sLSTM.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import apply_norm
+from repro.models.mamba import (
+    _depthwise_conv,
+    chunked_linear_recurrence,
+    linear_recurrence_step,
+)
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = cfg.num_heads
+    P = d_in // H  # value head dim
+    N = cfg.ssm.state_dim  # qk head dim
+    return d_in, H, P, N
+
+
+def mlstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, H, P, N = mlstm_dims(cfg)
+    return {
+        "w_up": ParamSpec((d, d_in), ("fsdp", "ssm_inner")),
+        "w_gate": ParamSpec((d, d_in), ("fsdp", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm.conv_width, d_in), ("conv_width", None)),
+        "w_q": ParamSpec((d_in, H * N), ("ssm_inner", None)),
+        "w_k": ParamSpec((d_in, H * N), ("ssm_inner", None)),
+        "w_v": ParamSpec((d_in, d_in), ("ssm_inner", None)),
+        "w_i": ParamSpec((d_in, H), ("ssm_inner", None)),
+        "w_f": ParamSpec((d_in, H), ("ssm_inner", None)),
+        "f_bias": ParamSpec((H,), (None,), "ones"),
+        "norm": {"scale": ParamSpec((d_in,), ("ssm_inner",), "ones")},
+        "w_out": ParamSpec((d_in, d), ("ssm_inner", "fsdp")),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    conv: jnp.ndarray  # (B, W-1, d_in)
+    mem: jnp.ndarray  # (B, H, P+1, N) f32 — matrix memory + normalizer row
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, cache: MLSTMCache | None = None,
+                  decode: bool = False):
+    d_in, H, P, N = mlstm_dims(cfg)
+    B, L, _ = x.shape
+
+    up = x @ p["w_up"].astype(x.dtype)
+    z = x @ p["w_gate"].astype(x.dtype)
+    conv_out, conv_state = _depthwise_conv(
+        up, p["conv_w"].astype(x.dtype), cache.conv if cache else None
+    )
+    q = (conv_out @ p["w_q"].astype(x.dtype)).reshape(B, L, H, N)
+    k = (conv_out @ p["w_k"].astype(x.dtype)).reshape(B, L, H, N) * (N ** -0.5)
+    v = (up @ p["w_v"].astype(x.dtype)).reshape(B, L, H, P)
+
+    log_f = jax.nn.log_sigmoid(
+        (up @ p["w_f"].astype(x.dtype)).astype(jnp.float32)
+        + p["f_bias"].astype(jnp.float32)
+    )  # (B, L, H), <= 0
+    gate_i = jax.nn.sigmoid((up @ p["w_i"].astype(x.dtype)).astype(jnp.float32))
+
+    ones = jnp.ones((B, L, H, 1), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)  # (B, L, H, P+1)
+
+    if decode:
+        assert L == 1
+        y_aug, mem = linear_recurrence_step(
+            cache.mem, v_aug[:, 0], k[:, 0], q[:, 0], log_f[:, 0], gate_i[:, 0]
+        )
+        y_aug = y_aug[:, None]
+    else:
+        h0 = cache.mem if cache else None
+        y_aug, mem = chunked_linear_recurrence(
+            v_aug, k, q, log_f, gate_i, cfg.ssm.chunk_size, h0
+        )
+
+    y = y_aug[..., :P] / jnp.maximum(jnp.abs(y_aug[..., P:]), 1.0)
+    y = y.reshape(B, L, d_in)
+    y = apply_norm(p["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype), MLSTMCache(conv=conv_state, mem=mem)
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, P, N = mlstm_dims(cfg)
+    return MLSTMCache(
+        conv=jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1, d_in), dtype),
+        mem=jax.ShapeDtypeStruct((batch, H, P + 1, N), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    return H, hd
+
+
+def slstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = slstm_dims(cfg)
+    return {
+        "w_in": ParamSpec((d, 4 * d), ("embed", None)),  # i, f, z, o pre-acts
+        "r": ParamSpec((H, hd, 4 * hd), (None, "head_dim", None)),  # block-diag
+        "b": ParamSpec((4 * d,), (None,), "zeros"),
+        "norm": {"scale": ParamSpec((d,), ("embed",), "ones")},
+        "w_out": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray  # (B, H, hd) f32
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray  # (B, H) stabilizer
+
+
+def _slstm_cell(p, wx_t, state: SLSTMCache, H: int, hd: int):
+    """One timestep. wx_t: (B, 4, H, hd) precomputed input pre-activations."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhk,hkj->bhj", h, p["r"].astype(h.dtype))  # (B,H,4*hd)
+    rec = rec.reshape(h.shape[0], H, 4, hd).transpose(0, 2, 1, 3)
+    pre = (wx_t + rec).astype(jnp.float32)
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    # exponential gating with running-max stabilizer (per head: scalar gates
+    # are per-channel here — the common per-channel variant)
+    i_log = it
+    f_log = ft  # log f = f̃ with exp gating; use log-sigmoid for boundedness
+    f_log = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(f_log + m[..., None], i_log).max(axis=-1)  # (B,H)
+    i_g = jnp.exp(i_log - m_new[..., None])
+    f_g = jnp.exp(f_log + m[..., None] - m_new[..., None])
+    c_new = f_g * c + i_g * jnp.tanh(zt)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_forward(p, x, cfg: ModelConfig, cache: SLSTMCache | None = None,
+                  decode: bool = False):
+    H, hd = slstm_dims(cfg)
+    B, L, d = x.shape
+    if cache is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        cache = SLSTMCache(c=z, n=z, h=z, m=jnp.zeros((B, H), jnp.float32))
+
+    wx = (x @ p["w_in"].astype(x.dtype) + p["b"].astype(x.dtype)).reshape(
+        B, L, 4, H, hd
+    )
+
+    if decode:
+        new = _slstm_cell(p, wx[:, 0], cache, H, hd)
+        y = new.h[:, None].reshape(B, 1, d).astype(x.dtype)
+        out_state = new
+    else:
+        def step(s, wx_t):
+            new = _slstm_cell(p, wx_t, s, H, hd)
+            return new, new.h
+
+        out_state, hs = jax.lax.scan(step, cache, wx.swapaxes(0, 1))
+        y = hs.swapaxes(0, 1).reshape(B, L, d).astype(x.dtype)
+
+    y = apply_norm(p["norm"], y, "rmsnorm")
+    return y @ p["w_out"].astype(x.dtype), out_state
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int, dtype):
+    H, hd = slstm_dims(cfg)
+    f32 = jnp.float32
+    return SLSTMCache(
+        c=jax.ShapeDtypeStruct((batch, H, hd), f32),
+        n=jax.ShapeDtypeStruct((batch, H, hd), f32),
+        h=jax.ShapeDtypeStruct((batch, H, hd), f32),
+        m=jax.ShapeDtypeStruct((batch, H), f32),
+    )

@@ -1,0 +1,100 @@
+"""Serving: prefill + decode steps and a batched generation loop.
+
+`make_serve_step` produces the jit-able single-token decode function that
+the decode_32k / long_500k dry-run cells lower: one new token for every
+sequence in the batch against a KV/SSM cache of length seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.models.transformer import materialize_cache
+
+
+class DecodeState(NamedTuple):
+    cache: Any
+    pos: jnp.ndarray  # () int32 — next write position
+    last_tokens: jnp.ndarray  # (B, 1)
+    key: jnp.ndarray
+
+
+def make_serve_step(model: Model, mesh=None):
+    """(params, state) -> (logits, new_state): one decode step."""
+
+    def serve_step(params, state: DecodeState):
+        logits, new_cache = model.decode_step(
+            params, state.cache, state.last_tokens, state.pos, mesh=mesh
+        )
+        return logits, DecodeState(
+            cache=new_cache,
+            pos=state.pos + 1,
+            last_tokens=state.last_tokens,
+            key=state.key,
+        )
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, mesh=None, last_only: bool = True):
+    """Full-sequence forward for the prefill cells.
+
+    last_only=True (serving semantics): only the final position's logits are
+    produced — the (B, S, V) unembed is the single largest matmul of a
+    big-vocab prefill (grok-1: 1.7e18 flops, 275 GB of logits at 32k×32)
+    and next-token generation never needs it. last_only=False returns the
+    full logits (scoring/eval use the train-side loss path instead)."""
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, mesh=mesh, remat=False,
+                                  last_only=last_only)
+        return logits
+
+    return prefill_step
+
+
+def greedy_generate(
+    model: Model,
+    params,
+    prompt_tokens: jnp.ndarray,  # (B, S_prompt)
+    max_new_tokens: int,
+    max_seq: int,
+    temperature: float = 0.0,
+    key=None,
+    mesh=None,
+):
+    """Simple batched generation for the examples: sequential prefill via
+    decode steps (correct for every cache family), then sampling."""
+    B, S_prompt = prompt_tokens.shape
+    cache = materialize_cache(model.cache_specs(B, max_seq, jnp.float32))
+    key = key if key is not None else jax.random.key(0)
+
+    decode = jax.jit(
+        lambda params, cache, tok, pos: model.decode_step(
+            params, cache, tok, pos, mesh=mesh
+        )
+    )
+
+    # feed the prompt one token at a time (fills the caches)
+    logits = None
+    for i in range(S_prompt):
+        logits, cache = decode(params, cache, prompt_tokens[:, i : i + 1],
+                               jnp.asarray(i, jnp.int32))
+
+    out = []
+    tok = None
+    for j in range(max_new_tokens):
+        lg = logits[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lg / temperature, axis=-1)[:, None]
+        else:
+            tok = jnp.argmax(lg, axis=-1)[:, None]
+        out.append(tok)
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(S_prompt + j, jnp.int32))
+    return jnp.concatenate(out, axis=1)

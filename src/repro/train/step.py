@@ -1,0 +1,135 @@
+"""train_step / eval_step: loss, grad, optimizer update, microbatching.
+
+The train step is a pure function of (TrainState, batch) suitable for
+jax.jit with in/out shardings from the model's logical axes. Microbatched
+gradient accumulation runs as a lax.scan over microbatches — XLA overlaps
+each microbatch's reduce-scatter with the next one's compute, which is the
+standard collective-hiding trick at pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.train.optimizer import (
+    OptimizerConfig,
+    OptState,
+    apply_optimizer,
+    init_opt_state,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    remat: bool = True
+    microbatches: int = 1
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01  # MoE load-balance loss weight
+    param_dtype: str = "float32"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig) -> TrainState:
+    dtype = jnp.bfloat16 if tcfg.param_dtype == "bfloat16" else jnp.float32
+    params = model.init(key, dtype)
+    mdt = jnp.dtype(tcfg.optimizer.moment_dtype)
+    return TrainState(
+        params=params, opt=init_opt_state(params, mdt),
+        step=jnp.zeros((), jnp.int32)
+    )
+
+
+def lm_loss(logits, labels, mask, z_loss: float = 0.0):
+    """Causal-LM cross entropy in f32 + optional z-loss; mask excludes pads
+    and (for VLMs) the patch positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(logz)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def make_loss_fn(model: Model, tcfg: TrainConfig, mesh=None):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, mesh=mesh, remat=tcfg.remat)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            # loss only over the text positions (patches predict nothing)
+            logits = logits[:, cfg.num_patches :]
+        labels = tokens[:, 1:]
+        logits = logits[:, :-1]
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(labels, jnp.float32) if mask is None else \
+            mask[:, 1:].astype(jnp.float32)
+        loss = lm_loss(logits, labels, mask, tcfg.z_loss)
+        loss = loss + tcfg.aux_loss_weight * aux
+        return loss, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, mesh=None):
+    loss_fn = make_loss_fn(model, tcfg, mesh)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                gacc, lacc = carry
+                (loss, metrics), grads = grad_fn(state.params, mb_batch)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+            metrics = {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        new_params, new_opt, opt_metrics = apply_optimizer(
+            tcfg.optimizer, state.params, grads, state.opt
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return (
+            TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+            metrics,
+        )
+
+    return train_step
+
+
+def make_eval_step(model: Model, tcfg: TrainConfig, mesh=None):
+    loss_fn = make_loss_fn(model, tcfg, mesh)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,20 @@
+"""Test-session configuration.
+
+The main pytest process must see exactly ONE CPU device (smoke tests and
+benchmarks assume it); multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count (see test_sharding_and_distributed).
+"""
+import os
+
+# fail fast if someone exported a device-count override into the test env
+os.environ.pop("XLA_FLAGS", None)
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")

@@ -1,0 +1,217 @@
+"""Behavioural tests of the ZEUS core: BFGS, PSO, early stop, clustering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CONVERGED,
+    DIVERGED,
+    STOPPED,
+    BFGSOptions,
+    LBFGSOptions,
+    PSOOptions,
+    ZeusOptions,
+    batched_bfgs,
+    batched_lbfgs,
+    cluster_solutions,
+    serial_bfgs,
+    zeus,
+)
+from repro.core.objectives import get_objective, rastrigin, rosenbrock, sphere
+from repro.core.pso import run_pso, init_swarm
+
+
+KEY = jax.random.key(42)
+
+
+class TestSerialBFGS:
+    def test_sphere_exact(self):
+        r = serial_bfgs(sphere, jnp.array([3.0, -4.0]),
+                        BFGSOptions(iter_bfgs=50, theta=1e-5))
+        assert int(r.status) == CONVERGED
+        assert float(r.fval) < 1e-8
+        # quasi-Newton should need very few iterations on a quadratic
+        assert int(r.iterations) <= 5
+
+    def test_rosenbrock_classic_start(self):
+        r = serial_bfgs(rosenbrock, jnp.array([-1.2, 1.0]),
+                        BFGSOptions(iter_bfgs=200, theta=1e-4))
+        assert int(r.status) == CONVERGED
+        np.testing.assert_allclose(np.asarray(r.x), [1.0, 1.0], atol=1e-3)
+
+    def test_diverged_status_on_budget_exhaustion(self):
+        r = serial_bfgs(rosenbrock, jnp.array([-1.2, 1.0]),
+                        BFGSOptions(iter_bfgs=2, theta=1e-12))
+        assert int(r.status) == DIVERGED
+
+    @pytest.mark.parametrize("impl", ["reference", "fast", "pallas"])
+    def test_hessian_impls_agree(self, impl):
+        r = serial_bfgs(rosenbrock, jnp.array([0.5, 0.5]),
+                        BFGSOptions(iter_bfgs=60, theta=1e-4,
+                                    hessian_impl=impl))
+        assert int(r.status) == CONVERGED
+        np.testing.assert_allclose(np.asarray(r.x), [1.0, 1.0], atol=5e-3)
+
+    def test_wolfe_linesearch(self):
+        r = serial_bfgs(rosenbrock, jnp.array([-1.2, 1.0]),
+                        BFGSOptions(iter_bfgs=200, theta=1e-4,
+                                    linesearch="wolfe"))
+        assert int(r.status) == CONVERGED
+
+
+class TestBatchedBFGS:
+    def test_all_converge_on_sphere(self):
+        x0 = jax.random.uniform(KEY, (16, 4), minval=-5, maxval=5)
+        r = batched_bfgs(sphere, x0, BFGSOptions(iter_bfgs=50, theta=1e-4))
+        assert int(r.n_converged) == 16
+        assert float(jnp.max(r.fval)) < 1e-6
+
+    def test_required_c_early_stop(self):
+        """The stop-flag protocol: once required_c lanes converge the sweep
+        ends; slower lanes report STOPPED (paper Alg. 10). Rosenbrock's
+        banana valley gives genuinely slow lanes (sphere would converge
+        everywhere in the same sweep)."""
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,   # essentially at the optimum
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (62, 1)),  # slow valley
+        ])
+        r = batched_bfgs(rosenbrock, x0,
+                         BFGSOptions(iter_bfgs=100, theta=1e-4, required_c=2))
+        assert int(r.n_converged) >= 2
+        # stopped strictly before everyone finished
+        assert int(jnp.sum(r.status == STOPPED)) > 0
+        assert int(r.iterations) < 25  # early — valley needs ~30+ sweeps
+
+    def test_matches_serial_lanes(self):
+        """Each batched lane must equal an independent serial solve."""
+        opts = BFGSOptions(iter_bfgs=40, theta=1e-4)
+        x0 = jnp.asarray([[0.4, -0.3], [2.0, 1.0], [-1.2, 1.0]])
+        rb = batched_bfgs(rosenbrock, x0, opts)
+        for i in range(3):
+            rs = serial_bfgs(rosenbrock, x0[i], opts)
+            np.testing.assert_allclose(np.asarray(rb.x[i]), np.asarray(rs.x),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_nan_objective_fails_lane(self):
+        def evil(x):
+            return jnp.where(x[0] > 1e3, jnp.nan, sphere(x)) + \
+                jnp.where(x[0] > 2.0, jnp.inf, 0.0)
+        x0 = jnp.asarray([[0.5, 0.5], [2.5, 2.5]])
+        r = batched_bfgs(evil, x0, BFGSOptions(iter_bfgs=30, theta=1e-4))
+        assert int(r.status[0]) == CONVERGED
+        assert int(r.status[1]) == DIVERGED
+
+
+class TestLBFGS:
+    def test_matches_bfgs_quality(self):
+        x0 = jax.random.uniform(KEY, (8, 6), minval=-2, maxval=2)
+        rb = batched_bfgs(rosenbrock, x0, BFGSOptions(iter_bfgs=150, theta=1e-4))
+        rl = batched_lbfgs(rosenbrock, x0,
+                           LBFGSOptions(iter_max=300, memory=10, theta=1e-4))
+        assert int(rl.n_converged) >= int(rb.n_converged) - 2
+
+    def test_high_dim_where_full_bfgs_is_silly(self):
+        d = 128
+        x0 = jax.random.uniform(KEY, (4, d), minval=-2, maxval=2)
+        r = batched_lbfgs(sphere, x0, LBFGSOptions(iter_max=60, theta=1e-3))
+        assert int(r.n_converged) == 4
+
+
+class TestPSO:
+    def test_swarm_improves_global_best(self):
+        obj = get_objective("rastrigin")
+        s0 = init_swarm(obj.fn, KEY, 256, 4, obj.lower, obj.upper)
+        s8 = run_pso(obj.fn, KEY, 4, obj.lower, obj.upper,
+                     PSOOptions(n_particles=256, iter_pso=8))
+        assert float(s8.gf) <= float(s0.gf)
+
+    def test_personal_best_monotone(self):
+        obj = get_objective("sphere")
+        s = run_pso(obj.fn, KEY, 3, obj.lower, obj.upper,
+                    PSOOptions(n_particles=64, iter_pso=5))
+        fvals = jax.vmap(obj.fn)(s.px)
+        assert float(jnp.max(s.pf - fvals)) < 1e-5  # pf = f(px)
+        assert float(s.gf) <= float(jnp.min(s.pf)) + 1e-6
+
+
+class TestZeusEndToEnd:
+    def test_rastrigin_2d(self):
+        obj = get_objective("rastrigin")
+        opts = ZeusOptions(
+            pso=PSOOptions(n_particles=512, iter_pso=8),
+            bfgs=BFGSOptions(iter_bfgs=80, theta=1e-4, required_c=200),
+        )
+        res = jax.jit(lambda k: zeus(obj.fn, k, 2, obj.lower, obj.upper, opts))(
+            jax.random.key(1))
+        err = float(jnp.linalg.norm(res.best_x - obj.x_star(2)))
+        assert err < 0.5  # the paper's 'correct solution' criterion
+
+    def test_goldstein_price(self):
+        obj = get_objective("goldstein_price")
+        opts = ZeusOptions(
+            pso=PSOOptions(n_particles=256, iter_pso=5),
+            bfgs=BFGSOptions(iter_bfgs=150, theta=1e-3, required_c=20),
+        )
+        res = jax.jit(lambda k: zeus(obj.fn, k, 2, obj.lower, obj.upper, opts))(
+            jax.random.key(2))
+        assert float(res.best_f) == pytest.approx(3.0, abs=1e-2)
+
+    def test_pso_off_is_pure_multistart(self):
+        obj = get_objective("sphere")
+        opts = ZeusOptions(
+            use_pso=False,
+            pso=PSOOptions(n_particles=64, iter_pso=0),
+            bfgs=BFGSOptions(iter_bfgs=50, theta=1e-4),
+        )
+        res = zeus(obj.fn, jax.random.key(0), 3, obj.lower, obj.upper, opts)
+        assert float(res.best_f) < 1e-6
+
+    def test_ackley_failure_mode(self):
+        """Paper §VI: with a tight theta, Ackley lanes cannot satisfy
+        |grad| < theta at the true minimum (discontinuous derivative)."""
+        obj = get_objective("ackley")
+        opts = ZeusOptions(
+            pso=PSOOptions(n_particles=128, iter_pso=5),
+            bfgs=BFGSOptions(iter_bfgs=60, theta=1e-10, required_c=128),
+        )
+        res = zeus(obj.fn, jax.random.key(0), 2, obj.lower, obj.upper, opts)
+        statuses = np.asarray(res.raw.status)
+        # most lanes exhaust their budget without 'converging'
+        assert (statuses == DIVERGED).mean() > 0.5
+
+
+class TestClustering:
+    def test_identifies_basins(self):
+        obj = get_objective("rastrigin")
+        x0 = jax.random.uniform(jax.random.key(5), (128, 2),
+                                minval=obj.lower, maxval=obj.upper)
+        res = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=80, theta=1e-4))
+        rep = cluster_solutions(res, radius=0.3)
+        assert rep.n_converged > 10
+        assert len(rep.clusters) > 3  # many rastrigin basins hit
+        # best cluster is a true local minimum: integer coordinates
+        np.testing.assert_allclose(
+            rep.best_cluster.center, np.round(rep.best_cluster.center),
+            atol=0.05)
+
+
+class TestPSOKernelPath:
+    def test_kernel_and_jnp_paths_agree(self):
+        """PSO via the fused Pallas kernel equals the jnp path bit-for-bit
+        (same RNG stream, same update algebra)."""
+        from repro.core.pso import init_swarm, pso_step
+        obj = get_objective("rastrigin")
+        s0 = init_swarm(obj.fn, KEY, 64, 3, obj.lower, obj.upper)
+        a = pso_step(obj.fn, s0, PSOOptions(n_particles=64, use_kernel=False),
+                     obj.lower, obj.upper)
+        b = pso_step(obj.fn, s0, PSOOptions(n_particles=64, use_kernel=True),
+                     obj.lower, obj.upper)
+        np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x),
+                                   rtol=1e-6, atol=1e-6)
+        # fvals may differ by ULPs (padded/fused arithmetic order), which
+        # can flip a personal-best tie — compare the best values instead
+        assert float(a.gf) == pytest.approx(float(b.gf), rel=1e-5)
+        np.testing.assert_allclose(np.sort(np.asarray(a.pf)),
+                                   np.sort(np.asarray(b.pf)),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests of the paper's system (ZEUS) and the framework.
+
+These mirror the paper's experimental claims at CPU-test scale:
+  C1  multistart degradation with dimension (Fig. 1 direction)
+  C3  PSO iterations improve correctness on Rastrigin (Fig. 3)
+  C4  ZEUS beats PSO-only and random-multistart baselines (Fig. 4)
+  C6  Ackley failure mode (Fig. 6)
+plus launcher-level integration: training runs and losses fall, serving
+generates, the example scripts are importable drivers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CONVERGED,
+    BFGSOptions,
+    PSOOptions,
+    ZeusOptions,
+    zeus,
+)
+from repro.core.objectives import get_objective
+
+
+def n_correct(res, x_star, tol=0.5):
+    """Paper metric: converged lanes whose Euclidean error < 0.5."""
+    errs = jnp.linalg.norm(res.raw.x - jnp.asarray(x_star)[None, :], axis=1)
+    return int(jnp.sum((errs < tol) & (res.raw.status == CONVERGED)))
+
+
+def run_zeus(dim, iter_pso, n=512, required_c=None, key=0, fn="rastrigin"):
+    obj = get_objective(fn)
+    opts = ZeusOptions(
+        use_pso=iter_pso > 0,
+        pso=PSOOptions(n_particles=n, iter_pso=max(iter_pso, 1)),
+        bfgs=BFGSOptions(iter_bfgs=80, theta=1e-4,
+                         required_c=required_c or n),
+    )
+    res = jax.jit(
+        lambda k: zeus(obj.fn, k, dim, obj.lower, obj.upper, opts)
+    )(jax.random.key(key))
+    return res, obj
+
+
+class TestPaperClaims:
+    def test_c1_dimension_degradation(self):
+        """Fig. 1: N_correct collapses as dimension grows (same swarm)."""
+        counts = {}
+        for dim in (2, 4, 6):
+            res, obj = run_zeus(dim, iter_pso=5, n=256, key=3)
+            counts[dim] = n_correct(res, obj.x_star(dim))
+        assert counts[2] > counts[6], counts
+        assert counts[2] > 0
+
+    def test_c3_pso_improves_rastrigin(self):
+        """Fig. 3: a handful of PSO iterations raises N_correct by a lot.
+
+        Dimension scaled to the particle budget (paper: 1e5 particles at
+        5-D; 512 particles -> 3-D keeps basin hits measurable; see
+        benchmarks fig3)."""
+        res0, obj = run_zeus(3, iter_pso=0, n=512, key=1)
+        res16, _ = run_zeus(3, iter_pso=16, n=512, key=1)
+        c0 = n_correct(res0, obj.x_star(3))
+        c16 = n_correct(res16, obj.x_star(3))
+        assert c16 > max(2 * c0, c0 + 10), (c0, c16)
+
+    def test_c4_beats_pso_only(self):
+        """Fig. 4: ZEUS (PSO+BFGS) reaches far lower error than PSO alone
+        under the same particle budget."""
+        obj = get_objective("rastrigin")
+        from repro.core.pso import run_pso
+        swarm = run_pso(obj.fn, jax.random.key(0), 5, obj.lower, obj.upper,
+                        PSOOptions(n_particles=512, iter_pso=20))
+        pso_err = float(jnp.linalg.norm(swarm.gx - obj.x_star(5)))
+        res, _ = run_zeus(5, iter_pso=8, n=512, required_c=200, key=1)
+        zeus_err = float(jnp.linalg.norm(res.best_x - obj.x_star(5)))
+        assert zeus_err < pso_err
+
+    def test_c6_ackley_misbehaviour(self):
+        """Fig. 6: on Ackley, lanes declaring convergence sit in local
+        minima; lanes near the global minimum do NOT satisfy |grad|<Θ."""
+        res, obj = run_zeus(2, iter_pso=5, n=256, key=0, fn="ackley")
+        st = np.asarray(res.raw.status)
+        x = np.asarray(res.raw.x)
+        errs = np.linalg.norm(x, axis=1)
+        near = errs < 0.05
+        if near.any():
+            # near-global lanes rarely 'converge' by the gradient criterion
+            assert (st[near] == CONVERGED).mean() < 0.5
+
+
+class TestLauncherIntegration:
+    def test_train_loss_decreases(self):
+        from repro.launch import train as T
+        final = T.main([
+            "--arch", "phi3-mini-3.8b", "--reduced", "--steps", "25",
+            "--batch", "8", "--seq", "64", "--lr", "3e-3",
+            "--log-every", "100",
+        ])
+        assert final < 6.0  # ln(512)=6.24 is the uniform floor
+
+    def test_train_microbatched_remat(self):
+        from repro.launch import train as T
+        final = T.main([
+            "--arch", "chatglm3-6b", "--reduced", "--steps", "10",
+            "--batch", "8", "--seq", "32", "--lr", "1e-3",
+            "--microbatches", "2", "--remat", "--log-every", "100",
+        ])
+        assert np.isfinite(final)
+
+    def test_serve_generates(self):
+        from repro.launch import serve as S
+        out = S.main(["--arch", "gemma2-2b", "--reduced", "--batch", "2",
+                      "--prompt-len", "4", "--new-tokens", "4"])
+        assert out.shape == (2, 4)
