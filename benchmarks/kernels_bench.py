@@ -84,6 +84,64 @@ def fused_objective_gradient():
         )
 
 
+def engine_chunked_lanes():
+    """Chunked lane execution (engine lane_chunk=C) vs monolithic vmap:
+    wall time per multistart solve at fixed B, sweeping C. Chunking bounds
+    transient memory to O(C·D²); this measures what that costs (or saves —
+    XLA:CPU often prefers the smaller working set) in time."""
+    from repro.core.bfgs import BFGSOptions, batched_bfgs
+    from repro.core.objectives import rastrigin
+
+    B, D = 256, 16
+    x0 = jax.random.uniform(jax.random.key(0), (B, D), minval=-5.12,
+                            maxval=5.12)
+    opts = dict(iter_bfgs=25, theta=1e-4)
+    run_mono = jax.jit(lambda x: batched_bfgs(rastrigin, x,
+                                              BFGSOptions(**opts)))
+    us_mono = timeit(run_mono, x0)
+    ref = run_mono(x0)
+    for C in (32, 64, 128):
+        run_c = jax.jit(lambda x, C=C: batched_bfgs(
+            rastrigin, x, BFGSOptions(lane_chunk=C, **opts)))
+        us_c = timeit(run_c, x0)
+        res = run_c(x0)
+        emit(
+            f"engine_chunk_b{B}_c{C}",
+            us_c,
+            f"monolithic_us={us_mono:.1f};ratio={us_c / us_mono:.2f}x;"
+            f"n_conv={int(res.n_converged)}/{int(ref.n_converged)}",
+        )
+
+
+def engine_solver_strategies():
+    """Direction strategies through the registry: dense BFGS (O(D²) state)
+    vs L-BFGS (O(mD) state) at growing D — the crossover the paper's §VII-B
+    future work predicts."""
+    from repro.core.engine import get_solver, run_multistart
+    from repro.core.bfgs import BFGSOptions
+    from repro.core.lbfgs import LBFGSOptions
+    from repro.core.objectives import rosenbrock
+
+    B = 64
+    for D in (8, 32, 128):
+        x0 = jax.random.uniform(jax.random.key(D), (B, D), minval=-2,
+                                maxval=2)
+        results = {}
+        for name, sopts in (("bfgs", BFGSOptions(iter_bfgs=30, theta=1e-4,
+                                                 ad_mode="reverse")),
+                            ("lbfgs", LBFGSOptions(iter_max=30, theta=1e-4))):
+            strategy, eopts = get_solver(name)(sopts)
+            run = jax.jit(lambda x, s=strategy, e=eopts: run_multistart(
+                rosenbrock, x, s, e))
+            results[name] = timeit(run, x0)
+        emit(
+            f"engine_solver_d{D}",
+            results["bfgs"],
+            f"lbfgs_us={results['lbfgs']:.1f};"
+            f"bfgs_over_lbfgs={results['bfgs'] / max(results['lbfgs'], 1e-9):.2f}x",
+        )
+
+
 def ad_mode_scaling():
     """Forward-mode (paper) vs reverse-mode (beyond-paper) gradient cost
     as dimension grows — the classic O(D) forward vs O(1) reverse gap."""

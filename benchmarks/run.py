@@ -20,6 +20,8 @@ SUITES = {
     "hessian_forms": kernels_bench.hessian_update_forms,
     "fused_obj": kernels_bench.fused_objective_gradient,
     "ad_modes": kernels_bench.ad_mode_scaling,
+    "engine_chunk": kernels_bench.engine_chunked_lanes,
+    "engine_solvers": kernels_bench.engine_solver_strategies,
 }
 
 

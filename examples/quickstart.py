@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Reproduces the paper's core loop: PSO warm-start -> parallel multistart
-BFGS with forward-mode AD -> early stop at required_c convergences ->
-confidence report from solution clustering (§VII-B).
+quasi-Newton through the unified engine (solver selected by name from the
+registry, lanes chunked to bound phase-2 memory) -> early stop at
+required_c convergences -> confidence report from solution clustering
+(§VII-B). Swap `solver="lbfgs"` to run the O(mD)-state strategy instead.
 """
 import jax
 import jax.numpy as jnp
@@ -28,6 +30,8 @@ def main():
         pso=PSOOptions(n_particles=2048, iter_pso=8),
         bfgs=BFGSOptions(iter_bfgs=100, theta=1e-4, required_c=400,
                          ad_mode="forward"),  # forward = the paper's dual AD
+        solver="bfgs",  # engine registry name; "lbfgs" for limited memory
+        lane_chunk=512,  # phase 2 runs 2048 lanes as 4 vmapped chunks
     )
     run = zeus_jit(obj.fn, DIM, obj.lower, obj.upper, opts)
 

@@ -1,16 +1,30 @@
-"""ZEUS core: PSO + multistart (L-)BFGS + forward-mode AD, JAX/TPU-native."""
+"""ZEUS core: PSO + multistart (L-)BFGS + forward-mode AD, JAX/TPU-native.
+
+One multistart quasi-Newton driver (engine.run_multistart) with pluggable
+direction strategies (bfgs.DenseBFGS, lbfgs.LBFGS) selected by name from
+the solver registry; batched_bfgs / batched_lbfgs remain as thin wrappers.
+"""
 from repro.core.bfgs import (
-    CONVERGED,
-    DIVERGED,
-    STOPPED,
     BFGSOptions,
-    BFGSResult,
+    DenseBFGS,
     batched_bfgs,
     serial_bfgs,
 )
 from repro.core.clustering import ConfidenceReport, cluster_solutions, run_until_confident
 from repro.core.distributed import distributed_zeus
-from repro.core.lbfgs import LBFGSOptions, batched_lbfgs
+from repro.core.engine import (
+    CONVERGED,
+    DIVERGED,
+    STOPPED,
+    BFGSResult,
+    DirectionStrategy,
+    EngineOptions,
+    get_solver,
+    register_solver,
+    run_multistart,
+    solver_names,
+)
+from repro.core.lbfgs import LBFGS, LBFGSOptions, batched_lbfgs
 from repro.core.objectives import OBJECTIVES, get_objective
 from repro.core.pso import PSOOptions, SwarmState, run_pso, sequential_pso
 from repro.core.zeus import (
@@ -18,6 +32,7 @@ from repro.core.zeus import (
     ZeusOptions,
     ZeusResult,
     sequential_zeus,
+    solve_phase2,
     zeus,
     zeus_jit,
 )
@@ -29,6 +44,10 @@ __all__ = [
     "DIVERGED",
     "STOPPED",
     "ConfidenceReport",
+    "DenseBFGS",
+    "DirectionStrategy",
+    "EngineOptions",
+    "LBFGS",
     "LBFGSOptions",
     "OBJECTIVES",
     "PSOOptions",
@@ -41,11 +60,16 @@ __all__ = [
     "cluster_solutions",
     "distributed_zeus",
     "get_objective",
+    "get_solver",
+    "register_solver",
+    "run_multistart",
     "run_pso",
     "run_until_confident",
     "sequential_pso",
     "sequential_zeus",
     "serial_bfgs",
+    "solve_phase2",
+    "solver_names",
     "zeus",
     "zeus_jit",
 ]

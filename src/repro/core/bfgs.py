@@ -1,40 +1,33 @@
-"""BFGS with forward-mode AD (paper §III-B, Alg. 4) — serial and batched.
+"""Dense BFGS (paper §III-B, Alg. 4) as a direction strategy for the engine.
 
-Two entry points:
+The multistart while-loop/stop-protocol machinery lives in core/engine.py;
+this module only contributes what is BFGS-specific:
 
-- `serial_bfgs`    : Alg. 4 verbatim — one start, while_loop, Armijo search.
-- `batched_bfgs`   : the parallel BFGSKernel (Alg. 10) adapted to TPU. One
-  vmap *lane* per optimization instead of one CUDA thread. The CUDA stopFlag/
-  atomicAdd(converged) protocol becomes the scalar predicate of an outer
-  lax.while_loop: sweep while  k < iter_bfgs  AND  n_converged < required_c
-  AND any lane active. Lanes that converged/diverged are frozen by masking —
-  the TPU analogue of warp lanes idling after `break`.
-
-The inverse-Hessian update H <- (I-ρ δx δgᵀ) H (I-ρ δg δxᵀ) + ρ δx δxᵀ is
-the measured hot spot ("the Hessian update step dominates the BFGS kernel
-runtime", §IV-C). Three interchangeable implementations:
-  impl="reference" — the literal triple product of Alg. 4 (oracle),
-  impl="fast"      — algebraically equal two-matvec + rank-1 form, O(D²),
-  impl="pallas"    — the Pallas TPU kernel (kernels/bfgs_update.py).
+- `DenseBFGS`       : DirectionStrategy with a dense inverse Hessian H.
+- the H update      : H <- (I-ρ δx δgᵀ) H (I-ρ δg δxᵀ) + ρ δx δxᵀ — the
+  measured hot spot ("the Hessian update step dominates the BFGS kernel
+  runtime", §IV-C), in three interchangeable implementations:
+    impl="reference" — the literal triple product of Alg. 4 (oracle),
+    impl="fast"      — algebraically equal two-matvec + rank-1 form, O(D²),
+    impl="pallas"    — the Pallas TPU kernel (kernels/bfgs_update.py).
+- `batched_bfgs`    : back-compatible wrapper over engine.run_multistart.
+- `serial_bfgs`     : Alg. 4 verbatim — one lane through the same engine.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.dual import value_and_grad_fn
-from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+from repro.core import engine as E
+from repro.core.engine import (  # re-exported seed API  # noqa: F401
+    CONVERGED,
+    DIVERGED,
+    STOPPED,
+    BFGSResult,
+)
 
-# status codes, matching the paper's result.status
-DIVERGED = 0  # hit iter_bfgs without |g| < theta
-CONVERGED = 1
-STOPPED = 2  # stop-flag: another lane filled required_c first
-
-_CURV_EPS = 1e-10
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,15 +40,7 @@ class BFGSOptions:
     linesearch: str = "armijo"  # "armijo" (paper) | "wolfe" (beyond-paper)
     ad_mode: str = "forward"  # "forward" (paper) | "reverse" (beyond-paper)
     hessian_impl: str = "fast"  # "reference" | "fast" | "pallas"
-
-
-class BFGSResult(NamedTuple):
-    x: jnp.ndarray  # (B, D) final iterates
-    fval: jnp.ndarray  # (B,)
-    grad_norm: jnp.ndarray  # (B,)
-    status: jnp.ndarray  # (B,) int32 in {DIVERGED, CONVERGED, STOPPED}
-    iterations: jnp.ndarray  # scalar — sweeps taken
-    n_converged: jnp.ndarray  # scalar
+    lane_chunk: Optional[int] = None  # chunked lane execution (engine)
 
 
 # ---------------------------------------------------------------------------
@@ -96,21 +81,49 @@ def _get_hessian_update(impl: str):
     raise ValueError(f"unknown hessian impl: {impl}")
 
 
-def _guarded_update(H, dx, dg, update_fn):
-    """Skip the update on curvature breakdown (δxᵀδg ≈ 0) to avoid NaNs.
+# ---------------------------------------------------------------------------
+# The strategy: direction state is the dense inverse Hessian H (D, D)
+# ---------------------------------------------------------------------------
+class DenseBFGS:
+    """DirectionStrategy with a dense inverse Hessian (O(D²) state)."""
 
-    The paper's CUDA kernel divides unguarded; any practical port needs this
-    guard (documented in DESIGN.md §8)."""
-    curv = jnp.dot(dx, dg)
-    ok = jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
-    safe_dg = jnp.where(ok, dg, jnp.ones_like(dg))  # avoid 1/0 inside update
-    safe_dx = jnp.where(ok, dx, jnp.ones_like(dx))
-    newH = update_fn(H, safe_dx, safe_dg)
-    return jnp.where(ok, newH, H)
+    def __init__(self, hessian_impl: str = "fast"):
+        self.hessian_impl = hessian_impl
+        self._update = _get_hessian_update(hessian_impl)
+
+    def init_state(self, x0):
+        return jnp.eye(x0.shape[0], dtype=x0.dtype)
+
+    def direction(self, H, g):
+        return -(H @ g)
+
+    def update_state(self, H, dx, dg):
+        return self._update(H, dx, dg)
+
+
+def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
+                 ) -> E.EngineOptions:
+    return E.EngineOptions(
+        iter_max=opts.iter_bfgs,
+        theta=opts.theta,
+        required_c=opts.required_c,
+        ls_iters=opts.ls_iters,
+        ls_c1=opts.ls_c1,
+        linesearch=opts.linesearch,
+        ad_mode=opts.ad_mode,
+        lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
+    )
+
+
+@E.register_solver("bfgs")
+def make_bfgs_solver(opts: Optional[BFGSOptions] = None,
+                     lane_chunk: Optional[int] = None):
+    opts = opts if opts is not None else BFGSOptions()
+    return DenseBFGS(opts.hessian_impl), _engine_opts(opts, lane_chunk)
 
 
 # ---------------------------------------------------------------------------
-# One BFGS iteration for a single lane
+# Back-compat lane API (benchmarks/zeus_roofline.py lowers a single sweep)
 # ---------------------------------------------------------------------------
 class LaneState(NamedTuple):
     x: jnp.ndarray
@@ -122,70 +135,29 @@ class LaneState(NamedTuple):
     n_evals: jnp.ndarray  # int32 objective-eval counter (profiling)
 
 
-def _lane_init(f, vg, x0, theta):
-    fval, g = vg(x0)
-    H = jnp.eye(x0.shape[0], dtype=x0.dtype)
-    gn = jnp.linalg.norm(g)
-    return LaneState(
-        x=x0,
-        f=fval,
-        g=g,
-        H=H,
-        converged=gn < theta,
-        failed=jnp.logical_not(jnp.isfinite(fval)),
-        n_evals=jnp.asarray(1 + x0.shape[0], jnp.int32),
-    )
+def _to_engine_lane(s: LaneState) -> E.Lane:
+    return E.Lane(x=s.x, f=s.f, g=s.g, converged=s.converged, failed=s.failed,
+                  n_evals=s.n_evals, direction_state=s.H)
+
+
+def _from_engine_lane(l: E.Lane) -> LaneState:
+    return LaneState(x=l.x, f=l.f, g=l.g, H=l.direction_state,
+                     converged=l.converged, failed=l.failed, n_evals=l.n_evals)
+
+
+def _lane_init(f, vg, x0, theta) -> LaneState:
+    return _from_engine_lane(E.lane_init(vg, DenseBFGS(), x0, theta))
 
 
 def _lane_step(f, vg, opts: BFGSOptions, state: LaneState) -> LaneState:
-    """One quasi-Newton step (Alg. 4 lines 10-16) with masking for frozen lanes."""
-    x, fv, g, H = state.x, state.f, state.g, state.H
-    active = jnp.logical_not(jnp.logical_or(state.converged, state.failed))
-
-    p = -(H @ g)
-    # Safeguard: if p is not a descent direction (can happen after numerical
-    # breakdown), restart from steepest descent — standard practice.
-    descent = jnp.dot(p, g) < 0
-    p = jnp.where(descent, p, -g)
-
-    if opts.linesearch == "armijo":
-        ls = armijo_backtracking(
-            f, x, p, fv, g, c1=opts.ls_c1, max_iters=opts.ls_iters
-        )
-    elif opts.linesearch == "wolfe":
-        ls = wolfe_linesearch(f, x, p, fv, g, vg, max_iters=opts.ls_iters)
-    else:
-        raise ValueError(opts.linesearch)
-
-    x_new = x + ls.alpha * p
-    f_new, g_new = vg(x_new)
-    dx = x_new - x
-    dg = g_new - g
-    H_new = _guarded_update(H, dx, dg, _get_hessian_update(opts.hessian_impl))
-
-    gn = jnp.linalg.norm(g_new)
-    now_converged = gn < opts.theta
-    now_failed = jnp.logical_not(
-        jnp.logical_and(jnp.isfinite(f_new), jnp.all(jnp.isfinite(g_new)))
-    )
-
-    def keep(new, old):
-        return jnp.where(active, new, old)
-
-    return LaneState(
-        x=keep(x_new, x),
-        f=keep(f_new, fv),
-        g=keep(g_new, g),
-        H=keep(H_new, H),
-        converged=jnp.where(active, now_converged, state.converged),
-        failed=jnp.where(active, now_failed, state.failed),
-        n_evals=state.n_evals
-        + jnp.where(active, ls.n_evals + 1 + x.shape[0], 0).astype(jnp.int32),
-    )
+    """One quasi-Newton step (Alg. 4 lines 10-16); engine does the masking."""
+    lane = E.lane_step(f, vg, DenseBFGS(opts.hessian_impl),
+                       _engine_opts(opts), _to_engine_lane(state))
+    return _from_engine_lane(lane)
 
 
 # ---------------------------------------------------------------------------
-# Batched multistart BFGS (Alg. 10 analogue)
+# Batched multistart BFGS (Alg. 10 analogue) — thin wrapper over the engine
 # ---------------------------------------------------------------------------
 def batched_bfgs(
     f: Callable,
@@ -193,67 +165,15 @@ def batched_bfgs(
     opts: BFGSOptions = BFGSOptions(),
     pcount: Optional[Callable] = None,  # cross-device converged-count reducer
 ) -> BFGSResult:
-    """Run B independent BFGS solves until required_c of them converge.
-
-    `pcount` lets the distributed driver plug a psum across the mesh so the
-    stop flag is global (see core/distributed.py); default is local sum.
-    """
-    B = x0.shape[0]
-    required_c = opts.required_c if opts.required_c is not None else B
-    vg = value_and_grad_fn(f, opts.ad_mode)
-    count = pcount if pcount is not None else (lambda c: c)
-
-    init = jax.vmap(lambda x: _lane_init(f, vg, x, opts.theta))(x0)
-
-    def counts(state):
-        """Global (converged, active) lane counts. The collective (when the
-        distributed driver passes a psum) lives in the loop *body*, so the
-        while cond only reads replicated scalars from the carry."""
-        n_conv = count(jnp.sum(state.converged.astype(jnp.int32)))
-        n_act = count(
-            jnp.sum(
-                jnp.logical_not(
-                    jnp.logical_or(state.converged, state.failed)
-                ).astype(jnp.int32)
-            )
-        )
-        return n_conv, n_act
-
-    def cond(carry):
-        k, state, n_conv, n_act = carry
-        return jnp.logical_and(
-            k < opts.iter_bfgs,
-            jnp.logical_and(n_conv < required_c, n_act > 0),
-        )
-
-    def body(carry):
-        k, state, _, _ = carry
-        state = jax.vmap(functools.partial(_lane_step, f, vg, opts))(state)
-        n_conv, n_act = counts(state)
-        return (k + 1, state, n_conv, n_act)
-
-    n_conv0, n_act0 = counts(init)
-    k, state, _, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((), jnp.int32), init, n_conv0, n_act0)
-    )
-
-    status = jnp.where(
-        state.converged,
-        CONVERGED,
-        jnp.where(jnp.logical_or(state.failed, k >= opts.iter_bfgs), DIVERGED, STOPPED),
-    ).astype(jnp.int32)
-    return BFGSResult(
-        x=state.x,
-        fval=state.f,
-        grad_norm=jax.vmap(jnp.linalg.norm)(state.g),
-        status=status,
-        iterations=k,
-        n_converged=jnp.sum(state.converged.astype(jnp.int32)),
-    )
+    """Run B independent BFGS solves until required_c of them converge."""
+    strategy, eopts = make_bfgs_solver(opts)
+    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount)
 
 
 # ---------------------------------------------------------------------------
-# Serial BFGS (Alg. 4) — used by the sequential ZEUS baseline (Fig. 2)
+# Serial BFGS (Alg. 4) — used by the sequential ZEUS baseline (Fig. 2).
+# One lane through the same engine: required_c=1 makes the stop protocol
+# degenerate to "loop while this lane is active".
 # ---------------------------------------------------------------------------
 class SerialResult(NamedTuple):
     x: jnp.ndarray
@@ -264,24 +184,15 @@ class SerialResult(NamedTuple):
 
 
 def serial_bfgs(f: Callable, x0: jnp.ndarray, opts: BFGSOptions = BFGSOptions()):
-    vg = value_and_grad_fn(f, opts.ad_mode)
-    init = _lane_init(f, vg, x0, opts.theta)
-
-    def cond(carry):
-        k, s = carry
-        active = jnp.logical_not(jnp.logical_or(s.converged, s.failed))
-        return jnp.logical_and(k < opts.iter_bfgs, active)
-
-    def body(carry):
-        k, s = carry
-        return (k + 1, _lane_step(f, vg, opts, s))
-
-    k, s = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), init))
-    status = jnp.where(s.converged, CONVERGED, DIVERGED).astype(jnp.int32)
+    eopts = dataclasses.replace(_engine_opts(opts), required_c=1,
+                                lane_chunk=None)
+    res = E.run_multistart(f, x0[None, :], DenseBFGS(opts.hessian_impl), eopts)
+    # a single lane either converges or diverges — no one else to stop it
+    status = jnp.where(res.status[0] == CONVERGED, CONVERGED, DIVERGED)
     return SerialResult(
-        x=s.x,
-        fval=s.f,
-        grad_norm=jnp.linalg.norm(s.g),
-        status=status,
-        iterations=k,
+        x=res.x[0],
+        fval=res.fval[0],
+        grad_norm=res.grad_norm[0],
+        status=status.astype(jnp.int32),
+        iterations=res.iterations,
     )

@@ -14,8 +14,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import bfgs as bfgs_mod
-from repro.core.bfgs import BFGSResult
+from repro.core import engine as engine_mod
+from repro.core.engine import BFGSResult
 
 
 @dataclasses.dataclass
@@ -52,7 +52,7 @@ def cluster_solutions(
     x = np.asarray(res.x)
     f = np.asarray(res.fval)
     status = np.asarray(res.status)
-    conv = np.nonzero(status == bfgs_mod.CONVERGED)[0]
+    conv = np.nonzero(status == engine_mod.CONVERGED)[0]
     n_lanes = x.shape[0]
 
     if conv.size == 0:
@@ -121,7 +121,7 @@ def run_until_confident(
             grad_norm=np.zeros(sum(a.shape[0] for a in agg_x)),
             status=np.concatenate(agg_s),
             iterations=res.iterations,
-            n_converged=np.sum(np.concatenate(agg_s) == bfgs_mod.CONVERGED),
+            n_converged=np.sum(np.concatenate(agg_s) == engine_mod.CONVERGED),
         )
         report = cluster_solutions(merged, radius=radius)
         if report.best_cluster.count >= min_lanes_in_best:

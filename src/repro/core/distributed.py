@@ -27,17 +27,35 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bfgs import BFGSResult, batched_bfgs
-from repro.core.lbfgs import batched_lbfgs
+from repro.core.engine import BFGSResult
 from repro.core.pso import PSOOptions, SwarmState, init_swarm, pso_step
-from repro.core.zeus import ZeusOptions, ZeusResult, _select_best
+from repro.core.zeus import (ZeusOptions, ZeusResult, _select_best,
+                             solve_phase2, uniform_starts)
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """jax.shard_map(check_vma=False) where available (jax >= 0.7), else the
+    experimental namespace with its older check_rep spelling."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _axis_size(name: str) -> jnp.ndarray:
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.6
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)  # constant-folded under shard_map
 
 
 def _axis_index_flat(axis_names: Tuple[str, ...]) -> jnp.ndarray:
     """Flat linear device index across the listed mesh axes."""
     idx = jnp.zeros((), jnp.int32)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -85,25 +103,30 @@ def _local_zeus(
     # decorrelate per-device RNG streams
     key = jax.random.fold_in(key[0], _axis_index_flat(axis_names))
 
-    state = init_swarm(f, key, n_local, dim, lower, upper, pmin, dtype)
     if opts.use_pso:
+        state = init_swarm(f, key, n_local, dim, lower, upper, pmin, dtype)
 
         def body(_, s):
             return pso_step(f, s, opts.pso, lower, upper, pmin)
 
         state = jax.lax.fori_loop(0, opts.pso.iter_pso, body, state)
-
-    if opts.lbfgs is not None:
-        res = batched_lbfgs(f, state.x, opts.lbfgs, pcount=pcount)
+        starts, pso_gf = state.x, state.gf
     else:
-        res = batched_bfgs(f, state.x, opts.bfgs, pcount=pcount)
+        # skip the swarm entirely (init_swarm already costs one objective
+        # eval per particle) — same contract as zeus()
+        starts, pso_gf = uniform_starts(key, n_local, dim, lower, upper, dtype)
+
+    # phase 2 through the engine: the registry-selected strategy runs with
+    # the global stop protocol (pcount = psum over the mesh) and per-device
+    # chunked lanes when opts.lane_chunk is set
+    res = solve_phase2(f, starts, opts, pcount=pcount)
     # make the scalar diagnostics truly replicated across devices
     res = res._replace(n_converged=pcount(res.n_converged))
 
     # global best among converged lanes
     best_x, best_f = _select_best(res)
     best_f, best_x = pmin(best_f, best_x)
-    return best_x, best_f, res, state.gf
+    return best_x, best_f, res, pso_gf
 
 
 def distributed_zeus(
@@ -155,12 +178,11 @@ def distributed_zeus(
         n_local=n_local,
     )
 
-    sharded = jax.shard_map(
+    sharded = shard_map_compat(
         lambda key: local(key),
         mesh=mesh,
         in_specs=(P(),),
         out_specs=out_specs,
-        check_vma=False,
     )
 
     def run(key: jnp.ndarray) -> ZeusResult:

@@ -1,0 +1,330 @@
+"""Unified multistart quasi-Newton engine (paper Alg. 10, one copy).
+
+The paper's phase 2 is "B independent quasi-Newton solves sharing a stop
+protocol": sweep while  k < iter_max  AND  n_converged < required_c  AND any
+lane active; lanes that converged/failed are frozen by masking — the TPU
+analogue of CUDA warp lanes idling after `break`, with the atomicAdd
+(converged)/stopFlag pair replaced by a replicated scalar count in the
+lax.while_loop carry.
+
+This module owns everything the driver shares across solvers:
+
+  - lane init / active-lane masking / frozen-lane freezing,
+  - Armijo/Wolfe line-search dispatch,
+  - the curvature guard (skip the quasi-Newton update when δxᵀδg ≈ 0,
+    DESIGN.md §8),
+  - the required_c stop protocol, with the `pcount` hook through which the
+    distributed driver plugs a cross-device psum (core/distributed.py),
+  - status assignment (CONVERGED / DIVERGED / STOPPED),
+  - chunked lane execution (below).
+
+What *varies* between solvers — how the search direction is produced — is a
+`DirectionStrategy`: `init_state / direction / update_state`. core/bfgs.py
+implements it with a dense inverse Hessian (DenseBFGS), core/lbfgs.py with
+the circular-buffer two-loop recursion (LBFGS). Strategies register in a
+small solver registry so configuration can select them by name
+(`ZeusOptions(solver="lbfgs")`).
+
+Chunked lane execution
+----------------------
+A monolithic `vmap` over B lanes materialises O(B·D²) of transient state per
+sweep (dense-H temporaries, line-search trial batches) — the memory wall both
+the ZEUS paper (§IV-C) and Zhou–Lange–Suchard (arXiv:1003.3272) identify for
+batched second-order methods. With `lane_chunk=C` the engine runs each sweep
+as `lax.map` over ceil(B/C) vmapped chunks: transient peak drops to O(C·D²)
+while the stop counts stay sweep-synchronized across chunks (every chunk
+advances one sweep, then the counts — and the `pcount` collective — see the
+whole swarm). Chunked and monolithic runs therefore take the same sweeps
+under the same stop protocol; per-lane numerics agree only up to XLA
+fusion/reassociation differences (fp32 ULPs, amplifiable on chaotic
+objectives), not bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import value_and_grad_fn
+from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+
+# status codes, matching the paper's result.status
+DIVERGED = 0  # hit iter_max without |g| < theta (or NaN/Inf escape)
+CONVERGED = 1
+STOPPED = 2  # stop-flag: other lanes filled required_c first
+
+_CURV_EPS = 1e-10
+
+
+class BFGSResult(NamedTuple):
+    """Result of one multistart solve (name kept from the seed API)."""
+
+    x: jnp.ndarray  # (B, D) final iterates
+    fval: jnp.ndarray  # (B,)
+    grad_norm: jnp.ndarray  # (B,)
+    status: jnp.ndarray  # (B,) int32 in {DIVERGED, CONVERGED, STOPPED}
+    iterations: jnp.ndarray  # scalar — sweeps taken
+    n_converged: jnp.ndarray  # scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Solver-independent knobs of the multistart driver."""
+
+    iter_max: int = 100
+    theta: float = 1e-5  # gradient-norm convergence threshold Θ
+    required_c: Optional[int] = None  # stop once this many lanes converged
+    ls_iters: int = 20
+    ls_c1: float = 0.3
+    linesearch: str = "armijo"  # "armijo" (paper) | "wolfe" (beyond-paper)
+    ad_mode: str = "forward"  # "forward" (paper) | "reverse" (beyond-paper)
+    lane_chunk: Optional[int] = None  # None = one monolithic vmap
+
+
+class DirectionStrategy(Protocol):
+    """How a solver produces search directions. State is any pytree carried
+    per lane (dense H for BFGS, (s, y, ρ) ring buffers for L-BFGS)."""
+
+    def init_state(self, x0: jnp.ndarray) -> Any:
+        """Per-lane direction state for a fresh start at x0."""
+        ...
+
+    def direction(self, state: Any, g: jnp.ndarray) -> jnp.ndarray:
+        """Search direction p from the current state and gradient."""
+        ...
+
+    def update_state(self, state: Any, dx: jnp.ndarray, dg: jnp.ndarray) -> Any:
+        """Absorb the secant pair (δx, δg). The engine only calls this with
+        curvature-safe pairs and discards the result when the guard trips."""
+        ...
+
+
+class Lane(NamedTuple):
+    """One optimization lane: shared fields + the strategy's state pytree."""
+
+    x: jnp.ndarray
+    f: jnp.ndarray
+    g: jnp.ndarray
+    converged: jnp.ndarray  # bool
+    failed: jnp.ndarray  # bool (NaN/Inf escape)
+    n_evals: jnp.ndarray  # int32 objective-eval counter (profiling)
+    direction_state: Any
+
+
+def lane_init(vg, strategy: DirectionStrategy, x0, theta) -> Lane:
+    fval, g = vg(x0)
+    gn = jnp.linalg.norm(g)
+    return Lane(
+        x=x0,
+        f=fval,
+        g=g,
+        converged=gn < theta,
+        failed=jnp.logical_not(jnp.isfinite(fval)),
+        n_evals=jnp.asarray(1 + x0.shape[0], jnp.int32),
+        direction_state=strategy.init_state(x0),
+    )
+
+
+def _guarded_update(strategy: DirectionStrategy, ds, dx, dg):
+    """Skip the update on curvature breakdown (δxᵀδg ≈ 0) to avoid NaNs.
+
+    The paper's CUDA kernel divides unguarded; any practical port needs this
+    guard (DESIGN.md §8). Safe stand-in vectors keep 1/0 out of the update
+    even on the discarded branch."""
+    curv = jnp.dot(dx, dg)
+    ok = jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
+    safe_dx = jnp.where(ok, dx, jnp.ones_like(dx))
+    safe_dg = jnp.where(ok, dg, jnp.ones_like(dg))
+    new = strategy.update_state(ds, safe_dx, safe_dg)
+    return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, ds)
+
+
+def lane_step(f, vg, strategy: DirectionStrategy, opts: EngineOptions,
+              lane: Lane) -> Lane:
+    """One quasi-Newton step (Alg. 4 lines 10-16) with masking for frozen
+    lanes: a converged/failed lane computes but keeps its old state."""
+    x, fv, g = lane.x, lane.f, lane.g
+    active = jnp.logical_not(jnp.logical_or(lane.converged, lane.failed))
+
+    p = strategy.direction(lane.direction_state, g)
+    # Safeguard: if p is not a descent direction (can happen after numerical
+    # breakdown), restart from steepest descent — standard practice.
+    descent = jnp.dot(p, g) < 0
+    p = jnp.where(descent, p, -g)
+
+    if opts.linesearch == "armijo":
+        ls = armijo_backtracking(
+            f, x, p, fv, g, c1=opts.ls_c1, max_iters=opts.ls_iters
+        )
+    elif opts.linesearch == "wolfe":
+        ls = wolfe_linesearch(f, x, p, fv, g, vg, max_iters=opts.ls_iters)
+    else:
+        raise ValueError(opts.linesearch)
+
+    x_new = x + ls.alpha * p
+    f_new, g_new = vg(x_new)
+    ds_new = _guarded_update(strategy, lane.direction_state, x_new - x,
+                             g_new - g)
+
+    gn = jnp.linalg.norm(g_new)
+    now_converged = gn < opts.theta
+    now_failed = jnp.logical_not(
+        jnp.logical_and(jnp.isfinite(f_new), jnp.all(jnp.isfinite(g_new)))
+    )
+
+    def keep(new, old):
+        return jnp.where(active, new, old)
+
+    return Lane(
+        x=keep(x_new, x),
+        f=keep(f_new, fv),
+        g=keep(g_new, g),
+        converged=jnp.where(active, now_converged, lane.converged),
+        failed=jnp.where(active, now_failed, lane.failed),
+        n_evals=lane.n_evals
+        + jnp.where(active, ls.n_evals + 1 + x.shape[0], 0).astype(jnp.int32),
+        direction_state=jax.tree.map(keep, ds_new, lane.direction_state),
+    )
+
+
+def run_multistart(
+    f: Callable,
+    x0: jnp.ndarray,  # (B, D) starting points (the post-PSO swarm)
+    strategy: DirectionStrategy,
+    opts: EngineOptions = EngineOptions(),
+    pcount: Optional[Callable] = None,  # cross-device converged-count reducer
+) -> BFGSResult:
+    """Run B independent quasi-Newton solves until required_c converge.
+
+    `pcount` lets the distributed driver plug a psum across the mesh so the
+    stop flag is global (see core/distributed.py); default is local sum.
+    With `opts.lane_chunk=C` the B lanes run as lax.map over ceil(B/C)
+    vmapped chunks (padded with frozen lanes when C ∤ B) — same sweeps, same
+    stop protocol, O(C·D²) transient memory.
+    """
+    B, D = x0.shape
+    required_c = opts.required_c if opts.required_c is not None else B
+    vg = value_and_grad_fn(f, opts.ad_mode)
+    count = pcount if pcount is not None else (lambda c: c)
+
+    init_one = lambda x: lane_init(vg, strategy, x, opts.theta)
+    step_one = functools.partial(lane_step, f, vg, strategy, opts)
+
+    C = opts.lane_chunk
+    chunked = C is not None and 0 < C < B
+    if chunked:
+        n_chunks = -(-B // C)
+        pad = n_chunks * C - B
+        if pad:
+            x0 = jnp.concatenate([x0, jnp.broadcast_to(x0[:1], (pad, D))])
+        lanes = jax.lax.map(jax.vmap(init_one), x0.reshape(n_chunks, C, D))
+        if pad:
+            # padding lanes are frozen-from-birth: never active, never counted
+            is_pad = (jnp.arange(n_chunks * C) >= B).reshape(n_chunks, C)
+            lanes = lanes._replace(
+                converged=jnp.logical_and(lanes.converged,
+                                          jnp.logical_not(is_pad)),
+                failed=jnp.logical_or(lanes.failed, is_pad),
+            )
+        sweep = lambda ls: jax.lax.map(jax.vmap(step_one), ls)
+    else:
+        lanes = jax.vmap(init_one)(x0)
+        sweep = jax.vmap(step_one)
+
+    def counts(lanes):
+        """Global (converged, active) lane counts. The collective (when the
+        distributed driver passes a psum) lives in the loop *body*, so the
+        while cond only reads replicated scalars from the carry."""
+        n_conv = count(jnp.sum(lanes.converged.astype(jnp.int32)))
+        n_act = count(
+            jnp.sum(
+                jnp.logical_not(
+                    jnp.logical_or(lanes.converged, lanes.failed)
+                ).astype(jnp.int32)
+            )
+        )
+        return n_conv, n_act
+
+    def cond(carry):
+        k, lanes, n_conv, n_act = carry
+        return jnp.logical_and(
+            k < opts.iter_max,
+            jnp.logical_and(n_conv < required_c, n_act > 0),
+        )
+
+    def body(carry):
+        k, lanes, _, _ = carry
+        lanes = sweep(lanes)
+        n_conv, n_act = counts(lanes)
+        return (k + 1, lanes, n_conv, n_act)
+
+    n_conv0, n_act0 = counts(lanes)
+    k, lanes, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0)
+    )
+
+    if chunked:
+        lanes = jax.tree.map(
+            lambda a: a.reshape((-1,) + a.shape[2:])[:B], lanes
+        )
+
+    status = jnp.where(
+        lanes.converged,
+        CONVERGED,
+        jnp.where(
+            jnp.logical_or(lanes.failed, k >= opts.iter_max), DIVERGED, STOPPED
+        ),
+    ).astype(jnp.int32)
+    return BFGSResult(
+        x=lanes.x,
+        fval=lanes.f,
+        grad_norm=jax.vmap(jnp.linalg.norm)(lanes.g),
+        status=status,
+        iterations=k,
+        n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Solver registry (idiom: models/registry.py). A solver factory maps its own
+# options object (or None for defaults) + a lane_chunk override to a ready
+# (strategy, EngineOptions) pair, so drivers select solvers by name.
+# ---------------------------------------------------------------------------
+SolverFactory = Callable[..., Tuple[DirectionStrategy, EngineOptions]]
+
+_SOLVERS: Dict[str, SolverFactory] = {}
+
+
+def register_solver(name: str):
+    """Decorator: `@register_solver("bfgs")` on a factory
+    `(solver_opts=None, lane_chunk=None) -> (strategy, EngineOptions)`."""
+
+    def deco(factory: SolverFactory) -> SolverFactory:
+        _SOLVERS[name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_builtin_solvers():
+    # the built-in strategies live in their own modules; importing them
+    # registers their factories (import cycle-safe: they import engine only)
+    from repro.core import bfgs, lbfgs  # noqa: F401
+
+
+def solver_names() -> Tuple[str, ...]:
+    _ensure_builtin_solvers()
+    return tuple(sorted(_SOLVERS))
+
+
+def get_solver(name: str) -> SolverFactory:
+    if name not in _SOLVERS:
+        _ensure_builtin_solvers()
+    if name not in _SOLVERS:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: {', '.join(sorted(_SOLVERS))}"
+        )
+    return _SOLVERS[name]

@@ -6,23 +6,28 @@ recursion keeps only the last `m` (δx, δg) pairs: O(mD) memory, O(mD) work
 per step — which is what makes multistart quasi-Newton applicable to the
 million-parameter sub-problems in §Arch-applicability (tiny-LM training).
 
-Implemented as fixed-size circular buffers so the whole solve stays inside
-lax.while_loop and vmaps across lanes exactly like core/bfgs.py.
+Since PR 1 the multistart driver (while loop, masking, stop protocol,
+curvature guard) lives in core/engine.py; this module only contributes the
+`LBFGS` DirectionStrategy — fixed-size circular (s, y, ρ) buffers plus the
+standard two-loop recursion, all shapes static so the whole solve stays
+inside lax.while_loop and vmaps/chunks across lanes like any strategy.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bfgs import CONVERGED, DIVERGED, STOPPED, BFGSResult
-from repro.core.dual import value_and_grad_fn
-from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+from repro.core import engine as E
+from repro.core.engine import (  # noqa: F401 — seed API re-export
+    CONVERGED,
+    DIVERGED,
+    STOPPED,
+    BFGSResult,
+)
 
-_CURV_EPS = 1e-10
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,47 +40,45 @@ class LBFGSOptions:
     ls_c1: float = 1e-4
     linesearch: str = "armijo"
     ad_mode: str = "reverse"  # reverse is the right default at high D
+    lane_chunk: Optional[int] = None  # chunked lane execution (engine)
 
 
-class LBFGSLane(NamedTuple):
-    x: jnp.ndarray  # (D,)
-    f: jnp.ndarray
-    g: jnp.ndarray  # (D,)
+class LBFGSMemory(NamedTuple):
+    """Per-lane direction state: circular secant-pair buffers."""
+
     s_buf: jnp.ndarray  # (m, D) δx history
     y_buf: jnp.ndarray  # (m, D) δg history
     rho_buf: jnp.ndarray  # (m,) 1/(sᵀy); 0 marks an empty slot
     head: jnp.ndarray  # int32 — next write slot
     n_pairs: jnp.ndarray  # int32 — valid pairs stored
-    converged: jnp.ndarray
-    failed: jnp.ndarray
 
 
-def two_loop_direction(lane: LBFGSLane) -> jnp.ndarray:
+def two_loop_direction(mem: LBFGSMemory, g: jnp.ndarray) -> jnp.ndarray:
     """Standard two-loop recursion over the circular (s, y) buffers."""
-    m = lane.s_buf.shape[0]
-    q = lane.g
+    m = mem.s_buf.shape[0]
+    q = g
 
     def newest_to_oldest(i):
         # i = 0 is the most recent pair
-        return (lane.head - 1 - i) % m
+        return (mem.head - 1 - i) % m
 
     def bwd(i, carry):
         q, alphas = carry
         idx = newest_to_oldest(i)
-        valid = i < lane.n_pairs
-        rho = lane.rho_buf[idx]
-        alpha = jnp.where(valid, rho * jnp.dot(lane.s_buf[idx], q), 0.0)
-        q = q - alpha * lane.y_buf[idx]
+        valid = i < mem.n_pairs
+        rho = mem.rho_buf[idx]
+        alpha = jnp.where(valid, rho * jnp.dot(mem.s_buf[idx], q), 0.0)
+        q = q - alpha * mem.y_buf[idx]
         return q, alphas.at[i].set(alpha)
 
     q, alphas = jax.lax.fori_loop(0, m, bwd, (q, jnp.zeros((m,), q.dtype)))
 
     # Initial Hessian scaling gamma = sᵀy / yᵀy of the newest pair
     newest = newest_to_oldest(0)
-    y = lane.y_buf[newest]
+    y = mem.y_buf[newest]
     gamma = jnp.where(
-        lane.n_pairs > 0,
-        jnp.dot(lane.s_buf[newest], y) / jnp.maximum(jnp.dot(y, y), 1e-30),
+        mem.n_pairs > 0,
+        jnp.dot(mem.s_buf[newest], y) / jnp.maximum(jnp.dot(y, y), 1e-30),
         1.0,
     )
     r = gamma * q
@@ -83,82 +86,66 @@ def two_loop_direction(lane: LBFGSLane) -> jnp.ndarray:
     def fwd(i, r):
         j = m - 1 - i  # oldest valid first
         idx = newest_to_oldest(j)
-        valid = j < lane.n_pairs
-        rho = lane.rho_buf[idx]
-        beta = jnp.where(valid, rho * jnp.dot(lane.y_buf[idx], r), 0.0)
-        return r + (alphas[j] - beta) * lane.s_buf[idx]
+        valid = j < mem.n_pairs
+        rho = mem.rho_buf[idx]
+        beta = jnp.where(valid, rho * jnp.dot(mem.y_buf[idx], r), 0.0)
+        return r + (alphas[j] - beta) * mem.s_buf[idx]
 
     r = jax.lax.fori_loop(0, m, fwd, r)
     return -r
 
 
-def _lane_init(vg, x0, theta, m):
-    fval, g = vg(x0)
-    D = x0.shape[0]
-    return LBFGSLane(
-        x=x0,
-        f=fval,
-        g=g,
-        s_buf=jnp.zeros((m, D), x0.dtype),
-        y_buf=jnp.zeros((m, D), x0.dtype),
-        rho_buf=jnp.zeros((m,), x0.dtype),
-        head=jnp.zeros((), jnp.int32),
-        n_pairs=jnp.zeros((), jnp.int32),
-        converged=jnp.linalg.norm(g) < theta,
-        failed=jnp.logical_not(jnp.isfinite(fval)),
+class LBFGS:
+    """DirectionStrategy with O(mD) circular-buffer state."""
+
+    def __init__(self, memory: int = 10):
+        self.memory = memory
+
+    def init_state(self, x0):
+        m, D = self.memory, x0.shape[0]
+        return LBFGSMemory(
+            s_buf=jnp.zeros((m, D), x0.dtype),
+            y_buf=jnp.zeros((m, D), x0.dtype),
+            rho_buf=jnp.zeros((m,), x0.dtype),
+            head=jnp.zeros((), jnp.int32),
+            n_pairs=jnp.zeros((), jnp.int32),
+        )
+
+    def direction(self, mem: LBFGSMemory, g):
+        return two_loop_direction(mem, g)
+
+    def update_state(self, mem: LBFGSMemory, dx, dg):
+        # the engine's curvature guard guarantees dot(dx, dg) > 0 here
+        m = mem.s_buf.shape[0]
+        slot = mem.head % m
+        return LBFGSMemory(
+            s_buf=mem.s_buf.at[slot].set(dx),
+            y_buf=mem.y_buf.at[slot].set(dg),
+            rho_buf=mem.rho_buf.at[slot].set(1.0 / jnp.dot(dx, dg)),
+            head=(mem.head + 1) % m,
+            n_pairs=jnp.minimum(mem.n_pairs + 1, m),
+        )
+
+
+def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
+                 ) -> E.EngineOptions:
+    return E.EngineOptions(
+        iter_max=opts.iter_max,
+        theta=opts.theta,
+        required_c=opts.required_c,
+        ls_iters=opts.ls_iters,
+        ls_c1=opts.ls_c1,
+        linesearch=opts.linesearch,
+        ad_mode=opts.ad_mode,
+        lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
     )
 
 
-def _lane_step(f, vg, opts: LBFGSOptions, lane: LBFGSLane) -> LBFGSLane:
-    active = jnp.logical_not(jnp.logical_or(lane.converged, lane.failed))
-    p = two_loop_direction(lane)
-    descent = jnp.dot(p, lane.g) < 0
-    p = jnp.where(descent, p, -lane.g)
-
-    if opts.linesearch == "armijo":
-        ls = armijo_backtracking(f, lane.x, p, lane.f, lane.g,
-                                 c1=opts.ls_c1, max_iters=opts.ls_iters)
-    else:
-        ls = wolfe_linesearch(f, lane.x, p, lane.f, lane.g, vg,
-                              max_iters=opts.ls_iters)
-
-    x_new = lane.x + ls.alpha * p
-    f_new, g_new = vg(x_new)
-    s, y = x_new - lane.x, g_new - lane.g
-    curv = jnp.dot(s, y)
-    ok = jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
-
-    m = lane.s_buf.shape[0]
-    slot = lane.head % m
-    s_buf = jnp.where(ok, lane.s_buf.at[slot].set(s), lane.s_buf)
-    y_buf = jnp.where(ok, lane.y_buf.at[slot].set(y), lane.y_buf)
-    rho_buf = jnp.where(
-        ok, lane.rho_buf.at[slot].set(1.0 / jnp.where(ok, curv, 1.0)), lane.rho_buf
-    )
-    head = jnp.where(ok, (lane.head + 1) % m, lane.head)
-    n_pairs = jnp.where(ok, jnp.minimum(lane.n_pairs + 1, m), lane.n_pairs)
-
-    gn = jnp.linalg.norm(g_new)
-    now_conv = gn < opts.theta
-    now_fail = jnp.logical_not(
-        jnp.logical_and(jnp.isfinite(f_new), jnp.all(jnp.isfinite(g_new)))
-    )
-
-    def keep(new, old):
-        return jnp.where(active, new, old)
-
-    return LBFGSLane(
-        x=keep(x_new, lane.x),
-        f=keep(f_new, lane.f),
-        g=keep(g_new, lane.g),
-        s_buf=keep(s_buf, lane.s_buf),
-        y_buf=keep(y_buf, lane.y_buf),
-        rho_buf=keep(rho_buf, lane.rho_buf),
-        head=jnp.where(active, head, lane.head),
-        n_pairs=jnp.where(active, n_pairs, lane.n_pairs),
-        converged=jnp.where(active, now_conv, lane.converged),
-        failed=jnp.where(active, now_fail, lane.failed),
-    )
+@E.register_solver("lbfgs")
+def make_lbfgs_solver(opts: Optional[LBFGSOptions] = None,
+                      lane_chunk: Optional[int] = None):
+    opts = opts if opts is not None else LBFGSOptions()
+    return LBFGS(opts.memory), _engine_opts(opts, lane_chunk)
 
 
 def batched_lbfgs(
@@ -167,50 +154,6 @@ def batched_lbfgs(
     opts: LBFGSOptions = LBFGSOptions(),
     pcount: Optional[Callable] = None,
 ) -> BFGSResult:
-    B = x0.shape[0]
-    required_c = opts.required_c if opts.required_c is not None else B
-    vg = value_and_grad_fn(f, opts.ad_mode)
-    count = pcount if pcount is not None else (lambda c: c)
-
-    init = jax.vmap(lambda x: _lane_init(vg, x, opts.theta, opts.memory))(x0)
-
-    def counts(lane):
-        n_conv = count(jnp.sum(lane.converged.astype(jnp.int32)))
-        n_act = count(
-            jnp.sum(
-                jnp.logical_not(
-                    jnp.logical_or(lane.converged, lane.failed)
-                ).astype(jnp.int32)
-            )
-        )
-        return n_conv, n_act
-
-    def cond(carry):
-        k, lane, n_conv, n_act = carry
-        return jnp.logical_and(
-            k < opts.iter_max, jnp.logical_and(n_conv < required_c, n_act > 0)
-        )
-
-    def body(carry):
-        k, lane, _, _ = carry
-        lane = jax.vmap(functools.partial(_lane_step, f, vg, opts))(lane)
-        n_conv, n_act = counts(lane)
-        return (k + 1, lane, n_conv, n_act)
-
-    n_conv0, n_act0 = counts(init)
-    k, lane, _, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((), jnp.int32), init, n_conv0, n_act0)
-    )
-    status = jnp.where(
-        lane.converged,
-        CONVERGED,
-        jnp.where(jnp.logical_or(lane.failed, k >= opts.iter_max), DIVERGED, STOPPED),
-    ).astype(jnp.int32)
-    return BFGSResult(
-        x=lane.x,
-        fval=lane.f,
-        grad_norm=jax.vmap(jnp.linalg.norm)(lane.g),
-        status=status,
-        iterations=k,
-        n_converged=jnp.sum(lane.converged.astype(jnp.int32)),
-    )
+    """Thin wrapper over engine.run_multistart with the LBFGS strategy."""
+    strategy, eopts = make_lbfgs_solver(opts)
+    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount)

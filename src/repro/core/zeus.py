@@ -1,9 +1,11 @@
 """The ZEUS driver (paper Alg. 1 sequential / Alg. 7 parallel).
 
-Phase 1: PSO improves N random starting points (skipped when iter_pso=0 —
-"randomness improved by PSO" is an *option*, §III-A2).
-Phase 2: multistart quasi-Newton (BFGS or L-BFGS) from the swarm, stopping
-early once `required_c` lanes have converged.
+Phase 1: PSO improves N random starting points (skipped entirely when
+`use_pso=False` — "randomness improved by PSO" is an *option*, §III-A2).
+Phase 2: multistart quasi-Newton from the swarm via the unified engine
+(core/engine.py); `solver="bfgs"|"lbfgs"` selects the direction strategy by
+name from the solver registry, `lane_chunk=C` bounds phase-2 transient
+memory to O(C·D²) via chunked lane execution.
 Finale:  parallel reduction for the best converged iterate (Alg. 7 line 10)
 plus the §VII-B confidence clustering, realized in core/clustering.py.
 """
@@ -18,10 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bfgs as bfgs_mod
-from repro.core import lbfgs as lbfgs_mod
-from repro.core.bfgs import BFGSOptions, BFGSResult, batched_bfgs, serial_bfgs
-from repro.core.lbfgs import LBFGSOptions, batched_lbfgs
+from repro.core import engine as engine_mod
+from repro.core.bfgs import BFGSOptions, BFGSResult, serial_bfgs
+from repro.core.engine import CONVERGED, get_solver, run_multistart
+from repro.core.lbfgs import LBFGSOptions
 from repro.core.pso import PSOOptions, run_pso, sequential_pso
 
 
@@ -29,9 +31,11 @@ from repro.core.pso import PSOOptions, run_pso, sequential_pso
 class ZeusOptions:
     pso: PSOOptions = PSOOptions()
     bfgs: BFGSOptions = BFGSOptions()
-    lbfgs: Optional[LBFGSOptions] = None  # set to use L-BFGS for phase 2
+    lbfgs: Optional[LBFGSOptions] = None  # back-compat: set => solver="lbfgs"
     use_pso: bool = True
     dtype: str = "float32"
+    solver: str = "bfgs"  # phase-2 strategy name in the engine registry
+    lane_chunk: Optional[int] = None  # overrides the solver opts' lane_chunk
 
 
 class ZeusResult(NamedTuple):
@@ -39,18 +43,56 @@ class ZeusResult(NamedTuple):
     best_f: jnp.ndarray  # ()
     raw: BFGSResult  # all lanes (for clustering / diagnostics)
     n_converged: jnp.ndarray
-    pso_best_f: jnp.ndarray  # global best after phase 1 (diagnostics)
+    pso_best_f: jnp.ndarray  # global best after phase 1 (inf if PSO skipped)
 
 
-def _phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
-    if opts.lbfgs is not None:
-        return batched_lbfgs(f, x0, opts.lbfgs, pcount=pcount)
-    return batched_bfgs(f, x0, opts.bfgs, pcount=pcount)
+def _solver_name(opts: ZeusOptions) -> str:
+    # opts.lbfgs predates the registry; setting it keeps selecting L-BFGS
+    if opts.lbfgs is not None and opts.solver == "bfgs":
+        return "lbfgs"
+    return opts.solver
+
+
+def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
+    """Phase 2 through the engine: registry lookup -> run_multistart."""
+    name = _solver_name(opts)
+    factory = get_solver(name)
+    if name == "lbfgs":
+        solver_opts = opts.lbfgs
+        if solver_opts is None:
+            # solver="lbfgs" selected by name alone: inherit the shared
+            # driver knobs (budget, stop protocol, line search) from the
+            # configured BFGS options instead of silently dropping them;
+            # memory/ls_c1/ad_mode keep their L-BFGS-tuned defaults.
+            b = opts.bfgs
+            solver_opts = LBFGSOptions(
+                iter_max=b.iter_bfgs,
+                theta=b.theta,
+                required_c=b.required_c,
+                ls_iters=b.ls_iters,
+                linesearch=b.linesearch,
+                lane_chunk=b.lane_chunk,
+            )
+    elif name == "bfgs":
+        solver_opts = opts.bfgs
+    else:
+        solver_opts = None  # third-party registrations use their defaults
+    strategy, eopts = factory(solver_opts, lane_chunk=opts.lane_chunk)
+    return run_multistart(f, x0, strategy, eopts, pcount=pcount)
+
+
+def uniform_starts(key, n: int, dim: int, lower: float, upper: float, dtype):
+    """use_pso=False fallback for both drivers: split the key so the starts
+    are decorrelated from what a swarm init with the same key would draw;
+    inf stands in for the absent PSO global best."""
+    _, k_starts = jax.random.split(key)
+    starts = jax.random.uniform(k_starts, (n, dim), dtype, lower, upper)
+    return starts, jnp.asarray(jnp.inf, dtype)
 
 
 def _select_best(res: BFGSResult) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Parallel reduction: best *converged* lane; fall back to best overall."""
-    fv = jnp.where(res.status == bfgs_mod.CONVERGED, res.fval, jnp.inf)
+    fv = jnp.where(res.status == engine_mod.CONVERGED, res.fval, jnp.inf)
     any_conv = jnp.any(jnp.isfinite(fv))
     fv = jnp.where(any_conv, fv, res.fval)
     i = jnp.argmin(fv)
@@ -67,19 +109,23 @@ def zeus(
 ) -> ZeusResult:
     """Single-host ZEUS (Alg. 7). jit-able end to end."""
     dtype = jnp.dtype(opts.dtype)
-    swarm = run_pso(f, key, dim, lower, upper, opts.pso, dtype=dtype)
-    # iter_pso=0 still initialises the swarm — pure random multistart.
-    starts = swarm.x if opts.use_pso else jax.random.uniform(
-        key, (opts.pso.n_particles, dim), dtype, lower, upper
-    )
-    res = _phase2(f, starts, opts)
+    if opts.use_pso:
+        # iter_pso=0 still initialises the swarm — pure random multistart.
+        swarm = run_pso(f, key, dim, lower, upper, opts.pso, dtype=dtype)
+        starts = swarm.x
+        pso_best_f = swarm.gf
+    else:
+        # no PSO phase at all — no wasted objective evaluations
+        starts, pso_best_f = uniform_starts(
+            key, opts.pso.n_particles, dim, lower, upper, dtype)
+    res = solve_phase2(f, starts, opts)
     best_x, best_f = _select_best(res)
     return ZeusResult(
         best_x=best_x,
         best_f=best_f,
         raw=res,
         n_converged=res.n_converged,
-        pso_best_f=swarm.gf,
+        pso_best_f=pso_best_f,
     )
 
 
@@ -99,6 +145,7 @@ class SequentialZeusResult(NamedTuple):
     n_converged: int
     n_started: int
     wall_time_s: float
+    n_failed: int = 0  # lanes that ended with a non-finite fval
 
 
 def sequential_zeus(
@@ -120,15 +167,23 @@ def sequential_zeus(
     required_c = opts.bfgs.required_c or len(starts)
     solve = jax.jit(functools.partial(serial_bfgs, f, opts=opts.bfgs))
 
+    # The incumbent is seeded from the first evaluated lane so callers always
+    # get an array back — even when every lane ends non-finite.
     best_x, best_f, c = None, np.inf, 0
-    n_started = 0
+    n_started, n_failed = 0, 0
     for x0 in starts:
         n_started += 1
         r = solve(jnp.asarray(x0, jnp.dtype(opts.dtype)))
         fv = float(r.fval)
-        if fv < best_f:
+        if not np.isfinite(fv):
+            n_failed += 1
+        # NaN compares false both ways, so a finite lane must explicitly
+        # displace a non-finite incumbent
+        better = (best_x is None or fv < best_f
+                  or (np.isfinite(fv) and not np.isfinite(best_f)))
+        if better:
             best_x, best_f = np.asarray(r.x), fv
-        if int(r.status) == bfgs_mod.CONVERGED:
+        if int(r.status) == CONVERGED:
             c += 1
             if c >= required_c:
                 break  # Alg. 1 line 17: stop early once enough runs converged
@@ -138,4 +193,5 @@ def sequential_zeus(
         n_converged=c,
         n_started=n_started,
         wall_time_s=time.perf_counter() - t0,
+        n_failed=n_failed,
     )

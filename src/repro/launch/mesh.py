@@ -7,7 +7,9 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.sharding import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -15,16 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Whatever devices this host actually has — smoke tests / examples."""
     n = len(jax.devices())
     mp = model_parallel if n % model_parallel == 0 else 1
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return make_mesh_compat((n // mp, mp), ("data", "model"))
 
 
 def mesh_device_count(mesh: Mesh) -> int:

@@ -76,19 +76,103 @@ VARIANTS = {
 }
 
 
+# zeus engine variant name -> (solver, lane_chunk, hessian_impl)
+ZEUS_VARIANTS = {
+    "bfgs": ("bfgs", None, "fast"),
+    "bfgs_ref": ("bfgs", None, "reference"),
+    "bfgs_c64": ("bfgs", 64, "fast"),
+    "bfgs_c256": ("bfgs", 256, "fast"),
+    "lbfgs": ("lbfgs", None, None),
+    "lbfgs_c64": ("lbfgs", 64, None),
+    "lbfgs_c256": ("lbfgs", 256, None),
+}
+
+
+def run_zeus_lab(args, results):
+    """Engine hillclimb: wall-time one multistart solve per variant
+    (solver strategy × lane_chunk × H-update impl) on a paper objective.
+
+        PYTHONPATH=src python -m repro.launch.perf_lab \\
+            --zeus rastrigin --dim 16 --lanes 1024 \\
+            --variants bfgs,bfgs_c256,lbfgs_c256
+    """
+    import time as _time
+
+    from repro.core.bfgs import BFGSOptions
+    from repro.core.engine import get_solver, run_multistart
+    from repro.core.lbfgs import LBFGSOptions
+    from repro.core.objectives import get_objective
+
+    obj = get_objective(args.zeus)
+    x0 = jax.random.uniform(jax.random.key(0), (args.lanes, args.dim),
+                            minval=obj.lower, maxval=obj.upper)
+    # --variants defaults to the train-lab's "baseline"; give --zeus its own
+    variants = ("bfgs,bfgs_c256,lbfgs_c256" if args.variants == "baseline"
+                else args.variants)
+    names = variants.split(",")
+    unknown = [n for n in names if n not in ZEUS_VARIANTS]
+    if unknown:  # reject before burning compile time on valid ones
+        raise SystemExit(
+            f"unknown zeus variant(s) {', '.join(map(repr, unknown))}; "
+            f"known: {', '.join(ZEUS_VARIANTS)}")
+    for name in names:
+        solver, chunk, impl = ZEUS_VARIANTS[name]
+        key = f"zeus|{args.zeus}|d{args.dim}|b{args.lanes}|i{args.iters}|{name}"
+        if key in results and results[key].get("status") == "ok":
+            print(f"[cached] {key}")
+            continue
+        if solver == "bfgs":
+            sopts = BFGSOptions(iter_bfgs=args.iters, theta=1e-4,
+                                hessian_impl=impl)
+        else:
+            sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4)
+        strategy, eopts = get_solver(solver)(sopts, lane_chunk=chunk)
+        run = jax.jit(lambda x: run_multistart(obj.fn, x, strategy, eopts))
+        res = jax.block_until_ready(run(x0))  # compile + warm
+        t0 = _time.perf_counter()
+        res = jax.block_until_ready(run(x0))
+        wall = _time.perf_counter() - t0
+        results[key] = {
+            "status": "ok", "variant": name, "wall_s": wall,
+            "sweeps": int(res.iterations),
+            "us_per_lane_sweep": wall * 1e6 / max(
+                int(res.iterations) * args.lanes, 1),
+            "n_converged": int(res.n_converged),
+        }
+        print(f"[{name}] {wall:.3f}s for {int(res.iterations)} sweeps × "
+              f"{args.lanes} lanes; n_conv={int(res.n_converged)}", flush=True)
+        with open(args.out, "w") as f:  # persist per variant, like main()
+            json.dump(results, f, indent=1)
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--variants", default="baseline")
     ap.add_argument("--out", default="perf_lab_results.json")
+    ap.add_argument("--zeus", default=None, metavar="OBJECTIVE",
+                    help="run the engine hillclimb on this objective "
+                         "instead of lowering a train/serve cell")
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--lanes", type=int, default=1024)
+    ap.add_argument("--iters", type=int, default=30)
     args = ap.parse_args()
 
     results = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             results = json.load(f)
+
+    if args.zeus:
+        results = run_zeus_lab(args, results)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        return
+    if not (args.arch and args.shape):
+        raise SystemExit("--arch/--shape required unless --zeus is given")
 
     for name in args.variants.split(","):
         overrides, tcfg = VARIANTS[name]

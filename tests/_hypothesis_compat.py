@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests degrade to skips, not a broken
+collection, when hypothesis is not installed.
+
+Test modules import `given / settings / st` from here instead of from
+hypothesis directly. With hypothesis present this is a pure re-export; when
+it is absent, `@given(...)` marks the test skipped and the strategy
+namespace returns inert placeholders so module-level strategy definitions
+(`st.integers(...)` etc.) still evaluate.
+"""
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _InertStrategies:
+        """st.<anything>(...) -> None placeholder; only ever fed to the
+        skipping `given` above, never drawn from."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()

@@ -3,18 +3,30 @@
 The main pytest process must see exactly ONE CPU device (smoke tests and
 benchmarks assume it); multi-device tests spawn subprocesses with their own
 --xla_force_host_platform_device_count (see test_sharding_and_distributed).
+
+hypothesis is optional: when installed we register the shared profile; when
+absent, collection must still succeed — property tests skip via
+tests/_hypothesis_compat.py instead of killing the whole run with a
+ModuleNotFoundError at import time.
 """
 import os
+import sys
 
 # fail fast if someone exported a device-count override into the test env
 os.environ.pop("XLA_FLAGS", None)
 
-from hypothesis import HealthCheck, settings
+# make `import _hypothesis_compat` work regardless of rootdir/ini settings
+sys.path.insert(0, os.path.dirname(__file__))
 
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow],
-)
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro")

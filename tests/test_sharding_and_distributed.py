@@ -13,7 +13,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.sharding import DEFAULT_RULES, logical_to_spec, resolve_axis
+from repro.sharding import (DEFAULT_RULES, logical_to_spec, make_mesh_compat,
+                            resolve_axis)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -30,8 +31,7 @@ def run_subprocess(code: str, devices: int = 8) -> str:
 
 class TestShardingRules:
     def _mesh(self):
-        return jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        return make_mesh_compat((1,), ("data",))
 
     def test_divisibility_fallback(self):
         mesh = self._mesh()
@@ -40,8 +40,7 @@ class TestShardingRules:
 
     def test_spec_no_duplicate_mesh_axes(self):
         import jax as _j
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((1, 1), ("data", "model"))
         spec = logical_to_spec(mesh, ("expert", "fsdp", "expert_mlp"),
                                (8, 64, 64))
         flat = []
@@ -55,9 +54,8 @@ class TestShardingRules:
 def test_multi_device_sharding_resolution():
     out = run_subprocess("""
         import jax
-        from repro.sharding import logical_to_spec
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding import logical_to_spec, make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         # kv_heads=2 does not divide model=4 -> replicated
         spec = logical_to_spec(mesh, ("fsdp", "kv_heads", "head_dim"), (64, 2, 16))
         assert spec[1] is None, spec
@@ -78,8 +76,8 @@ def test_distributed_zeus_multidevice():
         from repro.core import BFGSOptions, PSOOptions, ZeusOptions
         from repro.core.distributed import distributed_zeus
         from repro.core.objectives import sphere
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         opts = ZeusOptions(pso=PSOOptions(n_particles=128, iter_pso=4),
                            bfgs=BFGSOptions(iter_bfgs=60, theta=1e-4,
                                             required_c=64))
@@ -102,8 +100,8 @@ def test_distributed_equals_single_device_semantics():
         from repro.core import BFGSOptions, PSOOptions, ZeusOptions, STOPPED
         from repro.core.distributed import distributed_zeus
         from repro.core.objectives import sphere
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("data",))
         opts = ZeusOptions(use_pso=False,
                            pso=PSOOptions(n_particles=64, iter_pso=0),
                            bfgs=BFGSOptions(iter_bfgs=100, theta=1e-12,
@@ -178,8 +176,8 @@ def test_gradient_compression_cross_pod_psum():
         from repro.train.compress import (CompressionConfig,
                                           compress_and_reduce,
                                           init_error_state)
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("pod",))
         ccfg = CompressionConfig(kind="int8")
 
         def shard_step(g_local, e_local):
@@ -189,9 +187,10 @@ def test_gradient_compression_cross_pod_psum():
                                           psum, pmax)
             return red["w"], e["w"]
 
-        f = jax.jit(jax.shard_map(shard_step, mesh=mesh,
-                                  in_specs=(P("pod"), P("pod")),
-                                  out_specs=(P("pod"), P("pod"))))
+        from repro.core.distributed import shard_map_compat
+        f = jax.jit(shard_map_compat(shard_step, mesh=mesh,
+                                     in_specs=(P("pod"), P("pod")),
+                                     out_specs=(P("pod"), P("pod"))))
         # per-pod gradient shards (B=8 pods, each holds a (1, 64) slice)
         g = jax.random.normal(jax.random.key(0), (8, 64)) * 1e-2
         e0 = jnp.zeros((8, 64))
