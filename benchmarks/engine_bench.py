@@ -1,0 +1,110 @@
+"""Engine sweep-path benchmark: batched vs per_lane (ISSUE 2 trajectory).
+
+Measures one multistart solve per (B, D, sweep_mode) cell at a fixed sweep
+budget (theta ~ 0 so no lane converges early and both modes run the same
+number of sweeps) and writes BENCH_engine.json so the perf trajectory is
+tracked from this PR onward:
+
+  wall_s / wall_per_sweep_s   — median post-compile wall clock
+  evals_per_lane_sweep        — measured from BFGSResult.n_evals
+  ls_evals_per_lane_sweep     — line-search share of the above
+  eval_launches_per_sweep     — objective-eval launches the compiled sweep
+                                issues. batched = 2 by construction (one
+                                K-rung ladder call + one fused value+grad);
+                                per_lane ≥ mean accepted depth + 1 (the
+                                vmapped while_loop actually runs the *max*
+                                depth across lanes per sweep, so the mean
+                                is a conservative lower bound).
+  launch_ratio                — per_lane launches / batched launches
+
+ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
+equivalents per lane either way), so the ratio isolates the speculative
+ladder restructuring rather than forward-AD vs fused-kernel differences.
+
+On this CPU host Pallas interpret mode executes grid steps as a Python
+loop — meaningless for timing — so the suite forces REPRO_DISABLE_PALLAS=1
+and times the XLA-compiled jnp reference schedules of both modes, like the
+other kernel benches do; the launch-count columns are structural and hold
+for any backend.
+
+    PYTHONPATH=src python -m benchmarks.run --only engine_sweep
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.bfgs import BFGSOptions, batched_bfgs
+from repro.core.dual import grad_eval_cost
+from repro.core.objectives import get_objective
+from repro.kernels import ops as kernel_ops
+
+SWEEPS = 8
+CELLS = [(256, 16), (256, 64), (1024, 16), (1024, 64)]
+
+
+def _one_cell(obj, B, D, mode):
+    x0 = jax.random.uniform(jax.random.key(B + D), (B, D),
+                            minval=obj.lower, maxval=obj.upper)
+    opts = BFGSOptions(iter_bfgs=SWEEPS, theta=1e-30, ad_mode="reverse",
+                       sweep_mode=mode)
+    run = jax.jit(lambda x: batched_bfgs(obj.fn, x, opts))
+    us = timeit(run, x0)
+    res = run(x0)
+    vg_cost = 2 if mode == "batched" else grad_eval_cost(D, "reverse")
+    evals = float(np.mean(np.asarray(res.n_evals)))
+    per_sweep = (evals - vg_cost) / SWEEPS  # subtract the init gradient
+    ls_per_sweep = per_sweep - vg_cost
+    launches = 2.0 if mode == "batched" else ls_per_sweep + 1.0
+    return {
+        "wall_s": us / 1e6,
+        "sweeps": SWEEPS,
+        "wall_per_sweep_s": us / 1e6 / SWEEPS,
+        "evals_per_lane_sweep": per_sweep,
+        "ls_evals_per_lane_sweep": ls_per_sweep,
+        "eval_launches_per_sweep": launches,
+    }
+
+
+def engine_sweep(out_path: str = "BENCH_engine.json"):
+    """Batched vs per_lane sweep execution at B∈{256,1024}, D∈{16,64}."""
+    with kernel_ops.reference_kernels_off_tpu():  # see module docstring
+        return _engine_sweep(out_path)
+
+
+def _engine_sweep(out_path: str):
+    obj = get_objective("rosenbrock")  # deep backtracking: ladder matters
+    results = {}
+    for B, D in CELLS:
+        cell = {}
+        for mode in ("per_lane", "batched"):
+            cell[mode] = _one_cell(obj, B, D, mode)
+        cell["wall_speedup"] = (
+            cell["per_lane"]["wall_s"] / cell["batched"]["wall_s"])
+        cell["launch_ratio"] = (
+            cell["per_lane"]["eval_launches_per_sweep"]
+            / cell["batched"]["eval_launches_per_sweep"])
+        results[f"b{B}_d{D}"] = cell
+        emit(
+            f"engine_sweep_b{B}_d{D}",
+            cell["batched"]["wall_per_sweep_s"] * 1e6,
+            f"per_lane_us={cell['per_lane']['wall_per_sweep_s'] * 1e6:.1f};"
+            f"wall_speedup={cell['wall_speedup']:.2f}x;"
+            f"launch_ratio={cell['launch_ratio']:.2f}x",
+        )
+    payload = {
+        "objective": obj.name,
+        "sweeps": SWEEPS,
+        "ad_mode": "reverse",
+        "note": ("eval_launches_per_sweep: batched = ladder + fused vg = 2; "
+                 "per_lane = mean accepted backtrack depth + 1 (lower bound "
+                 "on the vmapped while_loop's max-depth rounds)"),
+        "cells": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path}", flush=True)
+    return payload

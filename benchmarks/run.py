@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 import argparse
 import sys
 
-from benchmarks import figures, kernels_bench
+from benchmarks import engine_bench, figures, kernels_bench
 
 SUITES = {
     "fig1": figures.fig1_rastrigin_dimension_sweep,
@@ -22,6 +22,8 @@ SUITES = {
     "ad_modes": kernels_bench.ad_mode_scaling,
     "engine_chunk": kernels_bench.engine_chunked_lanes,
     "engine_solvers": kernels_bench.engine_solver_strategies,
+    # writes BENCH_engine.json: the batched-vs-per_lane perf trajectory
+    "engine_sweep": engine_bench.engine_sweep,
 }
 
 

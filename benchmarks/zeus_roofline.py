@@ -65,9 +65,53 @@ def fused_sweep(f, vg, opts, state):
     return jax.vmap(lane)(state)
 
 
+def lower_batched_sweep(mesh):
+    """Lower one engine batched sweep (sweep_mode="batched"): speculative
+    ladder + fused value+grad + guarded fused H'+p' — the production hot
+    path this dry-run costs against the per-lane schedules."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.bfgs import DenseBFGS
+    from repro.core.engine import (BatchLanes, EngineOptions,
+                                   as_batched_strategy, batch_lanes_step)
+    from repro.core.objectives import as_batched
+
+    n_total = LANES_PER_DEV * 256
+    lane = NamedSharding(mesh, P(("data", "model")))
+    hsh = NamedSharding(mesh, P(("data", "model"), None, None))
+    state_abs = BatchLanes(
+        x=jax.ShapeDtypeStruct((n_total, D), jnp.float32),
+        f=jax.ShapeDtypeStruct((n_total,), jnp.float32),
+        g=jax.ShapeDtypeStruct((n_total, D), jnp.float32),
+        p=jax.ShapeDtypeStruct((n_total, D), jnp.float32),
+        converged=jax.ShapeDtypeStruct((n_total,), jnp.bool_),
+        failed=jax.ShapeDtypeStruct((n_total,), jnp.bool_),
+        n_evals=jax.ShapeDtypeStruct((n_total,), jnp.int32),
+        direction_state=jax.ShapeDtypeStruct((n_total, D, D), jnp.float32),
+    )
+    state_shard = BatchLanes(
+        x=lane, f=lane, g=lane, p=lane, converged=lane, failed=lane,
+        n_evals=lane, direction_state=hsh,
+    )
+    step = functools.partial(
+        batch_lanes_step,
+        as_batched(rastrigin, ad_mode="reverse"),
+        as_batched_strategy(DenseBFGS()),
+        EngineOptions(ad_mode="reverse", sweep_mode="batched"),
+    )
+    with mesh:
+        jitted = jax.jit(step, in_shardings=(state_shard,),
+                         donate_argnums=(0,))
+        compiled = jitted.lower(state_abs).compile()
+    return compiled
+
+
 def lower_sweep(mesh, impl: str):
     from jax.sharding import NamedSharding, PartitionSpec as P
-    opts = BFGSOptions(hessian_impl=impl if impl != "fused" else "fast")
+    if impl == "batched":
+        return lower_batched_sweep(mesh)
+    # ad_mode must match the vg built below so n_evals accounting is honest
+    opts = BFGSOptions(hessian_impl=impl if impl != "fused" else "fast",
+                       ad_mode="reverse")
     vg = value_and_grad_fn(rastrigin, "reverse")
 
     n_total = LANES_PER_DEV * 256
@@ -108,7 +152,7 @@ def main():
     mesh = make_production_mesh()
     out = {}
     print("impl,compute_s,memory_s,collective_s,bottleneck,hbm_GB_per_dev")
-    for impl in ("reference", "fast", "fused"):
+    for impl in ("reference", "fast", "fused", "batched"):
         compiled = lower_sweep(mesh, impl)
         r = analyze_hlo(compiled.as_text(), 256)
         compute_s = r["flops"] / PEAK_FLOPS

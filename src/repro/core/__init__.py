@@ -6,6 +6,7 @@ the solver registry; batched_bfgs / batched_lbfgs remain as thin wrappers.
 """
 from repro.core.bfgs import (
     BFGSOptions,
+    BatchedDenseBFGS,
     DenseBFGS,
     batched_bfgs,
     serial_bfgs,
@@ -16,16 +17,26 @@ from repro.core.engine import (
     CONVERGED,
     DIVERGED,
     STOPPED,
+    BatchedDirectionStrategy,
     BFGSResult,
     DirectionStrategy,
     EngineOptions,
+    VmappedStrategy,
+    as_batched_strategy,
     get_solver,
     register_solver,
     run_multistart,
     solver_names,
 )
 from repro.core.lbfgs import LBFGS, LBFGSOptions, batched_lbfgs
-from repro.core.objectives import OBJECTIVES, get_objective
+from repro.core.objectives import (
+    OBJECTIVES,
+    BatchedObjective,
+    as_batched,
+    get_objective,
+    objective_name_of,
+    register_batched_vg,
+)
 from repro.core.pso import PSOOptions, SwarmState, run_pso, sequential_pso
 from repro.core.zeus import (
     SequentialZeusResult,
@@ -43,10 +54,16 @@ __all__ = [
     "CONVERGED",
     "DIVERGED",
     "STOPPED",
+    "BatchedDenseBFGS",
+    "BatchedDirectionStrategy",
+    "BatchedObjective",
     "ConfidenceReport",
     "DenseBFGS",
     "DirectionStrategy",
     "EngineOptions",
+    "VmappedStrategy",
+    "as_batched",
+    "as_batched_strategy",
     "LBFGS",
     "LBFGSOptions",
     "OBJECTIVES",
@@ -61,6 +78,8 @@ __all__ = [
     "distributed_zeus",
     "get_objective",
     "get_solver",
+    "objective_name_of",
+    "register_batched_vg",
     "register_solver",
     "run_multistart",
     "run_pso",

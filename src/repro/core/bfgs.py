@@ -39,8 +39,12 @@ class BFGSOptions:
     ls_c1: float = 0.3
     linesearch: str = "armijo"  # "armijo" (paper) | "wolfe" (beyond-paper)
     ad_mode: str = "forward"  # "forward" (paper) | "reverse" (beyond-paper)
+    # per-lane H-update implementation. Batched sweeps ignore it: they
+    # always run the fused guarded kernel via kernels/ops (jnp reference
+    # under REPRO_DISABLE_PALLAS=1) — see DenseBFGS.as_batched.
     hessian_impl: str = "fast"  # "reference" | "fast" | "pallas"
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
+    sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +104,43 @@ class DenseBFGS:
     def update_state(self, H, dx, dg):
         return self._update(H, dx, dg)
 
+    def as_batched(self):
+        # the batched path has ONE update implementation — the fused guarded
+        # kernel (ops dispatcher; jnp ref under REPRO_DISABLE_PALLAS=1) —
+        # so hessian_impl, a per-lane knob, deliberately does not carry over
+        return BatchedDenseBFGS()
+
+
+class BatchedDenseBFGS:
+    """Batch-level DenseBFGS for the engine's batched sweep path.
+
+    The whole (B, D, D) inverse-Hessian stack goes through the fused Pallas
+    kernels: `ops.direction` for the initial p₀ = -H₀g₀ and
+    `ops.guarded_update_direction` for the per-sweep H' + p' = -H'g' pass —
+    H streams HBM once per sweep instead of once for the update and again
+    for the next direction. The curvature guard arrives as the engine's ok
+    mask and becomes ρ = 0 (with zeroed pairs): every update term vanishes,
+    so a guarded/frozen lane's H' = H exactly with no second read to undo.
+    """
+
+    def init_state_batch(self, X0):
+        B, D = X0.shape
+        return jnp.broadcast_to(jnp.eye(D, dtype=X0.dtype), (B, D, D))
+
+    def direction_batch(self, H, G):
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.direction(H, G)
+
+    def update_and_direction_batch(self, H, dX, dG, ok, G_new):
+        from repro.kernels import ops as kernel_ops
+
+        curv = jnp.sum(dX * dG, axis=-1)
+        rho = jnp.where(ok, 1.0 / jnp.where(ok, curv, 1.0), 0.0)
+        dXs = jnp.where(ok[:, None], dX, 0.0)
+        dGs = jnp.where(ok[:, None], dG, 0.0)
+        return kernel_ops.guarded_update_direction(H, dXs, dGs, G_new, rho)
+
 
 def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
                  ) -> E.EngineOptions:
@@ -112,6 +153,7 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         linesearch=opts.linesearch,
         ad_mode=opts.ad_mode,
         lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
+        sweep_mode=opts.sweep_mode,
     )
 
 
@@ -145,8 +187,8 @@ def _from_engine_lane(l: E.Lane) -> LaneState:
                      converged=l.converged, failed=l.failed, n_evals=l.n_evals)
 
 
-def _lane_init(f, vg, x0, theta) -> LaneState:
-    return _from_engine_lane(E.lane_init(vg, DenseBFGS(), x0, theta))
+def _lane_init(f, vg, x0, theta, ad_mode: str = "forward") -> LaneState:
+    return _from_engine_lane(E.lane_init(vg, DenseBFGS(), x0, theta, ad_mode))
 
 
 def _lane_step(f, vg, opts: BFGSOptions, state: LaneState) -> LaneState:

@@ -163,6 +163,7 @@ def distributed_zeus(
             status=lane_spec,
             iterations=P(),
             n_converged=P(),
+            n_evals=lane_spec,
         ),
         P(),  # pso gf
     )

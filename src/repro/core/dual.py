@@ -165,6 +165,20 @@ def sphere_dual(xd):
 #   forward  — jax.jvp per basis vector (vectorized Alg. 5; exact dual numbers)
 #   reverse  — jax.value_and_grad (beyond-paper option)
 # ---------------------------------------------------------------------------
+def grad_eval_cost(dim: int, mode: str = "forward") -> int:
+    """Objective-eval equivalents consumed by one value_and_grad call.
+
+    forward — Alg. 5 runs one primal + one jvp pass per input dimension;
+    reverse — one forward + one backward pass, ~2 evals regardless of dim.
+    Used by the engine's per-lane `n_evals` profiling counters so they track
+    the configured ad_mode instead of hard-coding the forward-mode cost."""
+    if mode == "forward":
+        return 1 + dim
+    if mode == "reverse":
+        return 2
+    raise ValueError(f"unknown AD mode: {mode}")
+
+
 def value_and_grad_fn(f: Callable, mode: str = "forward") -> Callable:
     if mode == "reverse":
         return jax.value_and_grad(f)

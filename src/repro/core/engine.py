@@ -25,6 +25,20 @@ the circular-buffer two-loop recursion (LBFGS). Strategies register in a
 small solver registry so configuration can select them by name
 (`ZeusOptions(solver="lbfgs")`).
 
+Sweep execution modes
+---------------------
+`EngineOptions.sweep_mode` selects how a sweep is executed. "per_lane"
+(default, seed behavior) vmaps the scalar `lane_step`. "batched" runs each
+sweep as whole-(B, D)/(B, D, D) passes: the speculative batched Armijo
+ladder (ONE objective launch for all K rungs of all lanes), one batched
+value+grad (fused Pallas kernels for registered objective names), and one
+fused guarded state update per sweep — the restructuring that makes the
+kernels in kernels/ the actual hot path (DESIGN.md §10). The ladder probes
+exactly the α sequence the sequential search does, so the accepted α is
+identical whenever the evaluators round identically (exact for the vmap
+fallback; fused-kernel objectives can flip a knife-edge accept by a ULP);
+iterates agree to fp32 tolerance (tests/test_batched_sweep.py).
+
 Chunked lane execution
 ----------------------
 A monolithic `vmap` over B lanes materialises O(B·D²) of transient state per
@@ -48,8 +62,12 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dual import value_and_grad_fn
-from repro.core.linesearch import armijo_backtracking, wolfe_linesearch
+from repro.core.dual import grad_eval_cost, value_and_grad_fn
+from repro.core.linesearch import (
+    armijo_backtracking,
+    armijo_backtracking_batch,
+    wolfe_linesearch,
+)
 
 # status codes, matching the paper's result.status
 DIVERGED = 0  # hit iter_max without |g| < theta (or NaN/Inf escape)
@@ -68,6 +86,7 @@ class BFGSResult(NamedTuple):
     status: jnp.ndarray  # (B,) int32 in {DIVERGED, CONVERGED, STOPPED}
     iterations: jnp.ndarray  # scalar — sweeps taken
     n_converged: jnp.ndarray  # scalar
+    n_evals: Optional[jnp.ndarray] = None  # (B,) per-lane objective evals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +101,12 @@ class EngineOptions:
     linesearch: str = "armijo"  # "armijo" (paper) | "wolfe" (beyond-paper)
     ad_mode: str = "forward"  # "forward" (paper) | "reverse" (beyond-paper)
     lane_chunk: Optional[int] = None  # None = one monolithic vmap
+    # "per_lane": vmap over scalar lane_step (seed behavior).
+    # "batched":  whole-(B, D)/(B, D, D) sweeps — speculative batched Armijo
+    #             + fused batch kernels; armijo only. Same accepted α ladder
+    #             and statuses as per_lane on fixed seeds (fp32-tolerance
+    #             iterates); enforced by tests/test_batched_sweep.py.
+    sweep_mode: str = "per_lane"
 
 
 class DirectionStrategy(Protocol):
@@ -114,7 +139,8 @@ class Lane(NamedTuple):
     direction_state: Any
 
 
-def lane_init(vg, strategy: DirectionStrategy, x0, theta) -> Lane:
+def lane_init(vg, strategy: DirectionStrategy, x0, theta,
+              ad_mode: str = "forward") -> Lane:
     fval, g = vg(x0)
     gn = jnp.linalg.norm(g)
     return Lane(
@@ -123,7 +149,9 @@ def lane_init(vg, strategy: DirectionStrategy, x0, theta) -> Lane:
         g=g,
         converged=gn < theta,
         failed=jnp.logical_not(jnp.isfinite(fval)),
-        n_evals=jnp.asarray(1 + x0.shape[0], jnp.int32),
+        # eval cost of one gradient follows the configured AD mode (forward:
+        # 1 + D passes, reverse: ~2) — not a hard-coded forward-mode count
+        n_evals=jnp.asarray(grad_eval_cost(x0.shape[0], ad_mode), jnp.int32),
         direction_state=strategy.init_state(x0),
     )
 
@@ -185,8 +213,171 @@ def lane_step(f, vg, strategy: DirectionStrategy, opts: EngineOptions,
         converged=jnp.where(active, now_converged, lane.converged),
         failed=jnp.where(active, now_failed, lane.failed),
         n_evals=lane.n_evals
-        + jnp.where(active, ls.n_evals + 1 + x.shape[0], 0).astype(jnp.int32),
+        + jnp.where(
+            active, ls.n_evals + grad_eval_cost(x.shape[0], opts.ad_mode), 0
+        ).astype(jnp.int32),
         direction_state=jax.tree.map(keep, ds_new, lane.direction_state),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched sweep path (sweep_mode="batched").
+#
+# The per-lane path above vmaps a *scalar* step: the fused batch kernels in
+# kernels/ are unreachable from it, and the per-lane Armijo while_loop makes
+# every lane pay the slowest lane's backtracking depth as masked iterations.
+# Here a sweep operates on whole (B, D) / (B, D, D) stacks: ONE speculative
+# batched line search (the full α ladder in one objective launch), ONE
+# batched value+grad, and ONE fused state update per sweep. The curvature
+# guard and frozen-lane masking lift to batch level: lanes whose update is
+# disabled pass ok=False and their state must come back unchanged.
+# ---------------------------------------------------------------------------
+class BatchedDirectionStrategy(Protocol):
+    """Batch-level counterpart of DirectionStrategy. State is a pytree whose
+    leaves carry a leading lane axis B."""
+
+    def init_state_batch(self, X0: jnp.ndarray) -> Any:
+        """Direction state stack for fresh starts X0 (B, D)."""
+        ...
+
+    def direction_batch(self, state: Any, G: jnp.ndarray) -> jnp.ndarray:
+        """Directions P (B, D) from the state stack and gradients G."""
+        ...
+
+    def update_and_direction_batch(
+        self, state: Any, dX: jnp.ndarray, dG: jnp.ndarray,
+        ok: jnp.ndarray, G_new: jnp.ndarray,
+    ) -> Tuple[Any, jnp.ndarray]:
+        """Absorb the secant pairs and produce the *next* directions in one
+        pass. `ok` (B,) bool disables the update per lane (curvature guard /
+        frozen lanes): where False the returned state must equal the input
+        state (and the pair may be garbage — implementations sanitize)."""
+        ...
+
+
+class VmappedStrategy:
+    """Generic BatchedDirectionStrategy adapter: vmap the scalar strategy.
+
+    Any registered solver gets the batched sweep's speculative line search
+    and single-launch objective evaluations this way; the direction/update
+    math stays per-lane vmapped. Strategies with a true batch-level kernel
+    (DenseBFGS) advertise it via `as_batched()` instead."""
+
+    def __init__(self, strategy: DirectionStrategy):
+        self.strategy = strategy
+
+    def init_state_batch(self, X0):
+        return jax.vmap(self.strategy.init_state)(X0)
+
+    def direction_batch(self, state, G):
+        return jax.vmap(self.strategy.direction)(state, G)
+
+    def update_and_direction_batch(self, state, dX, dG, ok, G_new):
+        # safe stand-ins keep 1/0 and inf·0 out of the discarded branch,
+        # mirroring _guarded_update's per-lane sanitisation
+        safe_dX = jnp.where(ok[:, None], dX, jnp.ones_like(dX))
+        safe_dG = jnp.where(ok[:, None], dG, jnp.ones_like(dG))
+        new = jax.vmap(self.strategy.update_state)(state, safe_dX, safe_dG)
+
+        def keep(n, o):
+            return jnp.where(ok.reshape(ok.shape + (1,) * (n.ndim - 1)), n, o)
+
+        state = jax.tree.map(keep, new, state)
+        return state, self.direction_batch(state, G_new)
+
+
+def as_batched_strategy(strategy: DirectionStrategy) -> BatchedDirectionStrategy:
+    """Resolve the batch-level variant: the strategy's own (as_batched) when
+    it has one, the generic vmapped adapter otherwise."""
+    factory = getattr(strategy, "as_batched", None)
+    if factory is not None:
+        return factory()
+    return VmappedStrategy(strategy)
+
+
+class BatchLanes(NamedTuple):
+    """Whole-swarm state for the batched sweep path. Unlike `Lane`, the
+    next search direction P is carried across sweeps: fused update kernels
+    emit (state', P') in one pass so state streams HBM once per sweep."""
+
+    x: jnp.ndarray  # (B, D)
+    f: jnp.ndarray  # (B,)
+    g: jnp.ndarray  # (B, D)
+    p: jnp.ndarray  # (B, D) next search direction
+    converged: jnp.ndarray  # (B,) bool
+    failed: jnp.ndarray  # (B,) bool
+    n_evals: jnp.ndarray  # (B,) int32
+    direction_state: Any  # batched pytree (leading lane axis)
+
+
+def batch_lanes_init(bobj, bstrategy: BatchedDirectionStrategy,
+                     X0: jnp.ndarray, theta) -> BatchLanes:
+    F, G = bobj.value_and_grad_batch(X0)
+    gn = jnp.linalg.norm(G, axis=-1)
+    state = bstrategy.init_state_batch(X0)
+    return BatchLanes(
+        x=X0,
+        f=F,
+        g=G,
+        p=bstrategy.direction_batch(state, G),
+        converged=gn < theta,
+        failed=jnp.logical_not(jnp.isfinite(F)),
+        n_evals=jnp.full(X0.shape[:1], bobj.vg_cost(X0.shape[-1]), jnp.int32),
+        direction_state=state,
+    )
+
+
+def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
+                     opts: EngineOptions, lanes: BatchLanes) -> BatchLanes:
+    """One sweep over the whole stack (Alg. 4 lines 10-16, batch level)."""
+    X, F, G, P = lanes.x, lanes.f, lanes.g, lanes.p
+    active = jnp.logical_not(jnp.logical_or(lanes.converged, lanes.failed))
+
+    # descent safeguard, rowwise (same rule as the per-lane path)
+    descent = jnp.sum(P * G, axis=-1) < 0
+    P = jnp.where(descent[:, None], P, -G)
+
+    ls = armijo_backtracking_batch(
+        bobj.value_batch, X, P, F, G, c1=opts.ls_c1, max_iters=opts.ls_iters
+    )
+    X_new = X + ls.alpha[:, None] * P
+    F_new, G_new = bobj.value_and_grad_batch(X_new)
+
+    dX, dG = X_new - X, G_new - G
+    curv = jnp.sum(dX * dG, axis=-1)
+    # curvature guard + frozen-lane freeze, lifted to batch level: a single
+    # ok mask decides which lanes' state advances
+    ok = jnp.logical_and(
+        active, jnp.logical_and(jnp.isfinite(curv), curv > _CURV_EPS)
+    )
+    state, P_next = bstrategy.update_and_direction_batch(
+        lanes.direction_state, dX, dG, ok, G_new
+    )
+
+    gn = jnp.linalg.norm(G_new, axis=-1)
+    now_converged = gn < opts.theta
+    now_failed = jnp.logical_not(
+        jnp.logical_and(
+            jnp.isfinite(F_new), jnp.all(jnp.isfinite(G_new), axis=-1)
+        )
+    )
+
+    def keep(new, old):
+        mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
+
+    return BatchLanes(
+        x=keep(X_new, X),
+        f=keep(F_new, F),
+        g=keep(G_new, G),
+        p=keep(P_next, lanes.p),
+        converged=jnp.where(active, now_converged, lanes.converged),
+        failed=jnp.where(active, now_failed, lanes.failed),
+        n_evals=lanes.n_evals
+        + jnp.where(
+            active, ls.n_evals + bobj.vg_cost(X.shape[-1]), 0
+        ).astype(jnp.int32),
+        direction_state=state,
     )
 
 
@@ -202,16 +393,39 @@ def run_multistart(
     `pcount` lets the distributed driver plug a psum across the mesh so the
     stop flag is global (see core/distributed.py); default is local sum.
     With `opts.lane_chunk=C` the B lanes run as lax.map over ceil(B/C)
-    vmapped chunks (padded with frozen lanes when C ∤ B) — same sweeps, same
-    stop protocol, O(C·D²) transient memory.
+    chunks (padded with frozen lanes when C ∤ B) — same sweeps, same stop
+    protocol, O(C·D²) transient memory. With `opts.sweep_mode="batched"`
+    each sweep (or chunk thereof) runs as whole-batch passes: speculative
+    batched Armijo + fused batch kernels instead of a vmapped scalar step.
     """
     B, D = x0.shape
     required_c = opts.required_c if opts.required_c is not None else B
-    vg = value_and_grad_fn(f, opts.ad_mode)
     count = pcount if pcount is not None else (lambda c: c)
 
-    init_one = lambda x: lane_init(vg, strategy, x, opts.theta)
-    step_one = functools.partial(lane_step, f, vg, strategy, opts)
+    if opts.sweep_mode == "batched":
+        if opts.linesearch != "armijo":
+            raise ValueError(
+                "sweep_mode='batched' supports linesearch='armijo' only "
+                f"(got {opts.linesearch!r}); use sweep_mode='per_lane'"
+            )
+        from repro.core.objectives import as_batched  # import-cycle-safe
+
+        bobj = as_batched(f, ad_mode=opts.ad_mode)
+        bstrategy = as_batched_strategy(strategy)
+        init_chunk = lambda X: batch_lanes_init(bobj, bstrategy, X, opts.theta)
+        step_chunk = functools.partial(batch_lanes_step, bobj, bstrategy, opts)
+    elif opts.sweep_mode == "per_lane":
+        vg = value_and_grad_fn(f, opts.ad_mode)
+        init_one = lambda x: lane_init(vg, strategy, x, opts.theta,
+                                       opts.ad_mode)
+        step_one = functools.partial(lane_step, f, vg, strategy, opts)
+        init_chunk = jax.vmap(init_one)
+        step_chunk = jax.vmap(step_one)
+    else:
+        raise ValueError(
+            f"unknown sweep_mode {opts.sweep_mode!r}; "
+            "expected 'per_lane' or 'batched'"
+        )
 
     C = opts.lane_chunk
     chunked = C is not None and 0 < C < B
@@ -220,7 +434,7 @@ def run_multistart(
         pad = n_chunks * C - B
         if pad:
             x0 = jnp.concatenate([x0, jnp.broadcast_to(x0[:1], (pad, D))])
-        lanes = jax.lax.map(jax.vmap(init_one), x0.reshape(n_chunks, C, D))
+        lanes = jax.lax.map(init_chunk, x0.reshape(n_chunks, C, D))
         if pad:
             # padding lanes are frozen-from-birth: never active, never counted
             is_pad = (jnp.arange(n_chunks * C) >= B).reshape(n_chunks, C)
@@ -229,10 +443,10 @@ def run_multistart(
                                           jnp.logical_not(is_pad)),
                 failed=jnp.logical_or(lanes.failed, is_pad),
             )
-        sweep = lambda ls: jax.lax.map(jax.vmap(step_one), ls)
+        sweep = lambda ls: jax.lax.map(step_chunk, ls)
     else:
-        lanes = jax.vmap(init_one)(x0)
-        sweep = jax.vmap(step_one)
+        lanes = init_chunk(x0)
+        sweep = step_chunk
 
     def counts(lanes):
         """Global (converged, active) lane counts. The collective (when the
@@ -285,6 +499,7 @@ def run_multistart(
         status=status,
         iterations=k,
         n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
+        n_evals=lanes.n_evals,
     )
 
 

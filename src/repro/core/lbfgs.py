@@ -41,6 +41,7 @@ class LBFGSOptions:
     linesearch: str = "armijo"
     ad_mode: str = "reverse"  # reverse is the right default at high D
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
+    sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
 
 
 class LBFGSMemory(NamedTuple):
@@ -138,6 +139,7 @@ def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
         linesearch=opts.linesearch,
         ad_mode=opts.ad_mode,
         lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
+        sweep_mode=opts.sweep_mode,
     )
 
 

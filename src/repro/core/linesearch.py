@@ -17,7 +17,10 @@ import jax.numpy as jnp
 
 class LineSearchResult(NamedTuple):
     alpha: jnp.ndarray  # accepted step size
-    f_new: jnp.ndarray  # f(x + alpha p)
+    # f at the accepted trial; when the search exhausts unaccepted, the last
+    # *evaluated* trial (alpha/shrink for armijo) — callers stepping to
+    # x + alpha p re-evaluate there
+    f_new: jnp.ndarray
     n_evals: jnp.ndarray  # objective evaluations consumed
 
 
@@ -51,11 +54,72 @@ def armijo_backtracking(
         cond, body, (jnp.zeros((), jnp.int32), jnp.asarray(alpha0, x.dtype),
                      f0, jnp.zeros((), bool))
     )
-    # If the loop exhausted without satisfying Armijo, f1 corresponds to the
-    # last trial alpha (paper keeps the final halved alpha); recompute f at
-    # the returned alpha only when it went unaccepted.
-    f_final = jnp.where(ok, f1, f(x + alpha * p))
-    return LineSearchResult(alpha=alpha, f_new=f_final, n_evals=i + 1)
+    # The accepted f1 is carried in the loop state, so no trailing
+    # re-evaluation: a jnp.where(ok, f1, f(x + alpha*p)) here would evaluate
+    # f unconditionally under jit (both branches execute) — one wasted eval
+    # per line search that n_evals never counted. When the loop exhausts
+    # unaccepted, alpha is the final halved step (paper semantics) and f1
+    # reports the last *evaluated* trial (alpha/shrink); callers that step
+    # to x + alpha p re-evaluate there anyway.
+    return LineSearchResult(alpha=alpha, f_new=f1, n_evals=i)
+
+
+class BatchLineSearchResult(NamedTuple):
+    alpha: jnp.ndarray  # (B,) accepted step sizes
+    f_new: jnp.ndarray  # (B,) f at the accepted (or last evaluated) trial
+    n_evals: jnp.ndarray  # scalar — objective evals consumed per lane
+
+
+def armijo_backtracking_batch(
+    value_batch: Callable,
+    X: jnp.ndarray,  # (B, D) current iterates
+    P: jnp.ndarray,  # (B, D) search directions
+    F0: jnp.ndarray,  # (B,)
+    G0: jnp.ndarray,  # (B, D)
+    c1: float = 0.3,
+    alpha0: float = 1.0,
+    shrink: float = 0.5,
+    max_iters: int = 20,
+) -> BatchLineSearchResult:
+    """Speculative batched Armijo: the whole geometric α-ladder at once.
+
+    The sequential search probes α₀·shrinkᵏ, k = 0..K-1, stopping at the
+    first Armijo-accepted trial — under vmap every lane pays the *slowest*
+    lane's backtracking depth as masked while_loop iterations, K divergent
+    HBM round-trips in the worst case. Here we evaluate the entire ladder
+    for all lanes as ONE (K·B, D) batched objective call and select each
+    lane's first accepted α by masked argmax. Because the ladder is exactly
+    the sequence the sequential search probes, the accepted α is identical
+    by construction (the trade: every lane pays K evals of *compute* for
+    one launch of *latency*). Exhaustion keeps the final halved α with the
+    last evaluated trial's f, matching `armijo_backtracking`.
+    """
+    B, D = X.shape
+    K = max_iters
+    dtype = X.dtype
+    if K <= 0:
+        return BatchLineSearchResult(
+            alpha=jnp.full((B,), alpha0, dtype),
+            f_new=F0,
+            n_evals=jnp.zeros((), jnp.int32),
+        )
+    ddir = jnp.sum(G0 * P, axis=-1)  # (B,) directional derivatives
+    # cumulative products reproduce the sequential repeated-multiply ladder
+    # bit-for-bit (alpha *= shrink), unlike shrink**k for non-binary shrink
+    steps = jnp.full((K,), shrink, dtype).at[0].set(1.0)
+    alphas = jnp.asarray(alpha0, dtype) * jnp.cumprod(steps)  # (K,)
+    trials = X[None] + alphas[:, None, None] * P[None]  # (K, B, D)
+    F = value_batch(trials.reshape(K * B, D)).reshape(K, B)
+    ok = F <= F0[None] + c1 * alphas[:, None] * ddir[None]  # (K, B)
+    any_ok = jnp.any(ok, axis=0)
+    k_acc = jnp.argmax(ok, axis=0)  # first accepted rung (0 when none)
+    alpha_acc = alphas[k_acc]
+    f_acc = jnp.take_along_axis(F, k_acc[None], axis=0)[0]
+    return BatchLineSearchResult(
+        alpha=jnp.where(any_ok, alpha_acc, alphas[-1] * shrink),
+        f_new=jnp.where(any_ok, f_acc, F[-1]),
+        n_evals=jnp.asarray(K, jnp.int32),
+    )
 
 
 def wolfe_linesearch(

@@ -8,10 +8,13 @@ used by benchmarks to compute the paper's Euclidean error metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.dual import grad_eval_cost, value_and_grad_fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,3 +154,120 @@ OBJECTIVES = {
 
 def get_objective(name: str) -> Objective:
     return OBJECTIVES[name]
+
+
+def objective_name_of(fn: Callable) -> Optional[str]:
+    """Reverse lookup: the registry name of a scalar objective, by identity.
+
+    Lets zeus()/distributed_zeus()/run_multistart recognise a named paper
+    objective handed to them as a bare callable (`obj.fn`) and route its
+    batched evaluations through the analytically-fused kernels."""
+    for name, obj in OBJECTIVES.items():
+        if obj.fn is fn:
+            return name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Batched objective protocol (engine sweep_mode="batched").
+#
+# The batched sweep path evaluates whole (B, D) stacks of iterates per call:
+# the speculative line-search ladder needs values only, the post-step
+# gradient needs (f, g) together. `BatchedObjective` is that protocol; the
+# registry below routes `value_and_grad_batch` through the fused Pallas
+# kernels (kernels/ops.fused_value_grad) for the analytically-fused names
+# and falls back to ONE vmap of value_and_grad_fn otherwise — either way a
+# single batched launch instead of B scalar ones.
+# ---------------------------------------------------------------------------
+BatchedVG = Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+
+# name -> (batched (f, g) implementation, optional value-only twin);
+# resolved lazily alongside the built-in fused kernel names so third-party
+# objectives can register their own.
+_BATCHED_VG: Dict[str, Tuple[BatchedVG, Optional[Callable]]] = {}
+
+
+def register_batched_vg(name: str, vg_batch: BatchedVG,
+                        value_batch: Optional[Callable] = None) -> None:
+    """Register a hand-fused `X (B, D) -> (f (B,), g (B, D))` for `name`.
+
+    Pass `value_batch` (X -> f (B,)) when vg_batch is an opaque kernel XLA
+    cannot dead-code-eliminate: the speculative Armijo ladder evaluates K·B
+    trial *values* per sweep, and without a value-only twin every rung pays
+    the gradient too. The twin MUST agree with vg_batch's f to fp rounding
+    (see _fused_impls_for)."""
+    _BATCHED_VG[name] = (vg_batch, value_batch)
+
+
+def _fused_impls_for(name: str):
+    """(value_and_grad_batch, value_batch) for a registered name, or None.
+
+    The two MUST agree on f to fp rounding: the speculative Armijo test
+    compares ladder values from value_batch against an F0 produced by
+    value_and_grad_batch, and a systematic evaluator offset there (≈1e-4 in
+    fp32) silently rejects every small-margin step near convergence."""
+    if name in _BATCHED_VG:
+        vg, value = _BATCHED_VG[name]
+        # without a registered value-only twin, take f from the vg call —
+        # correct (same rounding) and XLA drops the unused gradient unless
+        # the implementation is an opaque kernel
+        return vg, (value if value is not None else (lambda X: vg(X)[0]))
+    from repro.kernels import ops as kernel_ops  # deferred: pallas import
+
+    if name in kernel_ops.FUSED_OBJECTIVES:
+        import functools
+
+        return (
+            functools.partial(kernel_ops.fused_value_grad, name),
+            functools.partial(kernel_ops.fused_value, name),
+        )
+    return None
+
+
+class BatchedObjective:
+    """A scalar objective lifted to whole-batch evaluation.
+
+    value_batch(X)          -> f (B,)            one launch for B trials
+    value_and_grad_batch(X) -> (f (B,), g (B, D)) fused kernel or one vmap
+    vg_cost(dim)            -> objective-eval equivalents per lane per call
+                               (honest profiling for Lane.n_evals)
+    """
+
+    def __init__(self, fn: Callable, name: Optional[str] = None,
+                 ad_mode: str = "forward"):
+        self.fn = fn
+        self.name = name
+        self.ad_mode = ad_mode
+        impls = _fused_impls_for(name) if name is not None else None
+        if impls is not None:
+            self._fused_vg, self._value_batch = impls
+        else:
+            self._fused_vg = None
+            self._value_batch = jax.vmap(fn)
+            self._vg_batch = jax.vmap(value_and_grad_fn(fn, ad_mode))
+
+    @property
+    def fused(self) -> bool:
+        return self._fused_vg is not None
+
+    def value_batch(self, X: jnp.ndarray) -> jnp.ndarray:
+        return self._value_batch(X)
+
+    def value_and_grad_batch(self, X: jnp.ndarray):
+        if self._fused_vg is not None:
+            return self._fused_vg(X)
+        return self._vg_batch(X)
+
+    def vg_cost(self, dim: int) -> int:
+        # an analytically-fused kernel shares one traversal: ~2 evals
+        return 2 if self.fused else grad_eval_cost(dim, self.ad_mode)
+
+
+def as_batched(f, ad_mode: str = "forward") -> BatchedObjective:
+    """Resolve a callable (or Objective, or an already-batched objective)
+    to a BatchedObjective, picking the fused kernel for registered names."""
+    if isinstance(f, BatchedObjective):
+        return f
+    if isinstance(f, Objective):
+        return BatchedObjective(f.fn, name=f.name, ad_mode=ad_mode)
+    return BatchedObjective(f, name=objective_name_of(f), ad_mode=ad_mode)

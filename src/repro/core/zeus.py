@@ -36,6 +36,10 @@ class ZeusOptions:
     dtype: str = "float32"
     solver: str = "bfgs"  # phase-2 strategy name in the engine registry
     lane_chunk: Optional[int] = None  # overrides the solver opts' lane_chunk
+    # overrides the solver opts' sweep_mode ("per_lane" | "batched"); named
+    # objectives (obj.fn from the registry) automatically pick the fused
+    # value+grad kernels on the batched path
+    sweep_mode: Optional[str] = None
 
 
 class ZeusResult(NamedTuple):
@@ -72,12 +76,15 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
                 ls_iters=b.ls_iters,
                 linesearch=b.linesearch,
                 lane_chunk=b.lane_chunk,
+                sweep_mode=b.sweep_mode,
             )
     elif name == "bfgs":
         solver_opts = opts.bfgs
     else:
         solver_opts = None  # third-party registrations use their defaults
     strategy, eopts = factory(solver_opts, lane_chunk=opts.lane_chunk)
+    if opts.sweep_mode is not None:
+        eopts = dataclasses.replace(eopts, sweep_mode=opts.sweep_mode)
     return run_multistart(f, x0, strategy, eopts, pcount=pcount)
 
 

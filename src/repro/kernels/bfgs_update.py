@@ -78,6 +78,39 @@ def _update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, hout_ref, pout_ref
     pout_ref[0] = (-p).astype(pout_ref.dtype)
 
 
+def _guarded_update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, rho_ref,
+                                     hout_ref, pout_ref):
+    """Batch-level guarded variant: ρ comes in precomputed per lane.
+
+    The engine's curvature guard (DESIGN.md §8) lifts to the batch level by
+    passing ρ = 0 for guarded/frozen lanes: with ρ = 0 and zeroed (δx, δg)
+    every update term vanishes, so H' = H exactly and p' = -H g' — no
+    second read of H to undo a discarded update."""
+    H = h_ref[0]
+    dx = dx_ref[0]
+    dg = dg_ref[0]
+    gn = gnew_ref[0]
+    rho = rho_ref[0]
+
+    u = jax.lax.dot_general(
+        H, dg[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    s = jnp.dot(dg, u)
+    coef = rho * rho * s + rho
+    H_new = (
+        H
+        - rho * (u[:, None] * dx[None, :] + dx[:, None] * u[None, :])
+        + coef * (dx[:, None] * dx[None, :])
+    )
+    hout_ref[0] = H_new.astype(hout_ref.dtype)
+    p = jax.lax.dot_general(
+        H_new, gn[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    pout_ref[0] = (-p).astype(pout_ref.dtype)
+
+
 def bfgs_update_pallas(H, dx, dg, *, interpret=False):
     """Batched H' for H (B, D, D), dx/dg (B, D). D should be 128-aligned."""
     B, D, _ = H.shape
@@ -116,3 +149,29 @@ def update_direction_pallas(H, dx, dg, g_new, *, interpret=False):
         ],
         interpret=interpret,
     )(H, dx, dg, g_new)
+
+
+def guarded_update_direction_pallas(H, dx, dg, g_new, rho, *, interpret=False):
+    """Fused guarded H' + p' for the batched sweep path: rho (B,) per lane,
+    0 where the curvature guard (or frozen-lane masking) disables the update."""
+    B, D, _ = H.shape
+    return pl.pallas_call(
+        _guarded_update_direction_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, D, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, D), lambda b: (b, 0)),
+            pl.BlockSpec((1, D), lambda b: (b, 0)),
+            pl.BlockSpec((1, D), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, D), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D, D), H.dtype),
+            jax.ShapeDtypeStruct((B, D), H.dtype),
+        ],
+        interpret=interpret,
+    )(H, dx, dg, g_new, rho)

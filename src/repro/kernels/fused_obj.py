@@ -43,11 +43,63 @@ def _rosenbrock_kernel(x_ref, f_ref, g_ref):
     g_ref[...] = g.astype(g_ref.dtype)
 
 
+def _rastrigin_value_kernel(x_ref, f_ref):
+    x = x_ref[...]
+    a = 10.0
+    two_pi_x = (2.0 * jnp.pi) * x
+    f_ref[...] = (a * x.shape[-1] + jnp.sum(x * x - a * jnp.cos(two_pi_x), axis=-1)
+                  ).astype(f_ref.dtype)
+
+
+def _sphere_value_kernel(x_ref, f_ref):
+    x = x_ref[...]
+    f_ref[...] = jnp.sum(x * x, axis=-1).astype(f_ref.dtype)
+
+
+def _rosenbrock_value_kernel(x_ref, f_ref):
+    x = x_ref[...]
+    xi, xn = x[:, :-1], x[:, 1:]
+    d = xn - xi * xi
+    f_ref[...] = jnp.sum((1.0 - xi) ** 2 + 100.0 * d * d, axis=-1).astype(f_ref.dtype)
+
+
 _KERNELS = {
     "rastrigin": _rastrigin_kernel,
     "sphere": _sphere_kernel,
     "rosenbrock": _rosenbrock_kernel,
 }
+
+# Value-only twins of the fused kernels for the speculative line-search
+# ladder (K·B trial values, no gradients). Each repeats the value expression
+# of its fused kernel VERBATIM so both round identically: the Armijo accept
+# test compares ladder values against an F0 produced by the fused kernel,
+# and an evaluator mismatch there (≈1e-4 in fp32) systematically rejects
+# the small-margin steps near convergence.
+_VALUE_KERNELS = {
+    "rastrigin": _rastrigin_value_kernel,
+    "sphere": _sphere_value_kernel,
+    "rosenbrock": _rosenbrock_value_kernel,
+}
+
+
+def fused_value_pallas(name: str, x: jnp.ndarray, *,
+                       particle_tile: int = 256, interpret=False):
+    """x (N, D) -> f (N,): batched objective values in one pass."""
+    kernel = _VALUE_KERNELS[name]
+    N, D = x.shape
+    tn = min(particle_tile, N)
+    Np = ((N + tn - 1) // tn) * tn
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+    f = pl.pallas_call(
+        kernel,
+        grid=(Np // tn,),
+        in_specs=[pl.BlockSpec((tn, D), lambda n: (n, 0))],
+        out_specs=pl.BlockSpec((tn,), lambda n: (n,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), x.dtype),
+        interpret=interpret,
+    )(x)
+    return f[:N]
 
 
 def fused_value_grad_pallas(name: str, x: jnp.ndarray, *,
@@ -56,19 +108,25 @@ def fused_value_grad_pallas(name: str, x: jnp.ndarray, *,
     kernel = _KERNELS[name]
     N, D = x.shape
     tn = min(particle_tile, N)
-    while N % tn:
-        tn -= 1
-    return pl.pallas_call(
+    # Pad the particle axis up to a tile multiple instead of shrinking the
+    # tile to whatever divides N (degrades to tile=1 for prime N). Padded
+    # rows are all-zero particles: every kernel here is row-independent, so
+    # they compute garbage rows that are sliced off below — exact.
+    Np = ((N + tn - 1) // tn) * tn
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+    f, g = pl.pallas_call(
         kernel,
-        grid=(N // tn,),
+        grid=(Np // tn,),
         in_specs=[pl.BlockSpec((tn, D), lambda n: (n, 0))],
         out_specs=[
             pl.BlockSpec((tn,), lambda n: (n,)),
             pl.BlockSpec((tn, D), lambda n: (n, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N,), x.dtype),
-            jax.ShapeDtypeStruct((N, D), x.dtype),
+            jax.ShapeDtypeStruct((Np,), x.dtype),
+            jax.ShapeDtypeStruct((Np, D), x.dtype),
         ],
         interpret=interpret,
     )(x)
+    return f[:N], g[:N]

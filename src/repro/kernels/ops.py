@@ -9,6 +9,7 @@ Each op:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -16,9 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bfgs_update import bfgs_update_pallas, update_direction_pallas
+from repro.kernels.bfgs_update import (
+    bfgs_update_pallas,
+    guarded_update_direction_pallas,
+    update_direction_pallas,
+)
 from repro.kernels.direction import direction_pallas
-from repro.kernels.fused_obj import fused_value_grad_pallas
+from repro.kernels.fused_obj import fused_value_grad_pallas, fused_value_pallas
 from repro.kernels.pso_step import pso_step_pallas
 
 _LANE = 128  # TPU lane width
@@ -34,6 +39,27 @@ def _use_pallas() -> bool:
 
 def _interpret() -> bool:
     return not _on_tpu()
+
+
+@contextlib.contextmanager
+def reference_kernels_off_tpu():
+    """Force the jnp reference paths (REPRO_DISABLE_PALLAS=1) while inside
+    the context, off-TPU only; restores the previous value on exit.
+
+    For benchmarks: off-TPU, Pallas interpret mode executes kernel grids as
+    Python loops — meaningless for timing — so timed comparisons should run
+    the XLA-compiled jnp schedules instead (benchmarks/engine_bench.py,
+    launch/perf_lab.py --zeus)."""
+    prev = os.environ.get("REPRO_DISABLE_PALLAS")
+    if not _on_tpu():
+        os.environ["REPRO_DISABLE_PALLAS"] = "1"
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_DISABLE_PALLAS", None)
+        else:
+            os.environ["REPRO_DISABLE_PALLAS"] = prev
 
 
 def _pad_to(x: jnp.ndarray, size: int, axis: int) -> jnp.ndarray:
@@ -80,6 +106,29 @@ def bfgs_update_direction(H, dx, dg, g_new):
         _pad_to(dx, Dp, 1),
         _pad_to(dg, Dp, 1),
         _pad_to(g_new, Dp, 1),
+        interpret=_interpret(),
+    )
+    return Hn[:, :D, :D], p[:, :D]
+
+
+def guarded_update_direction(H, dx, dg, g_new, rho):
+    """Batch-level guarded fused pass for the engine's batched sweep path.
+
+    rho (B,) is the precomputed curvature factor 1/(δxᵀδg), already zeroed
+    for lanes whose update is disabled (curvature guard or frozen lane) —
+    with ρ = 0 and zeroed (δx, δg) the update is exactly H' = H, so the
+    guard costs no second read of H. Returns (H', p' = -H' g_new)."""
+    if not _use_pallas():
+        return ref.guarded_update_direction_ref(H, dx, dg, g_new, rho)
+    B, D, _ = H.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    Hn, p = guarded_update_direction_pallas(
+        Hp,
+        _pad_to(dx, Dp, 1),
+        _pad_to(dg, Dp, 1),
+        _pad_to(g_new, Dp, 1),
+        rho,
         interpret=_interpret(),
     )
     return Hn[:, :D, :D], p[:, :D]
@@ -134,6 +183,24 @@ def fused_value_grad(name: str, x: jnp.ndarray):
         # each zero pad column contributes A - A*cos(0) = 0 to f: exact.
         pass
     return f, g[:, :D]
+
+
+def fused_value(name: str, x: jnp.ndarray):
+    """x (N, D) -> f (N,): value-only twin of fused_value_grad.
+
+    Used by the speculative batched line search, where only trial values are
+    needed. MUST agree with fused_value_grad's f to fp rounding (the Armijo
+    test compares the two) — the value kernels repeat the fused kernels'
+    value expressions verbatim, and every fallback takes f from the same
+    code path fused_value_grad would use (XLA dead-code-eliminates the
+    untouched gradient)."""
+    if name not in FUSED_OBJECTIVES or not _use_pallas():
+        return getattr(ref, f"{name}_vg_ref")(x)[0]
+    N, D = x.shape
+    Dp = _padded_dim(D)
+    if name == "rosenbrock" and Dp != D:
+        return ref.rosenbrock_vg_ref(x)[0]
+    return fused_value_pallas(name, _pad_to(x, Dp, 1), interpret=_interpret())
 
 
 # -- flash attention -----------------------------------------------------------

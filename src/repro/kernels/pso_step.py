@@ -35,13 +35,18 @@ def pso_step_pallas(x, v, px, gx, r1, r2, w, c1, c2, *,
                     particle_tile: int = 256, interpret=False):
     N, D = x.shape
     tn = min(particle_tile, N)
-    while N % tn:
-        tn -= 1
+    # Pad the particle axis up to a tile multiple (zero rows are exact for
+    # this row-independent update and get sliced off) instead of shrinking
+    # the tile until it divides N — which degrades to tile=1 for prime N.
+    Np = ((N + tn - 1) // tn) * tn
+    if Np != N:
+        pad = ((0, Np - N), (0, 0))
+        x, v, px, r1, r2 = (jnp.pad(a, pad) for a in (x, v, px, r1, r2))
     gx2 = gx[None, :]  # (1, D) so the block machinery can tile it
     kernel = functools.partial(_pso_kernel, w, c1, c2)
-    return pl.pallas_call(
+    x_new, v_new = pl.pallas_call(
         kernel,
-        grid=(N // tn,),
+        grid=(Np // tn,),
         in_specs=[
             pl.BlockSpec((tn, D), lambda n: (n, 0)),
             pl.BlockSpec((tn, D), lambda n: (n, 0)),
@@ -55,8 +60,9 @@ def pso_step_pallas(x, v, px, gx, r1, r2, w, c1, c2, *,
             pl.BlockSpec((tn, D), lambda n: (n, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, D), x.dtype),
-            jax.ShapeDtypeStruct((N, D), v.dtype),
+            jax.ShapeDtypeStruct((Np, D), x.dtype),
+            jax.ShapeDtypeStruct((Np, D), v.dtype),
         ],
         interpret=interpret,
     )(x, v, px, gx2, r1, r2)
+    return x_new[:N], v_new[:N]

@@ -36,6 +36,25 @@ def update_direction_ref(H, dx, dg, g_new):
     return H_new, direction_ref(H_new, g_new)
 
 
+# -- guarded fused update + next direction ------------------------------------
+def guarded_update_direction_ref(H, dx, dg, g_new, rho):
+    """Batch-level guarded fused pass: ρ (B,) precomputed per lane (0 where
+    the update is disabled, so H' = H there), then p' = -H' g_new."""
+
+    def one(H, dx, dg, rho):
+        u = H @ dg
+        s = jnp.dot(dg, u)
+        coef = rho * rho * s + rho
+        return (
+            H
+            - rho * (jnp.outer(u, dx) + jnp.outer(dx, u))
+            + coef * jnp.outer(dx, dx)
+        )
+
+    H_new = jax.vmap(one)(H, dx, dg, rho)
+    return H_new, direction_ref(H_new, g_new)
+
+
 # -- pso_step ------------------------------------------------------------------
 def pso_step_ref(x, v, px, gx, r1, r2, w, c1, c2):
     """Alg. 9 velocity/position update (best bookkeeping happens outside)."""

@@ -76,15 +76,20 @@ VARIANTS = {
 }
 
 
-# zeus engine variant name -> (solver, lane_chunk, hessian_impl)
+# zeus engine variant name -> (solver, lane_chunk, hessian_impl, sweep_mode)
 ZEUS_VARIANTS = {
-    "bfgs": ("bfgs", None, "fast"),
-    "bfgs_ref": ("bfgs", None, "reference"),
-    "bfgs_c64": ("bfgs", 64, "fast"),
-    "bfgs_c256": ("bfgs", 256, "fast"),
-    "lbfgs": ("lbfgs", None, None),
-    "lbfgs_c64": ("lbfgs", 64, None),
-    "lbfgs_c256": ("lbfgs", 256, None),
+    "bfgs": ("bfgs", None, "fast", "per_lane"),
+    "bfgs_ref": ("bfgs", None, "reference", "per_lane"),
+    "bfgs_c64": ("bfgs", 64, "fast", "per_lane"),
+    "bfgs_c256": ("bfgs", 256, "fast", "per_lane"),
+    # batched sweep path: speculative ladder + fused batch kernels
+    "bfgs_batched": ("bfgs", None, "fast", "batched"),
+    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched"),
+    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched"),
+    "lbfgs": ("lbfgs", None, None, "per_lane"),
+    "lbfgs_c64": ("lbfgs", 64, None, "per_lane"),
+    "lbfgs_c256": ("lbfgs", 256, None, "per_lane"),
+    "lbfgs_batched": ("lbfgs", None, None, "batched"),
 }
 
 
@@ -94,8 +99,20 @@ def run_zeus_lab(args, results):
 
         PYTHONPATH=src python -m repro.launch.perf_lab \\
             --zeus rastrigin --dim 16 --lanes 1024 \\
-            --variants bfgs,bfgs_c256,lbfgs_c256
+            --variants bfgs,bfgs_batched,bfgs_c256,lbfgs_c256
+
+    Off-TPU, Pallas interpret mode executes kernel grids as Python loops —
+    meaningless for timing — so the hillclimb forces REPRO_DISABLE_PALLAS=1
+    there and compares the XLA-compiled jnp schedules of each variant
+    (restored afterwards; same policy as benchmarks/engine_bench.py).
     """
+    from repro.kernels.ops import reference_kernels_off_tpu
+
+    with reference_kernels_off_tpu():
+        return _run_zeus_lab(args, results)
+
+
+def _run_zeus_lab(args, results):
     import time as _time
 
     from repro.core.bfgs import BFGSOptions
@@ -107,8 +124,8 @@ def run_zeus_lab(args, results):
     x0 = jax.random.uniform(jax.random.key(0), (args.lanes, args.dim),
                             minval=obj.lower, maxval=obj.upper)
     # --variants defaults to the train-lab's "baseline"; give --zeus its own
-    variants = ("bfgs,bfgs_c256,lbfgs_c256" if args.variants == "baseline"
-                else args.variants)
+    variants = ("bfgs,bfgs_batched,bfgs_c256,lbfgs_c256"
+                if args.variants == "baseline" else args.variants)
     names = variants.split(",")
     unknown = [n for n in names if n not in ZEUS_VARIANTS]
     if unknown:  # reject before burning compile time on valid ones
@@ -116,16 +133,17 @@ def run_zeus_lab(args, results):
             f"unknown zeus variant(s) {', '.join(map(repr, unknown))}; "
             f"known: {', '.join(ZEUS_VARIANTS)}")
     for name in names:
-        solver, chunk, impl = ZEUS_VARIANTS[name]
+        solver, chunk, impl, sweep_mode = ZEUS_VARIANTS[name]
         key = f"zeus|{args.zeus}|d{args.dim}|b{args.lanes}|i{args.iters}|{name}"
         if key in results and results[key].get("status") == "ok":
             print(f"[cached] {key}")
             continue
         if solver == "bfgs":
             sopts = BFGSOptions(iter_bfgs=args.iters, theta=1e-4,
-                                hessian_impl=impl)
+                                hessian_impl=impl, sweep_mode=sweep_mode)
         else:
-            sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4)
+            sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4,
+                                 sweep_mode=sweep_mode)
         strategy, eopts = get_solver(solver)(sopts, lane_chunk=chunk)
         run = jax.jit(lambda x: run_multistart(obj.fn, x, strategy, eopts))
         res = jax.block_until_ready(run(x0))  # compile + warm

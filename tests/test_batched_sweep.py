@@ -1,0 +1,318 @@
+"""Batched-vs-per-lane sweep parity (engine sweep_mode="batched").
+
+The refactor contract (ISSUE 2): the batched sweep path — speculative
+batched Armijo + fused batch kernels — accepts the SAME α ladder as the
+sequential per-lane search by construction, and reproduces per-lane
+statuses/stop sweeps on fixed seeds with fp32-tolerance iterates. On
+chaotic objectives (rastrigin) the two compiled programs' ULP differences
+amplify along the trajectory exactly as chunked-vs-monolithic runs do (see
+engine.py docstring), so those cases assert status/convergence parity on
+seeds where the fork stays below the convergence threshold.
+
+Run with REPRO_DISABLE_PALLAS=1 to exercise the jnp reference path (CI runs
+both legs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BFGSOptions,
+    LBFGSOptions,
+    batched_bfgs,
+    batched_lbfgs,
+)
+from repro.core.dual import value_and_grad_fn
+from repro.core.linesearch import armijo_backtracking, armijo_backtracking_batch
+from repro.core.objectives import (
+    BatchedObjective,
+    as_batched,
+    get_objective,
+    objective_name_of,
+    register_batched_vg,
+    rosenbrock,
+    sphere,
+)
+
+
+def _starts(name, B, dim, seed):
+    obj = get_objective(name)
+    return obj, jax.random.uniform(jax.random.key(seed), (B, dim),
+                                   minval=obj.lower, maxval=obj.upper)
+
+
+class TestAcceptedAlphaLadder:
+    """The speculative ladder accepts the exact α the sequential search
+    accepts — same trial sequence, first-accepted selection by argmax."""
+
+    @pytest.mark.parametrize("name,dim", [("sphere", 5), ("rastrigin", 3),
+                                          ("rosenbrock", 4)])
+    def test_alpha_matches_sequential(self, name, dim):
+        obj, X = _starts(name, 24, dim, seed=dim)
+        f = obj.fn
+        F0 = jax.vmap(f)(X)
+        G0 = jax.vmap(jax.grad(f))(X)
+        P = -G0
+        # make a few lanes non-descent so the exhaustion branch is hit too
+        P = P.at[::5].set(G0[::5] * 0.1)
+        seq = jax.vmap(
+            lambda x, p, f0, g0: armijo_backtracking(
+                f, x, p, f0, g0, c1=0.3, max_iters=20)
+        )(X, P, F0, G0)
+        bat = armijo_backtracking_batch(jax.vmap(f), X, P, F0, G0,
+                                        c1=0.3, max_iters=20)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(bat.alpha))
+
+    def test_exhaustion_keeps_final_halved_alpha(self):
+        # ascent direction on sphere: no rung ever accepts
+        X = jnp.ones((4, 3))
+        G0 = jax.vmap(jax.grad(sphere))(X)
+        P = G0  # ascent
+        F0 = jax.vmap(sphere)(X)
+        bat = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                        max_iters=20)
+        np.testing.assert_allclose(np.asarray(bat.alpha), 0.5 ** 20)
+        seq = jax.vmap(
+            lambda x, p, f0, g0: armijo_backtracking(
+                sphere, x, p, f0, g0, max_iters=20)
+        )(X, P, F0, G0)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(bat.alpha))
+
+    def test_sequential_counts_only_loop_evals(self):
+        """Satellite fix: no trailing re-evaluation — n_evals is the number
+        of trials actually probed, and f_new is the last probed value."""
+        x = jnp.array([2.0, -1.0])
+        g = jax.grad(sphere)(x)
+        res = armijo_backtracking(sphere, x, -g, sphere(x), g, max_iters=20)
+        # each loop iteration evaluates exactly once
+        assert int(res.n_evals) >= 1
+        trial = sphere(x + res.alpha * (-g))
+        np.testing.assert_allclose(float(res.f_new), float(trial), rtol=1e-6)
+
+
+class TestBatchedSweepParity:
+    """Full-solve parity across {objective} × {monolithic, lane_chunk}."""
+
+    def _run_pair(self, f, x0, chunk=None, **kw):
+        base = dict(iter_bfgs=kw.pop("iter_bfgs", 80),
+                    theta=kw.pop("theta", 1e-4), lane_chunk=chunk, **kw)
+        ref = batched_bfgs(f, x0, BFGSOptions(**base))
+        bat = batched_bfgs(f, x0, BFGSOptions(sweep_mode="batched", **base))
+        return ref, bat
+
+    @pytest.mark.parametrize("chunk", [None, 16])
+    def test_sphere(self, chunk):
+        obj, x0 = _starts("sphere", 32, 4, seed=3)
+        ref, bat = self._run_pair(obj.fn, x0, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        assert int(ref.iterations) == int(bat.iterations)
+        np.testing.assert_allclose(np.asarray(ref.x), np.asarray(bat.x),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("chunk", [None, 16])
+    def test_rosenbrock_fused(self, chunk):
+        """Rosenbrock's flat valley makes the *last* straggler's convergence
+        sweep knife-edge under ULP reordering (same caveat the chunked
+        tests carry): statuses and the convergence set must match exactly,
+        the stop sweep within a small band."""
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        ref, bat = self._run_pair(obj.fn, x0, chunk=chunk, iter_bfgs=100)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        assert abs(int(ref.iterations) - int(bat.iterations)) <= 5
+        np.testing.assert_allclose(np.asarray(ref.x), np.asarray(bat.x),
+                                   rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("chunk", [None, 10])
+    def test_unregistered_lambda_fallback(self, chunk):
+        """A non-registered callable takes the vmap(value_and_grad) fallback
+        — same evaluator as per-lane, so parity is tight."""
+        obj, x0 = _starts("rosenbrock", 24, 2, seed=7)
+        lam = lambda x: rosenbrock(x)  # noqa: E731 — breaks identity lookup
+        assert objective_name_of(lam) is None
+        ref, bat = self._run_pair(lam, x0, chunk=chunk, iter_bfgs=60)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        assert int(ref.iterations) == int(bat.iterations)
+        # iterate parity is asserted where it is well-defined: converged
+        # lanes. Lanes cut off mid-valley by the sweep cap drift chaotically
+        # between any two compiled programs (same caveat as lane_chunk).
+        conv = np.asarray(ref.status) == 1
+        assert conv.sum() >= 20
+        np.testing.assert_allclose(np.asarray(ref.x)[conv],
+                                   np.asarray(bat.x)[conv],
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_required_c_stop_sweep_exact(self):
+        """Deterministic early stop: two lanes start at the optimum, so the
+        required_c=2 stop fires on the same sweep in both modes."""
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,  # essentially at the optimum
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (14, 1)),  # slow valley
+        ])
+        ref, bat = self._run_pair(rosenbrock, x0, iter_bfgs=100,
+                                  required_c=2)
+        assert int(ref.iterations) == int(bat.iterations)
+        assert int(ref.n_converged) == int(bat.n_converged)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+
+    def test_rastrigin_fused_statuses(self):
+        """Chaotic objective: fused-kernel ULP forks can shift *when* a lane
+        crosses Θ, so assert the end state (statuses, convergence set), not
+        the sweep count — same contract the chunked-execution tests use."""
+        obj, x0 = _starts("rastrigin", 24, 4, seed=5)
+        ref, bat = self._run_pair(obj.fn, x0, iter_bfgs=120, theta=1e-3)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        assert int(ref.n_converged) == int(bat.n_converged)
+        np.testing.assert_allclose(np.asarray(ref.x), np.asarray(bat.x),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_lbfgs_vmapped_adapter(self):
+        """Strategies without a native batch kernel run through the generic
+        vmapped adapter and still get the speculative line search."""
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=11)
+        base = dict(iter_max=120, theta=1e-4)
+        ref = batched_lbfgs(obj.fn, x0, LBFGSOptions(**base))
+        bat = batched_lbfgs(obj.fn, x0,
+                            LBFGSOptions(sweep_mode="batched", **base))
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        assert abs(int(ref.iterations) - int(bat.iterations)) <= 8
+        np.testing.assert_allclose(np.asarray(ref.x), np.asarray(bat.x),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_disable_pallas_ref_leg(self, monkeypatch):
+        """The jnp reference path honors the same parity contract."""
+        monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=3)
+        ref, bat = self._run_pair(obj.fn, x0, iter_bfgs=100)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(bat.status))
+        np.testing.assert_allclose(np.asarray(ref.x), np.asarray(bat.x),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_batched_rejects_wolfe(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="armijo"):
+            batched_bfgs(obj.fn, x0,
+                         BFGSOptions(sweep_mode="batched", linesearch="wolfe"))
+
+    def test_unknown_sweep_mode_rejected(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="sweep_mode"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(sweep_mode="warp"))
+
+
+class TestBatchedObjectiveRegistry:
+    def test_named_objectives_pick_fused_kernels(self):
+        for name in ("sphere", "rastrigin", "rosenbrock"):
+            bobj = as_batched(get_objective(name).fn)
+            assert bobj.fused and bobj.name == name
+
+    def test_registered_but_unfused_falls_back(self):
+        bobj = as_batched(get_objective("ackley").fn)
+        assert bobj.name == "ackley" and not bobj.fused
+
+    def test_lambda_falls_back(self):
+        assert not as_batched(lambda x: jnp.sum(x)).fused
+
+    def test_fused_value_consistent_with_value_and_grad(self):
+        """The speculative Armijo compares value_batch trials against an F0
+        from value_and_grad_batch: the two must agree to fp rounding or
+        small-margin steps near convergence get systematically rejected."""
+        for name in ("sphere", "rastrigin", "rosenbrock"):
+            bobj = as_batched(get_objective(name).fn)
+            X = jax.random.uniform(jax.random.key(1), (33, 5),
+                                   minval=-4, maxval=4)
+            np.testing.assert_array_equal(
+                np.asarray(bobj.value_batch(X)),
+                np.asarray(bobj.value_and_grad_batch(X)[0]))
+
+    def test_register_custom_batched_vg(self):
+        def quartic(x):
+            return jnp.sum(x ** 4)
+
+        def quartic_vg(X):
+            return jnp.sum(X ** 4, axis=-1), 4.0 * X ** 3
+
+        register_batched_vg("quartic", quartic_vg)
+        bobj = BatchedObjective(quartic, name="quartic")
+        assert bobj.fused
+        X = jax.random.normal(jax.random.key(0), (7, 3))
+        f, g = bobj.value_and_grad_batch(X)
+        np.testing.assert_allclose(np.asarray(f),
+                                   np.asarray(jax.vmap(quartic)(X)),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(bobj.value_batch(X)),
+                                      np.asarray(f))
+
+    def test_register_custom_value_only_twin(self):
+        """An explicitly registered value-only twin is what value_batch runs
+        (so opaque vg kernels don't pay gradients on the Armijo ladder)."""
+        calls = []
+
+        def quintic(x):
+            return jnp.sum(x ** 5)
+
+        def quintic_vg(X):
+            return jnp.sum(X ** 5, axis=-1), 5.0 * X ** 4
+
+        def quintic_value(X):
+            calls.append(1)
+            return jnp.sum(X ** 5, axis=-1)
+
+        register_batched_vg("quintic", quintic_vg, value_batch=quintic_value)
+        bobj = BatchedObjective(quintic, name="quintic")
+        X = jax.random.normal(jax.random.key(1), (5, 2))
+        f = bobj.value_batch(X)
+        assert calls  # the registered twin was invoked
+        np.testing.assert_array_equal(
+            np.asarray(f), np.asarray(bobj.value_and_grad_batch(X)[0]))
+
+    def test_vg_cost_tracks_route(self):
+        fused = as_batched(get_objective("sphere").fn)
+        fallback = as_batched(lambda x: jnp.sum(x * x), ad_mode="forward")
+        rev = as_batched(lambda x: jnp.sum(x * x), ad_mode="reverse")
+        assert fused.vg_cost(16) == 2
+        assert fallback.vg_cost(16) == 17  # 1 + D forward passes
+        assert rev.vg_cost(16) == 2
+
+
+class TestNEvalsAccounting:
+    """Satellite: per-gradient eval cost derives from ad_mode, and the
+    per-lane counters surface in BFGSResult.n_evals."""
+
+    def test_init_cost_by_ad_mode(self):
+        obj, x0 = _starts("sphere", 4, 6, seed=0)
+        fwd = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=0,
+                                                   ad_mode="forward"))
+        rev = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=0,
+                                                   ad_mode="reverse"))
+        np.testing.assert_array_equal(np.asarray(fwd.n_evals), 7)  # 1 + D
+        np.testing.assert_array_equal(np.asarray(rev.n_evals), 2)
+
+    def test_batched_counts_full_ladder(self):
+        """Speculation is honest: every active lane pays the whole K-rung
+        ladder plus one fused value+grad per sweep."""
+        obj, x0 = _starts("sphere", 4, 6, seed=0)
+        res = batched_bfgs(
+            obj.fn, x0,
+            BFGSOptions(iter_bfgs=1, ls_iters=20, sweep_mode="batched"))
+        # init (fused: 2) + one sweep (ladder 20 + fused vg 2)
+        np.testing.assert_array_equal(np.asarray(res.n_evals), 24)
+
+    def test_frozen_lanes_stop_counting(self):
+        obj, x0 = _starts("sphere", 8, 3, seed=2)
+        a = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=1, theta=1e-4,
+                                                 sweep_mode="batched"))
+        b = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=50, theta=1e-4,
+                                                 sweep_mode="batched"))
+        # sphere converges every lane within a couple of sweeps; frozen
+        # lanes must not keep accruing ladder evals for 48 more sweeps
+        assert int(jnp.max(b.n_evals)) <= int(jnp.max(a.n_evals)) + 2 * 22

@@ -45,6 +45,34 @@ class TestBFGSUpdateKernel:
         np.testing.assert_allclose(np.asarray(p), np.asarray(pr), rtol=3e-4,
                                    atol=3e-4)
 
+    @pytest.mark.parametrize("B,D", [(3, 8), (5, 130)])
+    def test_guarded_update_direction(self, B, D):
+        """The batched sweep's guarded fused pass: ρ in, (H', p') out."""
+        H, dx, dg = _spd_hessians(jax.random.key(B + D), B, D, jnp.float32)
+        gn = jax.random.normal(jax.random.key(2), (B, D))
+        rho = 1.0 / jnp.sum(dx * dg, axis=-1)
+        Hn, p = ops.guarded_update_direction(H, dx, dg, gn, rho)
+        Hr, pr = ref.guarded_update_direction_ref(H, dx, dg, gn, rho)
+        np.testing.assert_allclose(np.asarray(Hn), np.asarray(Hr),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(pr),
+                                   rtol=3e-4, atol=2e-3)
+
+    def test_guarded_rho_zero_keeps_h_exactly(self):
+        """ρ = 0 with zeroed pairs must leave H bitwise unchanged and emit
+        p = -H g — that is how the engine's curvature guard and frozen-lane
+        masking lift into the kernel with no second read of H."""
+        H, dx, dg = _spd_hessians(jax.random.key(7), 3, 12, jnp.float32)
+        gn = jax.random.normal(jax.random.key(8), (3, 12))
+        rho = (1.0 / jnp.sum(dx * dg, axis=-1)).at[1].set(0.0)
+        dx = dx.at[1].set(0.0)
+        dg = dg.at[1].set(0.0)
+        Hn, p = ops.guarded_update_direction(H, dx, dg, gn, rho)
+        np.testing.assert_array_equal(np.asarray(Hn[1]), np.asarray(H[1]))
+        np.testing.assert_allclose(np.asarray(p[1]),
+                                   np.asarray(-(H[1] @ gn[1])),
+                                   rtol=2e-4, atol=2e-4)
+
     def test_preserves_symmetry_and_secant(self):
         """BFGS invariants: H' symmetric; secant H' δg = δx."""
         H, dx, dg = _spd_hessians(jax.random.key(3), 2, 8, jnp.float32)
@@ -115,6 +143,30 @@ class TestFusedObjectiveKernels:
         f_direct = ref.rastrigin_vg_ref(x)[0]
         np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_direct),
                                    rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("name", ops.FUSED_OBJECTIVES)
+    @pytest.mark.parametrize("N", [8, 251])  # 251 exercises particle padding
+    def test_value_only_twin_bitwise_consistent(self, name, N):
+        """fused_value must agree with fused_value_grad's f to fp rounding:
+        the speculative Armijo compares the two against each other."""
+        x = jax.random.uniform(jax.random.key(N), (N, 6), minval=-4, maxval=4)
+        f_v = ops.fused_value(name, x)
+        f_vg, _ = ops.fused_value_grad(name, x)
+        np.testing.assert_array_equal(np.asarray(f_v), np.asarray(f_vg))
+
+    @pytest.mark.parametrize("name", ops.FUSED_OBJECTIVES)
+    def test_prime_particle_count_padded_not_degraded(self, name):
+        """Prime N previously degraded the particle tile to 1; rows are now
+        padded to the tile multiple and the outputs sliced — exact."""
+        x = jax.random.uniform(jax.random.key(1), (257, 5), minval=-4,
+                               maxval=4)
+        f_k, g_k = ops.fused_value_grad(name, x)
+        f_r, g_r = getattr(ref, f"{name}_vg_ref")(x)
+        assert f_k.shape == (257,) and g_k.shape == (257, 5)
+        np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_kernels_disabled_env(monkeypatch):
