@@ -1,0 +1,121 @@
+"""Schema + perf-regression gate for BENCH_engine.json (CI bench-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.check_engine_bench BENCH_engine.json
+
+Validates the payload engine_bench.engine_sweep emits and fails (exit 1)
+when a perf floor regresses:
+
+  * every cell carries per_lane / batched / compacted metric blocks with
+    the expected keys and positive wall clocks;
+  * `launch_ratio` (per_lane objective launches per sweep over batched's 2)
+    must stay >= BENCH_LAUNCH_RATIO_FLOOR (default 1.5 — the PR-2
+    speculative-ladder win; the measured value on the reference config is
+    ~7.3x, so the floor only trips on a real structural regression);
+  * `tail_work_ratio` (compacted / uncompacted physical objective rows per
+    sweep once 75% of lanes are frozen) must stay <= BENCH_TAIL_WORK_CEIL
+    (default 0.5 — the active-lane compaction win; the expected value is
+    ~0.25: an 8-lane-in-32 active set rounds up to the B/4 bucket).
+
+Floors are env-tunable so a deliberate trade can relax them in one place
+(the workflow file) instead of editing this gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+MODE_KEYS = {
+    "wall_s",
+    "sweeps",
+    "wall_per_sweep_s",
+    "evals_per_lane_sweep",
+    "ls_evals_per_lane_sweep",
+    "eval_launches_per_sweep",
+}
+TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep"}
+
+
+def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
+    errors = []
+
+    def need(cond, msg):
+        if not cond:
+            errors.append(msg)
+
+    for key in ("objective", "sweeps", "ad_mode", "cells", "tail"):
+        need(key in payload, f"missing top-level key {key!r}")
+    cells = payload.get("cells") or {}
+    tails = payload.get("tail") or {}
+    need(len(cells) > 0, "no cells measured")
+    need(len(tails) > 0, "no tail cells measured")
+
+    for name, cell in cells.items():
+        for mode in ("per_lane", "batched", "compacted"):
+            block = cell.get(mode)
+            need(isinstance(block, dict), f"{name}: missing mode {mode!r}")
+            if not isinstance(block, dict):
+                continue
+            missing = MODE_KEYS - set(block)
+            need(not missing, f"{name}.{mode}: missing keys {sorted(missing)}")
+            need(block.get("wall_s", 0) > 0, f"{name}.{mode}: wall_s <= 0")
+        for mode in ("batched", "compacted"):
+            if isinstance(cell.get(mode), dict):
+                need(cell[mode].get("eval_rows", 0) > 0,
+                     f"{name}.{mode}: eval_rows not recorded")
+        ratio = cell.get("launch_ratio", 0.0)
+        need(
+            ratio >= launch_floor,
+            f"{name}: launch_ratio {ratio:.2f} below floor {launch_floor}",
+        )
+
+    for name, tail in tails.items():
+        for mode in ("uncompacted", "compacted"):
+            block = tail.get(mode)
+            need(isinstance(block, dict), f"tail.{name}: missing {mode!r}")
+            if not isinstance(block, dict):
+                continue
+            missing = TAIL_MODE_KEYS - set(block)
+            need(not missing,
+                 f"tail.{name}.{mode}: missing keys {sorted(missing)}")
+        ratio = tail.get("tail_work_ratio")
+        need(
+            isinstance(ratio, (int, float)) and 0 < ratio <= tail_ceil,
+            f"tail.{name}: tail_work_ratio {ratio!r} above ceiling {tail_ceil}",
+        )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_engine.json")
+    ap.add_argument(
+        "--launch-ratio-floor", type=float,
+        default=float(os.environ.get("BENCH_LAUNCH_RATIO_FLOOR", "1.5")))
+    ap.add_argument(
+        "--tail-work-ceil", type=float,
+        default=float(os.environ.get("BENCH_TAIL_WORK_CEIL", "0.5")))
+    args = ap.parse_args(argv)
+
+    with open(args.path) as f:
+        payload = json.load(f)
+    errors = check(payload, args.launch_ratio_floor, args.tail_work_ceil)
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    n_cells = len(payload["cells"])
+    ratios = [c["launch_ratio"] for c in payload["cells"].values()]
+    tails = [t["tail_work_ratio"] for t in payload["tail"].values()]
+    print(
+        f"OK: {n_cells} cell(s); launch_ratio min "
+        f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
+        f"tail_work_ratio max {max(tails):.3f} "
+        f"(ceiling {args.tail_work_ceil})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,9 @@
-"""Engine sweep-path benchmark: batched vs per_lane (ISSUE 2 trajectory).
+"""Engine sweep-path benchmark: batched vs per_lane vs compacted (ISSUE 3).
 
 Measures one multistart solve per (B, D, sweep_mode) cell at a fixed sweep
-budget (theta ~ 0 so no lane converges early and both modes run the same
+budget (theta ~ 0 so no lane converges early and every mode runs the same
 number of sweeps) and writes BENCH_engine.json so the perf trajectory is
-tracked from this PR onward:
+tracked and CI-gated (benchmarks/check_engine_bench.py):
 
   wall_s / wall_per_sweep_s   — median post-compile wall clock
   evals_per_lane_sweep        — measured from BFGSResult.n_evals
@@ -16,6 +16,17 @@ tracked from this PR onward:
                                 depth across lanes per sweep, so the mean
                                 is a conservative lower bound).
   launch_ratio                — per_lane launches / batched launches
+  eval_rows                   — physical objective rows the batched path
+                                evaluated (BFGSResult.eval_rows)
+  compact_overhead            — compacted wall / batched wall in the
+                                worst case for compaction (no lane ever
+                                freezes, the sweep always runs the top
+                                bucket — pure plan/gather/scatter cost)
+
+The `tail` section is the active-lane compaction criterion: cells where 75%
+of the lanes are frozen from init (exact-optimum starts), so the tail-phase
+objective work of a compacted run must drop to the active bucket —
+`tail_work_ratio` = compacted/uncompacted per-sweep rows, gated ≤ 0.5.
 
 ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
 equivalents per lane either way), so the ratio isolates the speculative
@@ -24,16 +35,22 @@ ladder restructuring rather than forward-AD vs fused-kernel differences.
 On this CPU host Pallas interpret mode executes grid steps as a Python
 loop — meaningless for timing — so the suite forces REPRO_DISABLE_PALLAS=1
 and times the XLA-compiled jnp reference schedules of both modes, like the
-other kernel benches do; the launch-count columns are structural and hold
-for any backend.
+other kernel benches do; the launch-count and row-count columns are
+structural and hold for any backend.
 
     PYTHONPATH=src python -m benchmarks.run --only engine_sweep
+
+BENCH_ENGINE_SMALL=1 shrinks the grid to one cell for the CI bench-smoke
+job (.github/workflows/ci.yml), which schema-checks the JSON and enforces
+the launch-ratio floor and tail-work ceiling via check_engine_bench.py.
 """
 from __future__ import annotations
 
 import json
+import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
@@ -43,14 +60,26 @@ from repro.core.objectives import get_objective
 from repro.kernels import ops as kernel_ops
 
 SWEEPS = 8
+LS_ITERS = 20
 CELLS = [(256, 16), (256, 64), (1024, 16), (1024, 64)]
+SMALL_CELLS = [(256, 16)]
+TAIL_FROZEN_FRAC = 0.75
 
 
-def _one_cell(obj, B, D, mode):
+def _cells():
+    return SMALL_CELLS if os.environ.get("BENCH_ENGINE_SMALL") == "1" else CELLS
+
+
+def _opts(mode, compact_every=0):
+    return BFGSOptions(iter_bfgs=SWEEPS, theta=1e-30, ad_mode="reverse",
+                       ls_iters=LS_ITERS, sweep_mode=mode,
+                       compact_every=compact_every)
+
+
+def _one_cell(obj, B, D, mode, compact_every=0):
     x0 = jax.random.uniform(jax.random.key(B + D), (B, D),
                             minval=obj.lower, maxval=obj.upper)
-    opts = BFGSOptions(iter_bfgs=SWEEPS, theta=1e-30, ad_mode="reverse",
-                       sweep_mode=mode)
+    opts = _opts(mode, compact_every)
     run = jax.jit(lambda x: batched_bfgs(obj.fn, x, opts))
     us = timeit(run, x0)
     res = run(x0)
@@ -66,11 +95,45 @@ def _one_cell(obj, B, D, mode):
         "evals_per_lane_sweep": per_sweep,
         "ls_evals_per_lane_sweep": ls_per_sweep,
         "eval_launches_per_sweep": launches,
+        "eval_rows": int(res.eval_rows),
     }
 
 
+def _tail_cell(obj, B, D):
+    """Compaction criterion cell: 75% of lanes frozen from init (they start
+    bit-exactly at the optimum, gradient 0), the rest never converge at
+    theta=1e-30 — so each mode runs all SWEEPS sweeps and the physical-row
+    counters isolate tail-phase objective work."""
+    n_frozen = int(B * TAIL_FROZEN_FRAC)
+    x_opt = jnp.asarray(np.asarray(obj.x_star(D)), jnp.float32)
+    hard = jax.random.uniform(jax.random.key(D), (B - n_frozen, D),
+                              minval=obj.lower, maxval=obj.upper)
+    x0 = jnp.concatenate([jnp.broadcast_to(x_opt, (n_frozen, D)), hard])
+
+    cell = {}
+    for label, ce in (("uncompacted", 0), ("compacted", 1)):
+        opts = _opts("batched", ce)
+        run = jax.jit(lambda x, o=opts: batched_bfgs(obj.fn, x, o))
+        us = timeit(run, x0)
+        res = run(x0)
+        # subtract the init pass: what's left is per-sweep ladder+vg rows
+        tail_rows = (int(res.eval_rows) - B) / SWEEPS
+        cell[label] = {
+            "wall_s": us / 1e6,
+            "eval_rows": int(res.eval_rows),
+            "rows_per_sweep": tail_rows,
+        }
+    cell["frozen_frac"] = TAIL_FROZEN_FRAC
+    cell["tail_work_ratio"] = (
+        cell["compacted"]["rows_per_sweep"]
+        / cell["uncompacted"]["rows_per_sweep"])
+    cell["wall_speedup"] = (
+        cell["uncompacted"]["wall_s"] / cell["compacted"]["wall_s"])
+    return cell
+
+
 def engine_sweep(out_path: str = "BENCH_engine.json"):
-    """Batched vs per_lane sweep execution at B∈{256,1024}, D∈{16,64}."""
+    """Batched vs per_lane vs compacted sweep execution over (B, D) cells."""
     with kernel_ops.reference_kernels_off_tpu():  # see module docstring
         return _engine_sweep(out_path)
 
@@ -78,22 +141,36 @@ def engine_sweep(out_path: str = "BENCH_engine.json"):
 def _engine_sweep(out_path: str):
     obj = get_objective("rosenbrock")  # deep backtracking: ladder matters
     results = {}
-    for B, D in CELLS:
+    tails = {}
+    for B, D in _cells():
         cell = {}
         for mode in ("per_lane", "batched"):
             cell[mode] = _one_cell(obj, B, D, mode)
+        # compaction's worst case: nothing freezes, top bucket every sweep
+        cell["compacted"] = _one_cell(obj, B, D, "batched", compact_every=1)
         cell["wall_speedup"] = (
             cell["per_lane"]["wall_s"] / cell["batched"]["wall_s"])
         cell["launch_ratio"] = (
             cell["per_lane"]["eval_launches_per_sweep"]
             / cell["batched"]["eval_launches_per_sweep"])
+        cell["compact_overhead"] = (
+            cell["compacted"]["wall_s"] / cell["batched"]["wall_s"])
         results[f"b{B}_d{D}"] = cell
         emit(
             f"engine_sweep_b{B}_d{D}",
             cell["batched"]["wall_per_sweep_s"] * 1e6,
             f"per_lane_us={cell['per_lane']['wall_per_sweep_s'] * 1e6:.1f};"
             f"wall_speedup={cell['wall_speedup']:.2f}x;"
-            f"launch_ratio={cell['launch_ratio']:.2f}x",
+            f"launch_ratio={cell['launch_ratio']:.2f}x;"
+            f"compact_overhead={cell['compact_overhead']:.2f}x",
+        )
+        tail = _tail_cell(obj, B, D)
+        tails[f"b{B}_d{D}"] = tail
+        emit(
+            f"engine_tail_b{B}_d{D}",
+            tail["compacted"]["wall_s"] * 1e6,
+            f"tail_work_ratio={tail['tail_work_ratio']:.3f};"
+            f"tail_wall_speedup={tail['wall_speedup']:.2f}x",
         )
     payload = {
         "objective": obj.name,
@@ -101,8 +178,11 @@ def _engine_sweep(out_path: str):
         "ad_mode": "reverse",
         "note": ("eval_launches_per_sweep: batched = ladder + fused vg = 2; "
                  "per_lane = mean accepted backtrack depth + 1 (lower bound "
-                 "on the vmapped while_loop's max-depth rounds)"),
+                 "on the vmapped while_loop's max-depth rounds). tail: 75% "
+                 "of lanes frozen from init; tail_work_ratio = compacted / "
+                 "uncompacted physical rows per sweep (gate: <= 0.5)"),
         "cells": results,
+        "tail": tails,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -45,6 +45,8 @@ class BFGSOptions:
     hessian_impl: str = "fast"  # "reference" | "fast" | "pallas"
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
     sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
+    # active-lane compaction cadence for batched sweeps (0 = off; engine)
+    compact_every: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +156,7 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         ad_mode=opts.ad_mode,
         lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
         sweep_mode=opts.sweep_mode,
+        compact_every=opts.compact_every,
     )
 
 

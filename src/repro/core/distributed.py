@@ -120,8 +120,10 @@ def _local_zeus(
     # the global stop protocol (pcount = psum over the mesh) and per-device
     # chunked lanes when opts.lane_chunk is set
     res = solve_phase2(f, starts, opts, pcount=pcount)
-    # make the scalar diagnostics truly replicated across devices
-    res = res._replace(n_converged=pcount(res.n_converged))
+    # make the scalar diagnostics truly replicated across devices; eval_rows
+    # sums the physical batched-sweep rows over the mesh (0 under per_lane)
+    res = res._replace(n_converged=pcount(res.n_converged),
+                       eval_rows=pcount(res.eval_rows))
 
     # global best among converged lanes
     best_x, best_f = _select_best(res)
@@ -164,6 +166,7 @@ def distributed_zeus(
             iterations=P(),
             n_converged=P(),
             n_evals=lane_spec,
+            eval_rows=P(),
         ),
         P(),  # pso gf
     )

@@ -52,6 +52,32 @@ whole swarm). Chunked and monolithic runs therefore take the same sweeps
 under the same stop protocol; per-lane numerics agree only up to XLA
 fusion/reassociation differences (fp32 ULPs, amplifiable on chaotic
 objectives), not bitwise.
+
+Active-lane compaction
+----------------------
+Independent lanes converge at wildly different sweep counts, so the batched
+path's tail keeps paying the full O(B·K) ladder for lanes that are already
+frozen — the SIMT wasted-work tax Zhou–Lange–Suchard call out for batched
+GPU optimizers. With `compact_every=n > 0` (batched mode only) the engine
+gathers the still-active lanes into a dense prefix — a stable partition, so
+active lanes keep their relative order — and runs the sweep only on that
+prefix, scattering results back. Under jit the prefix length must be static,
+so active counts are padded up to power-of-two *buckets* (`lax.switch` over
+log2(B)+1 precompiled branch sizes, bounding jit cache growth); the
+partition/bucket choice is refreshed every `compact_every` sweeps and stays
+valid in between because frozen lanes never unfreeze. Tail objective work
+drops from O(B·K) to O(bucket(active)·K) per sweep while trajectories stay
+bit-identical to the uncompacted batched path: every evaluator on the path
+is row-independent, so an active lane computes the same values at any batch
+size, and frozen lanes inside the bucket padding are evaluated-but-masked
+exactly as they would be uncompacted (lanes beyond the prefix are not
+touched at all). Bit-identity additionally needs the evaluator's *codegen*
+to be batch-size-stable — true of the hand-written batched evaluators
+every named paper objective routes through (fused Pallas kernels and the
+row-wise jnp references); vmap-of-scalar AD fallback closures can be
+re-specialized by XLA with different FMA contraction per bucket size,
+where the contract degrades to the chunked-execution one (same statuses,
+fp32 iterates). See DESIGN.md §11 and tests/test_batched_sweep.py.
 """
 from __future__ import annotations
 
@@ -87,6 +113,15 @@ class BFGSResult(NamedTuple):
     iterations: jnp.ndarray  # scalar — sweeps taken
     n_converged: jnp.ndarray  # scalar
     n_evals: Optional[jnp.ndarray] = None  # (B,) per-lane objective evals
+    # scalar int32 — physical objective *rows* evaluated by the batched
+    # sweep path (ladder trials + value_and_grad rows, padding included);
+    # the tail-work metric active-lane compaction optimizes. Always 0 under
+    # sweep_mode="per_lane", where rows are not instrumented. Diagnostic
+    # only, and int32 because x64 is off in this codebase: wraps past ~2^31
+    # rows (~100M lane-sweeps at ls_iters=20, or less when the distributed
+    # driver psums per-device totals) — don't gate correctness on it at
+    # pod scale.
+    eval_rows: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +142,13 @@ class EngineOptions:
     #             and statuses as per_lane on fixed seeds (fp32-tolerance
     #             iterates); enforced by tests/test_batched_sweep.py.
     sweep_mode: str = "per_lane"
+    # Active-lane compaction cadence (batched mode only). 0 disables; n > 0
+    # refreshes the active-prefix partition and its power-of-two size bucket
+    # every n sweeps, so a solve's tail does O(bucket(active)·K) objective
+    # work instead of O(B·K). Bit-identical lanes either way (module
+    # docstring); 1 is a good default when enabling — the per-sweep plan
+    # cost is one argsort over lane flags, negligible next to the ladder.
+    compact_every: int = 0
 
 
 class DirectionStrategy(Protocol):
@@ -381,6 +423,70 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
     )
 
 
+# ---------------------------------------------------------------------------
+# Active-lane compaction (sweep_mode="batched", compact_every > 0).
+#
+# Frozen lanes still occupy ladder rows in the batched sweep; once most of
+# the swarm has converged the sweep is almost all masked work. Compaction
+# stably partitions the lane axis (active first), then runs the sweep on a
+# static-size prefix chosen from power-of-two buckets via lax.switch —
+# dynamic shapes are impossible under jit, and bucketing bounds the compile
+# cache at log2(B)+1 step specializations. The scatter back writes only the
+# prefix rows; lanes beyond the prefix are untouched. Exact parity with the
+# uncompacted path needs only row-independent batched evaluators (true of
+# every fused kernel, the jnp references, and the vmap fallback): an active
+# lane computes identical values at any batch size, and a frozen lane that
+# lands in the bucket padding is evaluated-but-masked exactly as it would
+# have been uncompacted.
+# ---------------------------------------------------------------------------
+def _active_mask(lanes) -> jnp.ndarray:
+    return jnp.logical_not(jnp.logical_or(lanes.converged, lanes.failed))
+
+
+def _compaction_buckets(n: int) -> Tuple[int, ...]:
+    """Power-of-two prefix sizes up to n; the top bucket is always n itself
+    (so a mostly-active swarm degrades to exactly the uncompacted sweep)."""
+    sizes = []
+    s = 1
+    while s < n:
+        sizes.append(s)
+        s *= 2
+    sizes.append(n)
+    return tuple(sizes)
+
+
+def _compaction_plan(active: jnp.ndarray, buckets: jnp.ndarray):
+    """(perm, bucket_idx) for the current active set: a stable partition
+    putting active lanes first (stable ⇒ active lanes keep their relative
+    order, which keeps the gathered rows' values independent of *which*
+    lanes froze) and the smallest bucket covering the active count."""
+    perm = jnp.argsort(jnp.logical_not(active), stable=True).astype(jnp.int32)
+    n_active = jnp.sum(active.astype(jnp.int32))
+    bidx = jnp.searchsorted(buckets, n_active, side="left")
+    return perm, jnp.minimum(bidx, buckets.shape[0] - 1).astype(jnp.int32)
+
+
+def _compacted_sweep(step_fn, buckets: Tuple[int, ...], lanes,
+                     perm: jnp.ndarray, bidx: jnp.ndarray):
+    """One sweep on the active prefix only: gather rows perm[:bucket], step,
+    scatter back. Valid as long as every active lane sits inside the prefix
+    — guaranteed between plan refreshes because frozen lanes never unfreeze
+    (converged/failed are sticky), so the active set only shrinks."""
+
+    def make_branch(size: int):
+        def branch(operands):
+            lanes, perm = operands
+            idx = perm[:size]
+            sub = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), lanes)
+            sub = step_fn(sub)
+            return jax.tree.map(lambda a, s: a.at[idx].set(s), lanes, sub)
+
+        return branch
+
+    return jax.lax.switch(bidx, [make_branch(s) for s in buckets],
+                          (lanes, perm))
+
+
 def run_multistart(
     f: Callable,
     x0: jnp.ndarray,  # (B, D) starting points (the post-PSO swarm)
@@ -396,11 +502,22 @@ def run_multistart(
     chunks (padded with frozen lanes when C ∤ B) — same sweeps, same stop
     protocol, O(C·D²) transient memory. With `opts.sweep_mode="batched"`
     each sweep (or chunk thereof) runs as whole-batch passes: speculative
-    batched Armijo + fused batch kernels instead of a vmapped scalar step.
+    batched Armijo + fused batch kernels instead of a vmapped scalar step;
+    `opts.compact_every=n > 0` additionally compacts each sweep (or chunk)
+    onto its active-lane prefix — bit-identical lanes, O(bucket(active)·K)
+    tail work (module docstring).
     """
     B, D = x0.shape
     required_c = opts.required_c if opts.required_c is not None else B
     count = pcount if pcount is not None else (lambda c: c)
+
+    if opts.compact_every < 0:
+        raise ValueError(f"compact_every must be >= 0 (got {opts.compact_every})")
+    if opts.compact_every > 0 and opts.sweep_mode != "batched":
+        raise ValueError(
+            "compact_every > 0 requires sweep_mode='batched' "
+            f"(got sweep_mode={opts.sweep_mode!r})"
+        )
 
     if opts.sweep_mode == "batched":
         if opts.linesearch != "armijo":
@@ -429,6 +546,7 @@ def run_multistart(
 
     C = opts.lane_chunk
     chunked = C is not None and 0 < C < B
+    batched = opts.sweep_mode == "batched"
     if chunked:
         n_chunks = -(-B // C)
         pad = n_chunks * C - B
@@ -444,40 +562,90 @@ def run_multistart(
                 failed=jnp.logical_or(lanes.failed, is_pad),
             )
         sweep = lambda ls: jax.lax.map(step_chunk, ls)
+        group, n_groups = C, n_chunks
     else:
         lanes = init_chunk(x0)
         sweep = step_chunk
+        group, n_groups = B, 1
+
+    # physical objective-row accounting (batched path only): each sweep
+    # evaluates (K ladder rows + 1 value+grad row) per lane in its group,
+    # padding lanes included — exactly the work compaction removes
+    K_ladder = max(opts.ls_iters, 0)
+    rows_full_sweep = jnp.asarray(n_groups * group * (K_ladder + 1), jnp.int32)
+    eval_rows0 = jnp.asarray(n_groups * group if batched else 0, jnp.int32)
+
+    compacting = batched and opts.compact_every > 0
+    if compacting:
+        buckets = _compaction_buckets(group)
+        buckets_arr = jnp.asarray(buckets, jnp.int32)
+        rows_arr = jnp.asarray([s * (K_ladder + 1) for s in buckets],
+                               jnp.int32)
+        plan_one = functools.partial(_compaction_plan, buckets=buckets_arr)
+        if chunked:
+            plan_fn = jax.vmap(plan_one)  # each chunk compacts independently
+
+            def compacted(lanes, perm, bidx):
+                new = jax.lax.map(
+                    lambda args: _compacted_sweep(step_chunk, buckets, *args),
+                    (lanes, perm, bidx),
+                )
+                return new, jnp.sum(rows_arr[bidx])
+        else:
+            plan_fn = plan_one
+
+            def compacted(lanes, perm, bidx):
+                return (
+                    _compacted_sweep(step_chunk, buckets, lanes, perm, bidx),
+                    rows_arr[bidx],
+                )
+
+        aux0 = plan_fn(_active_mask(lanes))
+    else:
+        aux0 = ()
 
     def counts(lanes):
         """Global (converged, active) lane counts. The collective (when the
         distributed driver passes a psum) lives in the loop *body*, so the
         while cond only reads replicated scalars from the carry."""
         n_conv = count(jnp.sum(lanes.converged.astype(jnp.int32)))
-        n_act = count(
-            jnp.sum(
-                jnp.logical_not(
-                    jnp.logical_or(lanes.converged, lanes.failed)
-                ).astype(jnp.int32)
-            )
-        )
+        n_act = count(jnp.sum(_active_mask(lanes).astype(jnp.int32)))
         return n_conv, n_act
 
     def cond(carry):
-        k, lanes, n_conv, n_act = carry
+        k, lanes, n_conv, n_act, _, _ = carry
         return jnp.logical_and(
             k < opts.iter_max,
             jnp.logical_and(n_conv < required_c, n_act > 0),
         )
 
     def body(carry):
-        k, lanes, _, _ = carry
-        lanes = sweep(lanes)
+        k, lanes, _, _, aux, rows = carry
+        if compacting:
+            # refresh the partition/bucket on boundary sweeps only — under
+            # lax.cond the plan (argsort + bucket search) is actually
+            # skipped in between, which is what lets compact_every > 1
+            # amortize it; the stored plan stays valid meanwhile (the
+            # active set only shrinks)
+            renew = (k % opts.compact_every) == 0
+            aux = jax.lax.cond(
+                renew,
+                lambda ls, a: plan_fn(_active_mask(ls)),
+                lambda ls, a: a,
+                lanes, aux,
+            )
+            perm, bidx = aux
+            lanes, srows = compacted(lanes, perm, bidx)
+        else:
+            lanes = sweep(lanes)
+            srows = rows_full_sweep if batched else jnp.zeros((), jnp.int32)
         n_conv, n_act = counts(lanes)
-        return (k + 1, lanes, n_conv, n_act)
+        return (k + 1, lanes, n_conv, n_act, aux, rows + srows)
 
     n_conv0, n_act0 = counts(lanes)
-    k, lanes, _, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0)
+    k, lanes, _, _, _, eval_rows = jax.lax.while_loop(
+        cond, body,
+        (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0, eval_rows0),
     )
 
     if chunked:
@@ -500,6 +668,7 @@ def run_multistart(
         iterations=k,
         n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
         n_evals=lanes.n_evals,
+        eval_rows=eval_rows,
     )
 
 

@@ -42,6 +42,8 @@ class LBFGSOptions:
     ad_mode: str = "reverse"  # reverse is the right default at high D
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
     sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
+    # active-lane compaction cadence for batched sweeps (0 = off; engine)
+    compact_every: int = 0
 
 
 class LBFGSMemory(NamedTuple):
@@ -140,6 +142,7 @@ def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
         ad_mode=opts.ad_mode,
         lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
         sweep_mode=opts.sweep_mode,
+        compact_every=opts.compact_every,
     )
 
 

@@ -93,6 +93,14 @@ def armijo_backtracking_batch(
     by construction (the trade: every lane pays K evals of *compute* for
     one launch of *latency*). Exhaustion keeps the final halved α with the
     last evaluated trial's f, matching `armijo_backtracking`.
+
+    B here is whatever lane set the caller holds — the full swarm, a
+    lane_chunk, or the engine's compacted active-lane prefix. The last case
+    leans on `value_batch` being row-independent (row i's value must not
+    depend on B or on other rows): that is what makes a compacted lane's
+    accepted α bit-identical to its uncompacted one. Every built-in
+    evaluator (fused kernels, jnp references, the vmap fallback) satisfies
+    this; see core/objectives.register_batched_vg for the contract.
     """
     B, D = X.shape
     K = max_iters

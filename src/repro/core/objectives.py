@@ -195,7 +195,15 @@ def register_batched_vg(name: str, vg_batch: BatchedVG,
     cannot dead-code-eliminate: the speculative Armijo ladder evaluates K·B
     trial *values* per sweep, and without a value-only twin every rung pays
     the gradient too. The twin MUST agree with vg_batch's f to fp rounding
-    (see _fused_impls_for)."""
+    (see _fused_impls_for).
+
+    Both callables must also be ROW-INDEPENDENT — row i of the output
+    depends only on row i of X, identically at any batch size. The engine's
+    active-lane compaction (engine.compact_every) re-invokes them on
+    gathered lane prefixes of varying size and its exact-parity contract
+    (tests/test_batched_sweep.py::TestActiveLaneCompaction) rests on this;
+    a batch-coupled evaluator (e.g. one that normalizes over the batch)
+    must not be registered here."""
     _BATCHED_VG[name] = (vg_batch, value_batch)
 
 

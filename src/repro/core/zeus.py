@@ -40,6 +40,9 @@ class ZeusOptions:
     # objectives (obj.fn from the registry) automatically pick the fused
     # value+grad kernels on the batched path
     sweep_mode: Optional[str] = None
+    # overrides the solver opts' active-lane compaction cadence (batched
+    # sweeps only; 0 = off) — see core/engine.py "Active-lane compaction"
+    compact_every: Optional[int] = None
 
 
 class ZeusResult(NamedTuple):
@@ -77,6 +80,7 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
                 linesearch=b.linesearch,
                 lane_chunk=b.lane_chunk,
                 sweep_mode=b.sweep_mode,
+                compact_every=b.compact_every,
             )
     elif name == "bfgs":
         solver_opts = opts.bfgs
@@ -85,6 +89,8 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
     strategy, eopts = factory(solver_opts, lane_chunk=opts.lane_chunk)
     if opts.sweep_mode is not None:
         eopts = dataclasses.replace(eopts, sweep_mode=opts.sweep_mode)
+    if opts.compact_every is not None:
+        eopts = dataclasses.replace(eopts, compact_every=opts.compact_every)
     return run_multistart(f, x0, strategy, eopts, pcount=pcount)
 
 

@@ -20,6 +20,12 @@ CUDA thread loop:
 Lane dims D are zero-padded to a multiple of 128 by ops.py so the MXU/VPU
 tiles stay aligned; zero padding is exact for this update (all extra terms
 vanish: padded components of δx, δg are 0).
+
+The batch dim B is one grid step per lane with no cross-lane term, so these
+kernels take any B — including the small power-of-two active-lane buckets
+the engine's compacted sweeps gather (engine.compact_every): a lane's
+update is bit-identical whatever batch it rides in, which is what makes
+compaction's exact-parity contract hold through the kernel path.
 """
 from __future__ import annotations
 

@@ -6,8 +6,13 @@ VMEM pass per particle tile that emits f(x) and ∇f(x) together, sharing
 subexpressions (e.g. Rastrigin's 2πx feeds both cos for the value and sin
 for the gradient). Used by the hot path of PSO (values) and BFGS (both).
 
-Supported analytically-fused objectives: sphere, rastrigin, rosenbrock.
-Arbitrary objectives fall back to jax AD (ops.py)."""
+Supported analytically-fused objectives: sphere, rastrigin, rosenbrock,
+ackley. Arbitrary objectives fall back to jax AD (ops.py).
+
+Kernels are looked up through small factories taking the TRUE (unpadded)
+lane dim: most kernels ignore it (zero padding is exact for them), but
+ackley's 1/d normalizers and mean-cos term need the real d baked in, with
+padded columns masked out of the value reductions."""
 from __future__ import annotations
 
 import functools
@@ -43,6 +48,29 @@ def _rosenbrock_kernel(x_ref, f_ref, g_ref):
     g_ref[...] = g.astype(g_ref.dtype)
 
 
+def _ackley_kernel(x_ref, f_ref, g_ref, *, d):
+    """Paper §V-B3. `d` is the true (unpadded) dim: the value normalizes by
+    d and averages cos(2πx) over d columns, so cos(0) = 1 from zero padding
+    would pollute both — padded columns are masked out of the cos sum (the
+    x² sum is exact under zero padding already). The exp/sqrt subexpressions
+    e1, e2 are shared between f and ∇f like rastrigin's 2πx is."""
+    x = x_ref[...]  # (TN, Dp)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    two_pi_x = (2.0 * jnp.pi) * x
+    s1 = jnp.sqrt(jnp.sum(x * x, axis=-1) / d)
+    s2 = jnp.sum(jnp.where(col < d, jnp.cos(two_pi_x), 0.0), axis=-1) / d
+    e1 = jnp.exp(-0.2 * s1)
+    e2 = jnp.exp(s2)
+    f_ref[...] = (-20.0 * e1 - e2 + jnp.e + 20.0).astype(f_ref.dtype)
+    # ∂f/∂x_i = 4 e1 x_i / (d s1) + (2π/d) sin(2πx_i) e2. At the origin the
+    # gradient is genuinely undefined (s1 = 0 ⇒ 0/0 = nan) — the paper's
+    # documented |grad|<Θ failure mode, same behavior AD gives. Padded
+    # columns emit 0 (x = 0, sin 0 = 0) and are sliced off by ops.py.
+    g = (4.0 * e1 / (d * s1))[:, None] * x + (
+        (2.0 * jnp.pi / d) * jnp.sin(two_pi_x)) * e2[:, None]
+    g_ref[...] = g.astype(g_ref.dtype)
+
+
 def _rastrigin_value_kernel(x_ref, f_ref):
     x = x_ref[...]
     a = 10.0
@@ -63,10 +91,24 @@ def _rosenbrock_value_kernel(x_ref, f_ref):
     f_ref[...] = jnp.sum((1.0 - xi) ** 2 + 100.0 * d * d, axis=-1).astype(f_ref.dtype)
 
 
+def _ackley_value_kernel(x_ref, f_ref, *, d):
+    """Value-only twin of _ackley_kernel — the value expression VERBATIM."""
+    x = x_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    two_pi_x = (2.0 * jnp.pi) * x
+    s1 = jnp.sqrt(jnp.sum(x * x, axis=-1) / d)
+    s2 = jnp.sum(jnp.where(col < d, jnp.cos(two_pi_x), 0.0), axis=-1) / d
+    e1 = jnp.exp(-0.2 * s1)
+    e2 = jnp.exp(s2)
+    f_ref[...] = (-20.0 * e1 - e2 + jnp.e + 20.0).astype(f_ref.dtype)
+
+
+# name -> factory(true_dim) -> kernel. Padding-exact kernels ignore the dim.
 _KERNELS = {
-    "rastrigin": _rastrigin_kernel,
-    "sphere": _sphere_kernel,
-    "rosenbrock": _rosenbrock_kernel,
+    "rastrigin": lambda d: _rastrigin_kernel,
+    "sphere": lambda d: _sphere_kernel,
+    "rosenbrock": lambda d: _rosenbrock_kernel,
+    "ackley": lambda d: functools.partial(_ackley_kernel, d=d),
 }
 
 # Value-only twins of the fused kernels for the speculative line-search
@@ -76,17 +118,19 @@ _KERNELS = {
 # and an evaluator mismatch there (≈1e-4 in fp32) systematically rejects
 # the small-margin steps near convergence.
 _VALUE_KERNELS = {
-    "rastrigin": _rastrigin_value_kernel,
-    "sphere": _sphere_value_kernel,
-    "rosenbrock": _rosenbrock_value_kernel,
+    "rastrigin": lambda d: _rastrigin_value_kernel,
+    "sphere": lambda d: _sphere_value_kernel,
+    "rosenbrock": lambda d: _rosenbrock_value_kernel,
+    "ackley": lambda d: functools.partial(_ackley_value_kernel, d=d),
 }
 
 
-def fused_value_pallas(name: str, x: jnp.ndarray, *,
+def fused_value_pallas(name: str, x: jnp.ndarray, *, dim: int = None,
                        particle_tile: int = 256, interpret=False):
-    """x (N, D) -> f (N,): batched objective values in one pass."""
-    kernel = _VALUE_KERNELS[name]
+    """x (N, D) -> f (N,): batched objective values in one pass. `dim` is
+    the true lane dim when x arrives zero-padded (defaults to x's)."""
     N, D = x.shape
+    kernel = _VALUE_KERNELS[name](dim if dim is not None else D)
     tn = min(particle_tile, N)
     Np = ((N + tn - 1) // tn) * tn
     if Np != N:
@@ -102,11 +146,12 @@ def fused_value_pallas(name: str, x: jnp.ndarray, *,
     return f[:N]
 
 
-def fused_value_grad_pallas(name: str, x: jnp.ndarray, *,
+def fused_value_grad_pallas(name: str, x: jnp.ndarray, *, dim: int = None,
                             particle_tile: int = 256, interpret=False):
-    """x (N, D) -> (f (N,), g (N, D)) in one fused pass."""
-    kernel = _KERNELS[name]
+    """x (N, D) -> (f (N,), g (N, D)) in one fused pass. `dim` is the true
+    lane dim when x arrives zero-padded (defaults to x's)."""
     N, D = x.shape
+    kernel = _KERNELS[name](dim if dim is not None else D)
     tn = min(particle_tile, N)
     # Pad the particle axis up to a tile multiple instead of shrinking the
     # tile to whatever divides N (degrades to tile=1 for prime N). Padded

@@ -165,11 +165,15 @@ def pso_step_update(x, v, px, gx, r1, r2, w, c1, c2):
 
 
 # -- fused objective + gradient -------------------------------------------------
-FUSED_OBJECTIVES = ("sphere", "rastrigin", "rosenbrock")
+FUSED_OBJECTIVES = ("sphere", "rastrigin", "rosenbrock", "ackley")
 
 
 def fused_value_grad(name: str, x: jnp.ndarray):
-    """x (N, D) -> (f (N,), g (N, D)); analytic fused kernels where available."""
+    """x (N, D) -> (f (N,), g (N, D)); analytic fused kernels where available.
+
+    N is whatever batch the caller holds — including the small power-of-two
+    active-lane buckets of the engine's compacted sweeps — and is padded up
+    to the particle tile inside the pallas wrappers."""
     if name not in FUSED_OBJECTIVES or not _use_pallas():
         return getattr(ref, f"{name}_vg_ref")(x)
     N, D = x.shape
@@ -178,10 +182,11 @@ def fused_value_grad(name: str, x: jnp.ndarray):
         # zero padding is NOT exact for rosenbrock's coupled terms: the
         # boundary term (x_{D+1} - x_D^2) would be polluted. Use the ref.
         return ref.rosenbrock_vg_ref(x)
-    f, g = fused_value_grad_pallas(name, _pad_to(x, Dp, 1), interpret=_interpret())
-    if name == "rastrigin":
-        # each zero pad column contributes A - A*cos(0) = 0 to f: exact.
-        pass
+    # rastrigin: each zero pad column contributes A - A*cos(0) = 0 — exact.
+    # ackley: padding is NOT exact (1/d normalizers, mean-cos), so the true
+    # dim is baked into the kernel and pad columns are masked there.
+    f, g = fused_value_grad_pallas(name, _pad_to(x, Dp, 1), dim=D,
+                                   interpret=_interpret())
     return f, g[:, :D]
 
 
@@ -200,7 +205,8 @@ def fused_value(name: str, x: jnp.ndarray):
     Dp = _padded_dim(D)
     if name == "rosenbrock" and Dp != D:
         return ref.rosenbrock_vg_ref(x)[0]
-    return fused_value_pallas(name, _pad_to(x, Dp, 1), interpret=_interpret())
+    return fused_value_pallas(name, _pad_to(x, Dp, 1), dim=D,
+                              interpret=_interpret())
 
 
 # -- flash attention -----------------------------------------------------------

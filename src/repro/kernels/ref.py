@@ -86,6 +86,21 @@ def rosenbrock_vg_ref(x):
     return f, g
 
 
+def ackley_vg_ref(x):
+    """(f, ∇f) of Ackley, batched: x (B, D). The gradient is genuinely
+    undefined at the origin (s1 = 0 ⇒ 0/0 = nan) — the paper's §V-B3
+    failure mode, matching what AD gives on the canonical scalar form."""
+    d = x.shape[-1]
+    s1 = jnp.sqrt(jnp.sum(x * x, axis=-1) / d)
+    s2 = jnp.sum(jnp.cos(2.0 * jnp.pi * x), axis=-1) / d
+    e1 = jnp.exp(-0.2 * s1)
+    e2 = jnp.exp(s2)
+    f = -20.0 * e1 - e2 + jnp.e + 20.0
+    g = (4.0 * e1 / (d * s1))[..., None] * x + (
+        2.0 * jnp.pi / d) * jnp.sin(2.0 * jnp.pi * x) * e2[..., None]
+    return f, g
+
+
 # -- flash attention ----------------------------------------------------------
 def flash_attention_ref(q, k, v, causal=True, scale=None):
     """Materialized-scores oracle for the flash kernel: q (B,Sq,H,hd),

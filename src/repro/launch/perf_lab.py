@@ -76,20 +76,26 @@ VARIANTS = {
 }
 
 
-# zeus engine variant name -> (solver, lane_chunk, hessian_impl, sweep_mode)
+# zeus engine variant name ->
+#   (solver, lane_chunk, hessian_impl, sweep_mode, compact_every)
 ZEUS_VARIANTS = {
-    "bfgs": ("bfgs", None, "fast", "per_lane"),
-    "bfgs_ref": ("bfgs", None, "reference", "per_lane"),
-    "bfgs_c64": ("bfgs", 64, "fast", "per_lane"),
-    "bfgs_c256": ("bfgs", 256, "fast", "per_lane"),
+    "bfgs": ("bfgs", None, "fast", "per_lane", 0),
+    "bfgs_ref": ("bfgs", None, "reference", "per_lane", 0),
+    "bfgs_c64": ("bfgs", 64, "fast", "per_lane", 0),
+    "bfgs_c256": ("bfgs", 256, "fast", "per_lane", 0),
     # batched sweep path: speculative ladder + fused batch kernels
-    "bfgs_batched": ("bfgs", None, "fast", "batched"),
-    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched"),
-    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched"),
-    "lbfgs": ("lbfgs", None, None, "per_lane"),
-    "lbfgs_c64": ("lbfgs", 64, None, "per_lane"),
-    "lbfgs_c256": ("lbfgs", 256, None, "per_lane"),
-    "lbfgs_batched": ("lbfgs", None, None, "batched"),
+    "bfgs_batched": ("bfgs", None, "fast", "batched", 0),
+    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched", 0),
+    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched", 0),
+    # + active-lane compaction: the sweep runs on the active-prefix bucket
+    # only, so wall clock tracks the surviving lanes instead of B
+    "bfgs_batched_compact": ("bfgs", None, "fast", "batched", 1),
+    "bfgs_batched_c256_compact": ("bfgs", 256, "fast", "batched", 1),
+    "lbfgs": ("lbfgs", None, None, "per_lane", 0),
+    "lbfgs_c64": ("lbfgs", 64, None, "per_lane", 0),
+    "lbfgs_c256": ("lbfgs", 256, None, "per_lane", 0),
+    "lbfgs_batched": ("lbfgs", None, None, "batched", 0),
+    "lbfgs_batched_compact": ("lbfgs", None, None, "batched", 1),
 }
 
 
@@ -133,17 +139,19 @@ def _run_zeus_lab(args, results):
             f"unknown zeus variant(s) {', '.join(map(repr, unknown))}; "
             f"known: {', '.join(ZEUS_VARIANTS)}")
     for name in names:
-        solver, chunk, impl, sweep_mode = ZEUS_VARIANTS[name]
+        solver, chunk, impl, sweep_mode, compact = ZEUS_VARIANTS[name]
         key = f"zeus|{args.zeus}|d{args.dim}|b{args.lanes}|i{args.iters}|{name}"
         if key in results and results[key].get("status") == "ok":
             print(f"[cached] {key}")
             continue
         if solver == "bfgs":
             sopts = BFGSOptions(iter_bfgs=args.iters, theta=1e-4,
-                                hessian_impl=impl, sweep_mode=sweep_mode)
+                                hessian_impl=impl, sweep_mode=sweep_mode,
+                                compact_every=compact)
         else:
             sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4,
-                                 sweep_mode=sweep_mode)
+                                 sweep_mode=sweep_mode,
+                                 compact_every=compact)
         strategy, eopts = get_solver(solver)(sopts, lane_chunk=chunk)
         run = jax.jit(lambda x: run_multistart(obj.fn, x, strategy, eopts))
         res = jax.block_until_ready(run(x0))  # compile + warm
@@ -156,6 +164,9 @@ def _run_zeus_lab(args, results):
             "us_per_lane_sweep": wall * 1e6 / max(
                 int(res.iterations) * args.lanes, 1),
             "n_converged": int(res.n_converged),
+            # physical batched-path objective rows (0 under per_lane) —
+            # shows the compaction variants' tail-work cut directly
+            "eval_rows": int(res.eval_rows),
         }
         print(f"[{name}] {wall:.3f}s for {int(res.iterations)} sweeps × "
               f"{args.lanes} lanes; n_conv={int(res.n_converged)}", flush=True)

@@ -211,13 +211,13 @@ class TestBatchedSweepParity:
 
 class TestBatchedObjectiveRegistry:
     def test_named_objectives_pick_fused_kernels(self):
-        for name in ("sphere", "rastrigin", "rosenbrock"):
+        for name in ("sphere", "rastrigin", "rosenbrock", "ackley"):
             bobj = as_batched(get_objective(name).fn)
             assert bobj.fused and bobj.name == name
 
     def test_registered_but_unfused_falls_back(self):
-        bobj = as_batched(get_objective("ackley").fn)
-        assert bobj.name == "ackley" and not bobj.fused
+        bobj = as_batched(get_objective("goldstein_price").fn)
+        assert bobj.name == "goldstein_price" and not bobj.fused
 
     def test_lambda_falls_back(self):
         assert not as_batched(lambda x: jnp.sum(x)).fused
@@ -226,7 +226,7 @@ class TestBatchedObjectiveRegistry:
         """The speculative Armijo compares value_batch trials against an F0
         from value_and_grad_batch: the two must agree to fp rounding or
         small-margin steps near convergence get systematically rejected."""
-        for name in ("sphere", "rastrigin", "rosenbrock"):
+        for name in ("sphere", "rastrigin", "rosenbrock", "ackley"):
             bobj = as_batched(get_objective(name).fn)
             X = jax.random.uniform(jax.random.key(1), (33, 5),
                                    minval=-4, maxval=4)
@@ -282,6 +282,181 @@ class TestBatchedObjectiveRegistry:
         assert fused.vg_cost(16) == 2
         assert fallback.vg_cost(16) == 17  # 1 + D forward passes
         assert rev.vg_cost(16) == 2
+
+
+class TestActiveLaneCompaction:
+    """ISSUE 3: compaction parity is EXACT — no tolerance. Every evaluator
+    on the batched path is row-independent, so an active lane computes the
+    same bits at any batch size; frozen lanes inside the bucket padding are
+    evaluated-but-masked exactly as uncompacted, and lanes beyond the prefix
+    are never touched. Statuses, iterates, and per-lane n_evals must
+    therefore be array-equal between compact_every=0 and compacted runs,
+    for every bit-stable evaluator: all fused Pallas kernels and the
+    row-wise jnp references (REPRO_DISABLE_PALLAS=1) — everything a named
+    paper objective routes through — across objectives × lane_chunk. The
+    vmap-of-scalar AD fallback closures are the exception: XLA may
+    re-specialize them with different FMA contraction per compiled batch
+    size — see test_vmap_fallback_status_parity."""
+
+    def _pair(self, f, x0, ce=1, chunk=None, **kw):
+        base = dict(iter_bfgs=kw.pop("iter_bfgs", 80),
+                    theta=kw.pop("theta", 1e-4), lane_chunk=chunk,
+                    sweep_mode="batched", **kw)
+        ref = batched_bfgs(f, x0, BFGSOptions(**base))
+        com = batched_bfgs(f, x0, BFGSOptions(compact_every=ce, **base))
+        return ref, com
+
+    def _assert_exact(self, ref, com):
+        for fld in ("x", "fval", "grad_norm", "status", "n_evals"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, fld)), np.asarray(getattr(com, fld)),
+                err_msg=fld)
+        assert int(ref.iterations) == int(com.iterations)
+        assert int(ref.n_converged) == int(com.n_converged)
+
+    @pytest.mark.parametrize("name,dim", [
+        ("sphere", 4), ("rosenbrock", 2), ("rastrigin", 3), ("ackley", 3)])
+    @pytest.mark.parametrize("chunk", [None, 16])
+    def test_exact_parity(self, name, dim, chunk):
+        obj, x0 = _starts(name, 32, dim, seed=dim)
+        self._assert_exact(*self._pair(obj.fn, x0, chunk=chunk))
+
+    @pytest.mark.parametrize("ce", [2, 3])
+    def test_refresh_cadence_parity(self, ce):
+        """Between plan refreshes the stored bucket keeps covering the
+        (only-shrinking) active set; any cadence gives identical lanes."""
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        self._assert_exact(*self._pair(obj.fn, x0, ce=ce, iter_bfgs=100))
+
+    def test_unregistered_lambda_fallback(self):
+        """The monolithic reverse-mode vmap fallback is bit-stable too:
+        exact parity is not a fused-kernel privilege."""
+        obj, x0 = _starts("rosenbrock", 24, 2, seed=7)
+        lam = lambda x: rosenbrock(x)  # noqa: E731 — vmap fallback route
+        self._assert_exact(*self._pair(lam, x0, iter_bfgs=60,
+                                       ad_mode="reverse"))
+
+    @pytest.mark.parametrize("ad_mode,chunk", [
+        ("forward", None), ("reverse", 10)])
+    def test_vmap_fallback_status_parity(self, ad_mode, chunk):
+        """vmap-of-scalar AD fallbacks are NOT guaranteed bit-stable across
+        compiled batch sizes: XLA FMA-contracts their multiply-add chains
+        differently when it re-specializes the closure per bucket size
+        (observed for forward-mode monolithic, and for reverse-mode chunked
+        under REPRO_DISABLE_PALLAS — DESIGN.md §11). There the engine
+        contract degrades to the usual chunked-execution one: same statuses
+        and convergence set, iterates to fp32 tolerance on converged
+        lanes."""
+        obj, x0 = _starts("rosenbrock", 24, 2, seed=7)
+        lam = lambda x: rosenbrock(x)  # noqa: E731
+        ref, com = self._pair(lam, x0, iter_bfgs=60, ad_mode=ad_mode,
+                              chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(ref.status),
+                                      np.asarray(com.status))
+        assert int(ref.n_converged) == int(com.n_converged)
+        conv = np.asarray(ref.status) == 1
+        np.testing.assert_allclose(np.asarray(ref.x)[conv],
+                                   np.asarray(com.x)[conv],
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_lbfgs_vmapped_adapter(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=11)
+        base = dict(iter_max=120, theta=1e-4, sweep_mode="batched")
+        ref = batched_lbfgs(obj.fn, x0, LBFGSOptions(**base))
+        com = batched_lbfgs(obj.fn, x0,
+                            LBFGSOptions(compact_every=1, **base))
+        self._assert_exact(ref, com)
+
+    def test_required_c_stop_parity(self):
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (14, 1)),
+        ])
+        self._assert_exact(
+            *self._pair(rosenbrock, x0, iter_bfgs=100, required_c=2))
+
+    def test_disable_pallas_ref_leg(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+        obj, x0 = _starts("rastrigin", 24, 3, seed=5)
+        self._assert_exact(*self._pair(obj.fn, x0, iter_bfgs=60))
+
+    def test_frozen_lanes_contribute_zero_evals(self):
+        """Counter-based tail-work proof: 24/32 lanes start AT the optimum
+        (gradient exactly 0 ⇒ frozen from init), so after compaction each
+        sweep physically evaluates only the 8-lane active bucket — frozen
+        lanes contribute zero objective rows AND their per-lane n_evals
+        never move past the init gradient."""
+        B, hard_n, S, K = 32, 8, 5, 20
+        x0 = jnp.concatenate([
+            jnp.ones((B - hard_n, 2)),  # exact optimum: g = 0 bit-exactly
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (hard_n, 1)),
+        ])
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=K,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        com = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(compact_every=1, **base))
+        assert int(unc.iterations) == int(com.iterations) == S
+        # physical rows: init B, then per sweep (ladder K + 1 vg) per lane —
+        # over the full swarm uncompacted, over the 8-lane bucket compacted
+        assert int(unc.eval_rows) == B + S * B * (K + 1)
+        assert int(com.eval_rows) == B + S * hard_n * (K + 1)
+        # the frozen lanes' own counters: init gradient (fused: 2) only
+        np.testing.assert_array_equal(np.asarray(com.n_evals[:B - hard_n]), 2)
+        np.testing.assert_array_equal(np.asarray(com.n_evals),
+                                      np.asarray(unc.n_evals))
+
+    def test_chunked_empty_chunk_pays_one_masked_lane(self):
+        """A chunk whose lanes are ALL frozen still runs its smallest (one
+        masked lane) bucket — compaction is per chunk, and the floor is one
+        row, not zero."""
+        B, C, S, K = 32, 16, 4, 20
+        x0 = jnp.concatenate([
+            jnp.ones((24, 2)),  # chunk 0 fully frozen; chunk 1 half frozen
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (8, 1)),
+        ])
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=K, lane_chunk=C,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        com = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(compact_every=1, **base))
+        self._assert_exact(unc, com)
+        assert int(com.eval_rows) == B + S * (1 + 8) * (K + 1)
+
+    def test_zeus_threading(self):
+        """ZeusOptions(compact_every=...) reaches the engine through
+        solve_phase2 and preserves the full-solve result exactly."""
+        from repro.core import ZeusOptions, zeus
+
+        obj = get_objective("sphere")
+        kw = dict(use_pso=False, sweep_mode="batched",
+                  bfgs=BFGSOptions(iter_bfgs=40, theta=1e-4))
+        key = jax.random.key(0)
+        ref = zeus(obj.fn, key, 4, obj.lower, obj.upper,
+                   ZeusOptions(**kw))
+        com = zeus(obj.fn, key, 4, obj.lower, obj.upper,
+                   ZeusOptions(compact_every=1, **kw))
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(com.best_x))
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(com.raw.status))
+        assert int(com.raw.eval_rows) <= int(ref.raw.eval_rows)
+
+    def test_per_lane_rejects_compaction(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="compact_every"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(compact_every=1))
+
+    def test_negative_cadence_rejected(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="compact_every"):
+            batched_bfgs(obj.fn, x0,
+                         BFGSOptions(sweep_mode="batched", compact_every=-1))
+
+    def test_eval_rows_zero_under_per_lane(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        res = batched_bfgs(obj.fn, x0, BFGSOptions(iter_bfgs=3))
+        assert int(res.eval_rows) == 0
 
 
 class TestNEvalsAccounting:
