@@ -14,7 +14,16 @@ when a perf floor regresses:
   * `tail_work_ratio` (compacted / uncompacted physical objective rows per
     sweep once 75% of lanes are frozen) must stay <= BENCH_TAIL_WORK_CEIL
     (default 0.5 — the active-lane compaction win; the expected value is
-    ~0.25: an 8-lane-in-32 active set rounds up to the B/4 bucket).
+    ~0.25: an 8-lane-in-32 active set rounds up to the B/4 bucket);
+  * `tail_trip_ratio` (repacked / static-chunked lax.map trips at 75%
+    frozen, lane_chunk=B/8) must stay <= BENCH_TAIL_TRIP_CEIL (default 0.5
+    — the ISSUE-4 global cross-chunk repacking win; expected ~0.25: the
+    25% survivors fill 2 of 8 chunks);
+  * `ladder_rows_ratio` (adaptive-ladder / full-ladder physical rows on an
+    identical trajectory) must stay <= BENCH_LADDER_ROWS_CEIL (default 1.0
+    — the adaptive ladder can never pay MORE rows than full speculation;
+    rosenbrock's deep backtracking makes the measured value modest, while
+    converging workloads approach ladder_len/ls_iters).
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
@@ -34,10 +43,11 @@ MODE_KEYS = {
     "ls_evals_per_lane_sweep",
     "eval_launches_per_sweep",
 }
-TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep"}
+TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep", "map_trips"}
 
 
-def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
+def check(payload: dict, launch_floor: float, tail_ceil: float,
+          trip_ceil: float, ladder_ceil: float) -> list:
     errors = []
 
     def need(cond, msg):
@@ -52,7 +62,7 @@ def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
     need(len(tails) > 0, "no tail cells measured")
 
     for name, cell in cells.items():
-        for mode in ("per_lane", "batched", "compacted"):
+        for mode in ("per_lane", "batched", "compacted", "ladder"):
             block = cell.get(mode)
             need(isinstance(block, dict), f"{name}: missing mode {mode!r}")
             if not isinstance(block, dict):
@@ -60,7 +70,7 @@ def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
             missing = MODE_KEYS - set(block)
             need(not missing, f"{name}.{mode}: missing keys {sorted(missing)}")
             need(block.get("wall_s", 0) > 0, f"{name}.{mode}: wall_s <= 0")
-        for mode in ("batched", "compacted"):
+        for mode in ("batched", "compacted", "ladder"):
             if isinstance(cell.get(mode), dict):
                 need(cell[mode].get("eval_rows", 0) > 0,
                      f"{name}.{mode}: eval_rows not recorded")
@@ -69,9 +79,15 @@ def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
             ratio >= launch_floor,
             f"{name}: launch_ratio {ratio:.2f} below floor {launch_floor}",
         )
+        lratio = cell.get("ladder_rows_ratio")
+        need(
+            isinstance(lratio, (int, float)) and 0 < lratio <= ladder_ceil,
+            f"{name}: ladder_rows_ratio {lratio!r} above ceiling "
+            f"{ladder_ceil}",
+        )
 
     for name, tail in tails.items():
-        for mode in ("uncompacted", "compacted"):
+        for mode in ("uncompacted", "compacted", "chunked", "repacked"):
             block = tail.get(mode)
             need(isinstance(block, dict), f"tail.{name}: missing {mode!r}")
             if not isinstance(block, dict):
@@ -83,6 +99,12 @@ def check(payload: dict, launch_floor: float, tail_ceil: float) -> list:
         need(
             isinstance(ratio, (int, float)) and 0 < ratio <= tail_ceil,
             f"tail.{name}: tail_work_ratio {ratio!r} above ceiling {tail_ceil}",
+        )
+        tratio = tail.get("tail_trip_ratio")
+        need(
+            isinstance(tratio, (int, float)) and 0 < tratio <= trip_ceil,
+            f"tail.{name}: tail_trip_ratio {tratio!r} above ceiling "
+            f"{trip_ceil}",
         )
     return errors
 
@@ -96,23 +118,36 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--tail-work-ceil", type=float,
         default=float(os.environ.get("BENCH_TAIL_WORK_CEIL", "0.5")))
+    ap.add_argument(
+        "--tail-trip-ceil", type=float,
+        default=float(os.environ.get("BENCH_TAIL_TRIP_CEIL", "0.5")))
+    ap.add_argument(
+        "--ladder-rows-ceil", type=float,
+        default=float(os.environ.get("BENCH_LADDER_ROWS_CEIL", "1.0")))
     args = ap.parse_args(argv)
 
     with open(args.path) as f:
         payload = json.load(f)
-    errors = check(payload, args.launch_ratio_floor, args.tail_work_ceil)
+    errors = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
+                   args.tail_trip_ceil, args.ladder_rows_ceil)
     if errors:
         for e in errors:
             print(f"FAIL: {e}", file=sys.stderr)
         return 1
     n_cells = len(payload["cells"])
     ratios = [c["launch_ratio"] for c in payload["cells"].values()]
+    ladders = [c["ladder_rows_ratio"] for c in payload["cells"].values()]
     tails = [t["tail_work_ratio"] for t in payload["tail"].values()]
+    trips = [t["tail_trip_ratio"] for t in payload["tail"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
         f"tail_work_ratio max {max(tails):.3f} "
-        f"(ceiling {args.tail_work_ceil})"
+        f"(ceiling {args.tail_work_ceil}); "
+        f"tail_trip_ratio max {max(trips):.3f} "
+        f"(ceiling {args.tail_trip_ceil}); "
+        f"ladder_rows_ratio max {max(ladders):.3f} "
+        f"(ceiling {args.ladder_rows_ceil})"
     )
     return 0
 

@@ -18,15 +18,26 @@ tracked and CI-gated (benchmarks/check_engine_bench.py):
   launch_ratio                — per_lane launches / batched launches
   eval_rows                   — physical objective rows the batched path
                                 evaluated (BFGSResult.eval_rows)
+  map_trips                   — chunk-step (lax.map trip) count the sweep
+                                driver issued (BFGSResult.map_trips)
   compact_overhead            — compacted wall / batched wall in the
                                 worst case for compaction (no lane ever
                                 freezes, the sweep always runs the top
                                 bucket — pure plan/gather/scatter cost)
+  ladder (block)              — adaptive speculative ladder
+                                (ladder_len=LADDER_LEN) on the same cell:
+                                identical trajectory, fewer physical rows;
+                                `ladder_rows_ratio` = ladder/batched
+                                eval_rows (deep-backtracking worst case
+                                still <= 1.0 by construction)
 
-The `tail` section is the active-lane compaction criterion: cells where 75%
+The `tail` section is the compaction + repacking criterion: cells where 75%
 of the lanes are frozen from init (exact-optimum starts), so the tail-phase
-objective work of a compacted run must drop to the active bucket —
-`tail_work_ratio` = compacted/uncompacted per-sweep rows, gated ≤ 0.5.
+work of the dynamic schedules must track the active set —
+`tail_work_ratio` = compacted/uncompacted per-sweep rows, gated ≤ 0.5, and
+`tail_trip_ratio` = repacked/static-chunked lax.map trips (global
+cross-chunk repacking at lane_chunk=B/8: 25% survivors need 2 of 8 chunks),
+gated < 0.5.
 
 ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
 equivalents per lane either way), so the ratio isolates the speculative
@@ -61,25 +72,29 @@ from repro.kernels import ops as kernel_ops
 
 SWEEPS = 8
 LS_ITERS = 20
+LADDER_LEN = 4
 CELLS = [(256, 16), (256, 64), (1024, 16), (1024, 64)]
 SMALL_CELLS = [(256, 16)]
 TAIL_FROZEN_FRAC = 0.75
+TAIL_CHUNKS = 8  # tail repack runs at lane_chunk = B / TAIL_CHUNKS
 
 
 def _cells():
     return SMALL_CELLS if os.environ.get("BENCH_ENGINE_SMALL") == "1" else CELLS
 
 
-def _opts(mode, compact_every=0):
+def _opts(mode, compact_every=0, repack_every=0, ladder_len=0,
+          lane_chunk=None):
     return BFGSOptions(iter_bfgs=SWEEPS, theta=1e-30, ad_mode="reverse",
                        ls_iters=LS_ITERS, sweep_mode=mode,
-                       compact_every=compact_every)
+                       compact_every=compact_every, repack_every=repack_every,
+                       ladder_len=ladder_len, lane_chunk=lane_chunk)
 
 
-def _one_cell(obj, B, D, mode, compact_every=0):
+def _one_cell(obj, B, D, mode, **okw):
     x0 = jax.random.uniform(jax.random.key(B + D), (B, D),
                             minval=obj.lower, maxval=obj.upper)
-    opts = _opts(mode, compact_every)
+    opts = _opts(mode, **okw)
     run = jax.jit(lambda x: batched_bfgs(obj.fn, x, opts))
     us = timeit(run, x0)
     res = run(x0)
@@ -96,23 +111,34 @@ def _one_cell(obj, B, D, mode, compact_every=0):
         "ls_evals_per_lane_sweep": ls_per_sweep,
         "eval_launches_per_sweep": launches,
         "eval_rows": int(res.eval_rows),
+        "map_trips": int(res.map_trips),
     }
 
 
 def _tail_cell(obj, B, D):
-    """Compaction criterion cell: 75% of lanes frozen from init (they start
-    bit-exactly at the optimum, gradient 0), the rest never converge at
-    theta=1e-30 — so each mode runs all SWEEPS sweeps and the physical-row
-    counters isolate tail-phase objective work."""
+    """Compaction + repacking criterion cell: 75% of lanes frozen from init
+    (they start bit-exactly at the optimum, gradient 0), the rest never
+    converge at theta=1e-30 — so each schedule runs all SWEEPS sweeps and
+    the physical-row / trip counters isolate tail-phase work. `compacted`
+    vs `uncompacted` is the PR-3 row criterion (monolithic batched);
+    `repacked` vs `chunked` is the ISSUE-4 lax.map trip criterion (both at
+    lane_chunk = B/TAIL_CHUNKS, so the static schedule pays TAIL_CHUNKS
+    trips per sweep and the repacked one bucket(ceil(25% · TAIL_CHUNKS)))."""
     n_frozen = int(B * TAIL_FROZEN_FRAC)
     x_opt = jnp.asarray(np.asarray(obj.x_star(D)), jnp.float32)
     hard = jax.random.uniform(jax.random.key(D), (B - n_frozen, D),
                               minval=obj.lower, maxval=obj.upper)
     x0 = jnp.concatenate([jnp.broadcast_to(x_opt, (n_frozen, D)), hard])
+    C = B // TAIL_CHUNKS
 
     cell = {}
-    for label, ce in (("uncompacted", 0), ("compacted", 1)):
-        opts = _opts("batched", ce)
+    for label, okw in (
+        ("uncompacted", {}),
+        ("compacted", {"compact_every": 1}),
+        ("chunked", {"lane_chunk": C}),
+        ("repacked", {"lane_chunk": C, "repack_every": 1}),
+    ):
+        opts = _opts("batched", **okw)
         run = jax.jit(lambda x, o=opts: batched_bfgs(obj.fn, x, o))
         us = timeit(run, x0)
         res = run(x0)
@@ -122,13 +148,18 @@ def _tail_cell(obj, B, D):
             "wall_s": us / 1e6,
             "eval_rows": int(res.eval_rows),
             "rows_per_sweep": tail_rows,
+            "map_trips": int(res.map_trips),
         }
     cell["frozen_frac"] = TAIL_FROZEN_FRAC
     cell["tail_work_ratio"] = (
         cell["compacted"]["rows_per_sweep"]
         / cell["uncompacted"]["rows_per_sweep"])
+    cell["tail_trip_ratio"] = (
+        cell["repacked"]["map_trips"] / cell["chunked"]["map_trips"])
     cell["wall_speedup"] = (
         cell["uncompacted"]["wall_s"] / cell["compacted"]["wall_s"])
+    cell["repack_wall_speedup"] = (
+        cell["chunked"]["wall_s"] / cell["repacked"]["wall_s"])
     return cell
 
 
@@ -148,6 +179,11 @@ def _engine_sweep(out_path: str):
             cell[mode] = _one_cell(obj, B, D, mode)
         # compaction's worst case: nothing freezes, top bucket every sweep
         cell["compacted"] = _one_cell(obj, B, D, "batched", compact_every=1)
+        # adaptive ladder on the full-swarm cell: rosenbrock's deep
+        # backtracking makes this the ladder's hard case (the fallback
+        # runs for every lane past rung LADDER_LEN)
+        cell["ladder"] = _one_cell(obj, B, D, "batched",
+                                   ladder_len=LADDER_LEN)
         cell["wall_speedup"] = (
             cell["per_lane"]["wall_s"] / cell["batched"]["wall_s"])
         cell["launch_ratio"] = (
@@ -155,6 +191,8 @@ def _engine_sweep(out_path: str):
             / cell["batched"]["eval_launches_per_sweep"])
         cell["compact_overhead"] = (
             cell["compacted"]["wall_s"] / cell["batched"]["wall_s"])
+        cell["ladder_rows_ratio"] = (
+            cell["ladder"]["eval_rows"] / cell["batched"]["eval_rows"])
         results[f"b{B}_d{D}"] = cell
         emit(
             f"engine_sweep_b{B}_d{D}",
@@ -162,7 +200,8 @@ def _engine_sweep(out_path: str):
             f"per_lane_us={cell['per_lane']['wall_per_sweep_s'] * 1e6:.1f};"
             f"wall_speedup={cell['wall_speedup']:.2f}x;"
             f"launch_ratio={cell['launch_ratio']:.2f}x;"
-            f"compact_overhead={cell['compact_overhead']:.2f}x",
+            f"compact_overhead={cell['compact_overhead']:.2f}x;"
+            f"ladder_rows_ratio={cell['ladder_rows_ratio']:.3f}",
         )
         tail = _tail_cell(obj, B, D)
         tails[f"b{B}_d{D}"] = tail
@@ -170,17 +209,24 @@ def _engine_sweep(out_path: str):
             f"engine_tail_b{B}_d{D}",
             tail["compacted"]["wall_s"] * 1e6,
             f"tail_work_ratio={tail['tail_work_ratio']:.3f};"
-            f"tail_wall_speedup={tail['wall_speedup']:.2f}x",
+            f"tail_trip_ratio={tail['tail_trip_ratio']:.3f};"
+            f"tail_wall_speedup={tail['wall_speedup']:.2f}x;"
+            f"repack_wall_speedup={tail['repack_wall_speedup']:.2f}x",
         )
     payload = {
         "objective": obj.name,
         "sweeps": SWEEPS,
         "ad_mode": "reverse",
+        "ladder_len": LADDER_LEN,
         "note": ("eval_launches_per_sweep: batched = ladder + fused vg = 2; "
                  "per_lane = mean accepted backtrack depth + 1 (lower bound "
-                 "on the vmapped while_loop's max-depth rounds). tail: 75% "
-                 "of lanes frozen from init; tail_work_ratio = compacted / "
-                 "uncompacted physical rows per sweep (gate: <= 0.5)"),
+                 "on the vmapped while_loop's max-depth rounds). "
+                 "ladder_rows_ratio = adaptive (ladder_len) / full-ladder "
+                 "physical rows, identical trajectory (gate: <= 1.0). tail: "
+                 "75% of lanes frozen from init; tail_work_ratio = compacted "
+                 "/ uncompacted physical rows per sweep (gate: <= 0.5); "
+                 "tail_trip_ratio = repacked / static-chunked lax.map trips "
+                 "at lane_chunk=B/8 (gate: < 0.5)"),
         "cells": results,
         "tail": tails,
     }

@@ -47,6 +47,12 @@ class BFGSOptions:
     sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
     # active-lane compaction cadence for batched sweeps (0 = off; engine)
     compact_every: int = 0
+    # global cross-chunk lane repacking cadence (0 = off; batched +
+    # lane_chunk only — see core/engine.py "Global cross-chunk repacking")
+    repack_every: int = 0
+    # speculative Armijo ladder length (0 = full ls_iters ladder; batched
+    # only — see core/engine.py "Adaptive speculative ladder")
+    ladder_len: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +163,8 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         lane_chunk=lane_chunk if lane_chunk is not None else opts.lane_chunk,
         sweep_mode=opts.sweep_mode,
         compact_every=opts.compact_every,
+        repack_every=opts.repack_every,
+        ladder_len=opts.ladder_len,
     )
 
 

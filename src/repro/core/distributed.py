@@ -120,10 +120,14 @@ def _local_zeus(
     # the global stop protocol (pcount = psum over the mesh) and per-device
     # chunked lanes when opts.lane_chunk is set
     res = solve_phase2(f, starts, opts, pcount=pcount)
-    # make the scalar diagnostics truly replicated across devices; eval_rows
-    # sums the physical batched-sweep rows over the mesh (0 under per_lane)
+    # make the scalar diagnostics truly replicated across devices;
+    # eval_rows sums the physical batched-sweep rows over the mesh (0 under
+    # per_lane) and map_trips the per-shard chunk-step trips — each shard
+    # repacks/compacts its own lanes, so the psum'd totals surface the
+    # whole-mesh tail work
     res = res._replace(n_converged=pcount(res.n_converged),
-                       eval_rows=pcount(res.eval_rows))
+                       eval_rows=pcount(res.eval_rows),
+                       map_trips=pcount(res.map_trips))
 
     # global best among converged lanes
     best_x, best_f = _select_best(res)
@@ -167,6 +171,7 @@ def distributed_zeus(
             n_converged=P(),
             n_evals=lane_spec,
             eval_rows=P(),
+            map_trips=P(),
         ),
         P(),  # pso gf
     )

@@ -78,6 +78,42 @@ row-wise jnp references); vmap-of-scalar AD fallback closures can be
 re-specialized by XLA with different FMA contraction per bucket size,
 where the contract degrades to the chunked-execution one (same statuses,
 fp32 iterates). See DESIGN.md §11 and tests/test_batched_sweep.py.
+
+Global cross-chunk lane repacking
+---------------------------------
+Per-chunk compaction cuts each chunk's *rows* but the chunked sweep still
+pays one lax.map trip per chunk: late in a solve, B/C sequential chunk
+steps run even when every survivor would fit in one chunk. With
+`repack_every=n > 0` (batched + lane_chunk only) the engine periodically
+gathers ALL still-active lanes across chunks — a chunk-crossing gather of
+the whole BatchLanes pytree, dense-H stack included — into the smallest
+power-of-two number of full chunks, maps the sweep over those chunks only,
+and scatters back: tail trips drop from B/C to bucket(ceil(active/C)),
+surfaced as `BFGSResult.map_trips`. Every repacked chunk is exactly C wide,
+so the evaluator batch size never varies and repacking alone is bit-exact
+for *every* evaluator, vmap AD fallbacks included (the per-chunk-compaction
+codegen caveat needs varying batch sizes to bite). Composes with
+`compact_every` (prefix compaction inside each repacked chunk; plans are
+recomputed against the repacked layout whenever the repack plan refreshes)
+and with the distributed driver (each shard repacks its own lanes;
+eval_rows/map_trips are psum'd). jit cache: (log2(B/C)+1) repack branches
+× (log2(C)+1) compaction buckets step specializations worst case.
+
+Adaptive speculative ladder
+---------------------------
+The full speculative ladder prices every sweep at K·B objective rows even
+when most lanes accept rung 0 — the right trade early (one launch versus K
+divergent round-trips) but pure overhead late. `ladder_len=L > 0` launches
+only the first L rungs speculatively; lanes that exhaust them fall back to
+masked sequential backtracking over the remaining rungs — unrolled
+lax.cond probes, one (B,) launch per executed rung, skipped once every
+lane has accepted. Every launch (short ladder, full ladder, each probe)
+re-enters the same canonical trial graph with a host-constant α slice of
+one shared cumprod ladder, which is what makes accepted α, exhaustion α,
+and statuses bit-identical to the full ladder for identically-rounding
+(launch-size-stable) evaluators — see core/linesearch.py for the codegen
+reasoning and tests/test_batched_sweep.py::TestAdaptiveLadder for the
+enforcement.
 """
 from __future__ import annotations
 
@@ -122,6 +158,12 @@ class BFGSResult(NamedTuple):
     # driver psums per-device totals) — don't gate correctness on it at
     # pod scale.
     eval_rows: Optional[jnp.ndarray] = None
+    # scalar int32 — chunk-step invocations the sweep driver issued (the
+    # lax.map trip count): one per sweep monolithic, n_chunks per sweep
+    # chunked-static, bucket(ceil(active/C)) per sweep under global lane
+    # repacking (repack_every > 0) — the tail-latency metric repacking
+    # optimizes. Psum'd across the mesh by the distributed driver.
+    map_trips: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +191,20 @@ class EngineOptions:
     # docstring); 1 is a good default when enabling — the per-sweep plan
     # cost is one argsort over lane flags, negligible next to the ladder.
     compact_every: int = 0
+    # Global cross-chunk lane repacking cadence (batched + lane_chunk only).
+    # 0 disables; n > 0 re-gathers all still-active lanes ACROSS chunks into
+    # the smallest power-of-two number of full chunks every n sweeps, so the
+    # tail's lax.map trip count drops from B/C to ceil(bucket(active)/C).
+    # Composes with compact_every (per-chunk prefix compaction inside the
+    # repacked chunks). Bit-identical lanes (module docstring).
+    repack_every: int = 0
+    # Adaptive speculative Armijo ladder (batched mode only). 0 runs the
+    # full ls_iters-rung ladder in one launch (exact-parity default); L > 0
+    # launches only the first L rungs speculatively and falls back to masked
+    # sequential backtracking for lanes that exhaust them — same accepted α
+    # by construction (core/linesearch.py), K·B → L·B + depth·B ladder rows
+    # per sweep when most lanes accept early rungs.
+    ladder_len: int = 0
 
 
 class DirectionStrategy(Protocol):
@@ -370,8 +426,17 @@ def batch_lanes_init(bobj, bstrategy: BatchedDirectionStrategy,
 
 
 def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
-                     opts: EngineOptions, lanes: BatchLanes) -> BatchLanes:
-    """One sweep over the whole stack (Alg. 4 lines 10-16, batch level)."""
+                     opts: EngineOptions, lanes: BatchLanes
+                     ) -> Tuple[BatchLanes, jnp.ndarray]:
+    """One sweep over the whole stack (Alg. 4 lines 10-16, batch level).
+
+    Returns (lanes', rows) where rows is the scalar int32 count of physical
+    objective rows this step evaluated — (ladder probes + 1 value+grad) per
+    lane in the stack, masked/padding lanes included. The sweep driver sums
+    these into BFGSResult.eval_rows; deriving rows here (from the actual
+    stack size and the line search's actual probe count) is what keeps the
+    accounting honest under compaction, repacking, and the adaptive ladder,
+    whose per-sweep work is dynamic."""
     X, F, G, P = lanes.x, lanes.f, lanes.g, lanes.p
     active = jnp.logical_not(jnp.logical_or(lanes.converged, lanes.failed))
 
@@ -380,7 +445,8 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
     P = jnp.where(descent[:, None], P, -G)
 
     ls = armijo_backtracking_batch(
-        bobj.value_batch, X, P, F, G, c1=opts.ls_c1, max_iters=opts.ls_iters
+        bobj.value_batch, X, P, F, G, c1=opts.ls_c1, max_iters=opts.ls_iters,
+        ladder_len=opts.ladder_len,
     )
     X_new = X + ls.alpha[:, None] * P
     F_new, G_new = bobj.value_and_grad_batch(X_new)
@@ -408,7 +474,7 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
         mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
         return jnp.where(mask, new, old)
 
-    return BatchLanes(
+    stepped = BatchLanes(
         x=keep(X_new, X),
         f=keep(F_new, F),
         g=keep(G_new, G),
@@ -421,6 +487,8 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
         ).astype(jnp.int32),
         direction_state=state,
     )
+    rows = (ls.n_evals.astype(jnp.int32) + 1) * X.shape[0]
+    return stepped, rows
 
 
 # ---------------------------------------------------------------------------
@@ -471,20 +539,103 @@ def _compacted_sweep(step_fn, buckets: Tuple[int, ...], lanes,
     """One sweep on the active prefix only: gather rows perm[:bucket], step,
     scatter back. Valid as long as every active lane sits inside the prefix
     — guaranteed between plan refreshes because frozen lanes never unfreeze
-    (converged/failed are sticky), so the active set only shrinks."""
+    (converged/failed are sticky), so the active set only shrinks.
+
+    `step_fn` returns (lanes', rows); the scatter passes rows through, so
+    the caller's eval_rows accounting sees the bucket's physical work."""
 
     def make_branch(size: int):
         def branch(operands):
             lanes, perm = operands
             idx = perm[:size]
             sub = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), lanes)
-            sub = step_fn(sub)
-            return jax.tree.map(lambda a, s: a.at[idx].set(s), lanes, sub)
+            sub, rows = step_fn(sub)
+            return (
+                jax.tree.map(lambda a, s: a.at[idx].set(s), lanes, sub),
+                rows,
+            )
 
         return branch
 
     return jax.lax.switch(bidx, [make_branch(s) for s in buckets],
                           (lanes, perm))
+
+
+# ---------------------------------------------------------------------------
+# Global cross-chunk lane repacking (sweep_mode="batched", lane_chunk=C,
+# repack_every > 0).
+#
+# Per-chunk compaction shrinks each chunk's *row* count but the sweep still
+# pays one lax.map trip per chunk — B/C sequential chunk-steps even when the
+# survivors of the whole swarm would fit in a single chunk. Repacking is the
+# chunk-level analogue: every repack_every sweeps, gather ALL still-active
+# lanes across chunks (a chunk-crossing gather of the full BatchLanes pytree,
+# including the (B, D, D) dense-H stack) into the smallest power-of-two
+# number of FULL chunks, run the sweep's lax.map over those chunks only, and
+# scatter back. The trip count drops from B/C to bucket(ceil(active/C));
+# every repacked chunk is exactly C wide, so the evaluator batch size never
+# changes — which is why repacking is bit-exact even for evaluators whose
+# codegen is only stable at a fixed batch size (the per-chunk compaction
+# caveat does not apply to repacking alone). Composes with compact_every:
+# the per-chunk active-prefix compaction then runs inside each repacked
+# chunk, with its plans recomputed against the repacked layout.
+# ---------------------------------------------------------------------------
+def _repack_plan(active_flat: jnp.ndarray, chunk: int,
+                 cbuckets: jnp.ndarray):
+    """(gperm, gcidx) over the flattened lane axis: a stable partition
+    putting active lanes first (stable ⇒ gathered row order is independent
+    of *which* lanes froze) and the smallest chunk-count bucket covering
+    ceil(active / chunk) full chunks."""
+    gperm = jnp.argsort(jnp.logical_not(active_flat),
+                        stable=True).astype(jnp.int32)
+    n_active = jnp.sum(active_flat.astype(jnp.int32))
+    n_needed = -(-n_active // chunk)  # ceil; 0 when nothing is active
+    gcidx = jnp.searchsorted(cbuckets, n_needed, side="left")
+    return gperm, jnp.minimum(gcidx, cbuckets.shape[0] - 1).astype(jnp.int32)
+
+
+def _repacked_sweep(inner_sweep, cbuckets: Tuple[int, ...], chunk: int,
+                    lanes, gperm: jnp.ndarray, gcidx: jnp.ndarray,
+                    inner_aux):
+    """One sweep on the repacked chunk set only.
+
+    Gathers rows gperm[:m·C] of the flattened (n_chunks·C, ...) lanes into
+    (m, C, ...) stacks, runs `inner_sweep` (a lax.map of the chunk step,
+    optionally per-chunk-compacted via `inner_aux`) over the m chunks, and
+    scatters back. Valid between plan refreshes for the same reason
+    compaction is: frozen lanes never unfreeze, so every active lane stays
+    inside the gathered prefix. Returns (lanes', rows)."""
+    n_chunks = lanes.x.shape[0]
+
+    def make_branch(m: int):
+        def branch(operands):
+            lanes, gperm, inner_aux = operands
+            flat = jax.tree.map(
+                lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:]), lanes
+            )
+            idx = gperm[: m * chunk]
+            sub = jax.tree.map(
+                lambda a: jnp.take(a, idx, axis=0).reshape(
+                    (m, chunk) + a.shape[1:]
+                ),
+                flat,
+            )
+            sub, rows = inner_sweep(sub, inner_aux, m)
+            flat = jax.tree.map(
+                lambda a, s: a.at[idx].set(
+                    s.reshape((m * chunk,) + s.shape[2:])
+                ),
+                flat, sub,
+            )
+            out = jax.tree.map(
+                lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), flat
+            )
+            return out, rows
+
+        return branch
+
+    return jax.lax.switch(gcidx, [make_branch(m) for m in cbuckets],
+                          (lanes, gperm, inner_aux))
 
 
 def run_multistart(
@@ -505,7 +656,11 @@ def run_multistart(
     batched Armijo + fused batch kernels instead of a vmapped scalar step;
     `opts.compact_every=n > 0` additionally compacts each sweep (or chunk)
     onto its active-lane prefix — bit-identical lanes, O(bucket(active)·K)
-    tail work (module docstring).
+    tail work; `opts.repack_every=n > 0` (chunked batched only) globally
+    repacks the surviving lanes into fewer full chunks so the tail's
+    lax.map trip count tracks the active set too; `opts.ladder_len=L > 0`
+    shortens the speculative Armijo ladder with a masked sequential
+    fallback (module docstring for all three).
     """
     B, D = x0.shape
     required_c = opts.required_c if opts.required_c is not None else B
@@ -517,6 +672,26 @@ def run_multistart(
         raise ValueError(
             "compact_every > 0 requires sweep_mode='batched' "
             f"(got sweep_mode={opts.sweep_mode!r})"
+        )
+    if opts.repack_every < 0:
+        raise ValueError(f"repack_every must be >= 0 (got {opts.repack_every})")
+    if opts.repack_every > 0 and opts.sweep_mode != "batched":
+        raise ValueError(
+            "repack_every > 0 requires sweep_mode='batched' "
+            f"(got sweep_mode={opts.sweep_mode!r})"
+        )
+    if opts.repack_every > 0 and opts.lane_chunk is None:
+        raise ValueError(
+            "repack_every > 0 repacks lanes ACROSS chunks and needs "
+            "lane_chunk set (got lane_chunk=None)"
+        )
+    if opts.ladder_len < 0:
+        raise ValueError(f"ladder_len must be >= 0 (got {opts.ladder_len})")
+    if opts.ladder_len > 0 and opts.sweep_mode != "batched":
+        raise ValueError(
+            "ladder_len > 0 shortens the speculative batched ladder and "
+            f"requires sweep_mode='batched' (got {opts.sweep_mode!r}); the "
+            "per-lane sequential search is already adaptive"
         )
 
     if opts.sweep_mode == "batched":
@@ -537,7 +712,11 @@ def run_multistart(
                                        opts.ad_mode)
         step_one = functools.partial(lane_step, f, vg, strategy, opts)
         init_chunk = jax.vmap(init_one)
-        step_chunk = jax.vmap(step_one)
+        step_vmapped = jax.vmap(step_one)
+        # same (lanes', rows) contract as the batched step so the sweep
+        # driver below is schedule-agnostic; per_lane rows are not
+        # instrumented (eval_rows stays 0)
+        step_chunk = lambda ls: (step_vmapped(ls), jnp.zeros((), jnp.int32))
     else:
         raise ValueError(
             f"unknown sweep_mode {opts.sweep_mode!r}; "
@@ -561,44 +740,110 @@ def run_multistart(
                                           jnp.logical_not(is_pad)),
                 failed=jnp.logical_or(lanes.failed, is_pad),
             )
-        sweep = lambda ls: jax.lax.map(step_chunk, ls)
+        def sweep(ls):
+            new, rows = jax.lax.map(step_chunk, ls)
+            return new, jnp.sum(rows)
+
         group, n_groups = C, n_chunks
     else:
         lanes = init_chunk(x0)
         sweep = step_chunk
         group, n_groups = B, 1
 
-    # physical objective-row accounting (batched path only): each sweep
-    # evaluates (K ladder rows + 1 value+grad row) per lane in its group,
-    # padding lanes included — exactly the work compaction removes
-    K_ladder = max(opts.ls_iters, 0)
-    rows_full_sweep = jnp.asarray(n_groups * group * (K_ladder + 1), jnp.int32)
+    # physical objective-row accounting (batched path only): the step
+    # functions report their own rows ((probes + 1) per lane actually
+    # stacked), so eval_rows stays honest under compaction, repacking, and
+    # the adaptive ladder; init evaluates one value+grad row per lane
     eval_rows0 = jnp.asarray(n_groups * group if batched else 0, jnp.int32)
+    trips_static = jnp.asarray(n_groups, jnp.int32)  # chunk-steps per sweep
 
     compacting = batched and opts.compact_every > 0
+    # repacking needs 2+ chunks to rebalance across; a single-chunk run
+    # (lane_chunk >= B) degenerates to the static schedule silently
+    repacking = batched and opts.repack_every > 0 and chunked
+
     if compacting:
         buckets = _compaction_buckets(group)
         buckets_arr = jnp.asarray(buckets, jnp.int32)
-        rows_arr = jnp.asarray([s * (K_ladder + 1) for s in buckets],
-                               jnp.int32)
         plan_one = functools.partial(_compaction_plan, buckets=buckets_arr)
+
+    if repacking:
+        cbuckets = _compaction_buckets(n_chunks)  # chunk-COUNT buckets
+        cbuckets_arr = jnp.asarray(cbuckets, jnp.int32)
+        gplan = functools.partial(_repack_plan, chunk=C,
+                                  cbuckets=cbuckets_arr)
+        if compacting:
+            cplan_fn = jax.vmap(plan_one)
+
+            def fresh_inner_aux(lanes, gperm):
+                # per-chunk compaction plans of the REPACKED layout: gather
+                # the active flags the way the sweep will gather the lanes
+                act = _active_mask(lanes).reshape(-1)
+                gact = jnp.take(act, gperm).reshape(n_chunks, C)
+                return cplan_fn(gact)
+
+            def inner_sweep(sub, inner_aux, m):
+                cperm, cbidx = inner_aux
+                new, rows = jax.lax.map(
+                    lambda args: _compacted_sweep(step_chunk, buckets, *args),
+                    (sub, cperm[:m], cbidx[:m]),
+                )
+                return new, jnp.sum(rows)
+        else:
+            def inner_sweep(sub, inner_aux, m):
+                new, rows = jax.lax.map(step_chunk, sub)
+                return new, jnp.sum(rows)
+
+        def refresh_plans(k, lanes, aux):
+            """Boundary-sweep plan refreshes, both skipped via lax.cond in
+            between (the stored plans stay valid: frozen lanes never
+            unfreeze, so the active set only shrinks). The per-chunk
+            compaction plans are relative to the repacked layout, so a
+            repack refresh forces a compaction re-plan too."""
+            renew_g = (k % opts.repack_every) == 0
+            gperm, gcidx = jax.lax.cond(
+                renew_g,
+                lambda ls, a: gplan(_active_mask(ls).reshape(-1)),
+                lambda ls, a: a[:2],
+                lanes, aux,
+            )
+            if not compacting:
+                return (gperm, gcidx)
+            renew_c = jnp.logical_or(renew_g,
+                                     (k % opts.compact_every) == 0)
+            cperm, cbidx = jax.lax.cond(
+                renew_c,
+                lambda ls, gp, a: fresh_inner_aux(ls, gp),
+                lambda ls, gp, a: a[2:],
+                lanes, gperm, aux,
+            )
+            return (gperm, gcidx, cperm, cbidx)
+
+        def repacked(lanes, aux):
+            gperm, gcidx = aux[0], aux[1]
+            inner_aux = aux[2:]
+            lanes, srows = _repacked_sweep(inner_sweep, cbuckets, C, lanes,
+                                           gperm, gcidx, inner_aux)
+            return lanes, srows, cbuckets_arr[gcidx]
+
+        gp0 = gplan(_active_mask(lanes).reshape(-1))
+        aux0 = gp0 + fresh_inner_aux(lanes, gp0[0]) if compacting else gp0
+    elif compacting:
         if chunked:
             plan_fn = jax.vmap(plan_one)  # each chunk compacts independently
 
             def compacted(lanes, perm, bidx):
-                new = jax.lax.map(
+                new, rows = jax.lax.map(
                     lambda args: _compacted_sweep(step_chunk, buckets, *args),
                     (lanes, perm, bidx),
                 )
-                return new, jnp.sum(rows_arr[bidx])
+                return new, jnp.sum(rows)
         else:
             plan_fn = plan_one
 
             def compacted(lanes, perm, bidx):
-                return (
-                    _compacted_sweep(step_chunk, buckets, lanes, perm, bidx),
-                    rows_arr[bidx],
-                )
+                return _compacted_sweep(step_chunk, buckets, lanes, perm,
+                                        bidx)
 
         aux0 = plan_fn(_active_mask(lanes))
     else:
@@ -613,15 +858,18 @@ def run_multistart(
         return n_conv, n_act
 
     def cond(carry):
-        k, lanes, n_conv, n_act, _, _ = carry
+        k, lanes, n_conv, n_act, _, _, _ = carry
         return jnp.logical_and(
             k < opts.iter_max,
             jnp.logical_and(n_conv < required_c, n_act > 0),
         )
 
     def body(carry):
-        k, lanes, _, _, aux, rows = carry
-        if compacting:
+        k, lanes, _, _, aux, rows, trips = carry
+        if repacking:
+            aux = refresh_plans(k, lanes, aux)
+            lanes, srows, strips = repacked(lanes, aux)
+        elif compacting:
             # refresh the partition/bucket on boundary sweeps only — under
             # lax.cond the plan (argsort + bucket search) is actually
             # skipped in between, which is what lets compact_every > 1
@@ -636,16 +884,19 @@ def run_multistart(
             )
             perm, bidx = aux
             lanes, srows = compacted(lanes, perm, bidx)
+            strips = trips_static
         else:
-            lanes = sweep(lanes)
-            srows = rows_full_sweep if batched else jnp.zeros((), jnp.int32)
+            lanes, srows = sweep(lanes)
+            strips = trips_static
         n_conv, n_act = counts(lanes)
-        return (k + 1, lanes, n_conv, n_act, aux, rows + srows)
+        return (k + 1, lanes, n_conv, n_act, aux, rows + srows,
+                trips + strips)
 
     n_conv0, n_act0 = counts(lanes)
-    k, lanes, _, _, _, eval_rows = jax.lax.while_loop(
+    k, lanes, _, _, _, eval_rows, map_trips = jax.lax.while_loop(
         cond, body,
-        (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0, eval_rows0),
+        (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0, eval_rows0,
+         jnp.zeros((), jnp.int32)),
     )
 
     if chunked:
@@ -669,6 +920,7 @@ def run_multistart(
         n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
         n_evals=lanes.n_evals,
         eval_rows=eval_rows,
+        map_trips=map_trips,
     )
 
 

@@ -13,6 +13,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class LineSearchResult(NamedTuple):
@@ -67,7 +68,10 @@ def armijo_backtracking(
 class BatchLineSearchResult(NamedTuple):
     alpha: jnp.ndarray  # (B,) accepted step sizes
     f_new: jnp.ndarray  # (B,) f at the accepted (or last evaluated) trial
-    n_evals: jnp.ndarray  # scalar — objective evals consumed per lane
+    # scalar int32 — objective evals consumed per lane. Static K for the
+    # full speculative ladder; traced (ladder_len + executed fallback
+    # rungs) for the adaptive ladder.
+    n_evals: jnp.ndarray
 
 
 def armijo_backtracking_batch(
@@ -80,8 +84,9 @@ def armijo_backtracking_batch(
     alpha0: float = 1.0,
     shrink: float = 0.5,
     max_iters: int = 20,
+    ladder_len: int = 0,
 ) -> BatchLineSearchResult:
-    """Speculative batched Armijo: the whole geometric α-ladder at once.
+    """Speculative batched Armijo: the geometric α-ladder in one launch.
 
     The sequential search probes α₀·shrinkᵏ, k = 0..K-1, stopping at the
     first Armijo-accepted trial — under vmap every lane pays the *slowest*
@@ -94,8 +99,22 @@ def armijo_backtracking_batch(
     one launch of *latency*). Exhaustion keeps the final halved α with the
     last evaluated trial's f, matching `armijo_backtracking`.
 
+    `ladder_len = L` (0 < L < K) makes the speculation *adaptive*: only the
+    first L rungs are launched speculatively (an (L·B, D) call), and lanes
+    that exhaust them fall back to masked sequential backtracking over the
+    remaining rungs — one (B, D) launch per extra rung, terminating as soon
+    as every lane has accepted. Late in a solve most lanes accept rung 0,
+    so a short ladder cuts the per-sweep objective work from K·B rows to
+    L·B + depth·B where depth is the *worst surviving* lane's extra
+    backtracking — while the probed α sequence stays exactly the full
+    ladder's: both phases index one shared `alphas` array (the cumprod
+    ladder), so the accepted α, the exhaustion α (alphas[K-1]·shrink), and
+    every Armijo comparison are bit-identical to ladder_len=0 given an
+    identically-rounding evaluator. ladder_len <= 0 or >= K runs the full
+    speculative ladder.
+
     B here is whatever lane set the caller holds — the full swarm, a
-    lane_chunk, or the engine's compacted active-lane prefix. The last case
+    lane_chunk, or the engine's compacted/repacked active-lane prefix. That
     leans on `value_batch` being row-independent (row i's value must not
     depend on B or on other rows): that is what makes a compacted lane's
     accepted α bit-identical to its uncompacted one. Every built-in
@@ -111,23 +130,100 @@ def armijo_backtracking_batch(
             f_new=F0,
             n_evals=jnp.zeros((), jnp.int32),
         )
+    L = K if ladder_len <= 0 else min(ladder_len, K)
     ddir = jnp.sum(G0 * P, axis=-1)  # (B,) directional derivatives
-    # cumulative products reproduce the sequential repeated-multiply ladder
-    # bit-for-bit (alpha *= shrink), unlike shrink**k for non-binary shrink
-    steps = jnp.full((K,), shrink, dtype).at[0].set(1.0)
-    alphas = jnp.asarray(alpha0, dtype) * jnp.cumprod(steps)  # (K,)
-    trials = X[None] + alphas[:, None, None] * P[None]  # (K, B, D)
-    F = value_batch(trials.reshape(K * B, D)).reshape(K, B)
-    ok = F <= F0[None] + c1 * alphas[:, None] * ddir[None]  # (K, B)
+    # The α ladder is computed on the HOST in the array dtype: sequential
+    # repeated multiplies (cumprod) reproduce the per-lane search's
+    # alpha *= shrink bit-for-bit (unlike shrink**k for non-binary shrink),
+    # and baking the values in as constants lets every launch below slice
+    # them without introducing traced-slice ops into the trial graph.
+    npdt = np.dtype(dtype)
+    steps = np.full((K,), shrink, npdt)
+    steps[0] = npdt.type(1.0)
+    alphas_np = (npdt.type(alpha0) * np.cumprod(steps)).astype(npdt)  # (K,)
+    alphas = jnp.asarray(alphas_np)
+
+    def ladder_launch(al_np):
+        """One speculative launch of the rungs in `al_np` — THE canonical
+        trial graph: broadcast X + α·P from (X, P) and a host-constant α
+        vector, reshape, one value_batch call. Exactness of the adaptive
+        ladder rests on every launch (short ladder, full ladder, each
+        fallback rung) using this same graph at different α lengths: XLA
+        then compiles the evaluator identically per row (the same
+        size-stability the compaction suite enforces), whereas slicing a
+        shared precomputed trial tensor — or computing a rung inside a
+        nested while_loop body — changes the fusion context and
+        re-contracts the arithmetic by a ULP, flipping knife-edge Armijo
+        accepts between the full and adaptive programs (observed for the
+        jnp-reference evaluators)."""
+        k = len(al_np)
+        al = jnp.asarray(al_np)
+        trials = X[None] + al[:, None, None] * P[None]  # (k, B, D)
+        return value_batch(trials.reshape(k * B, D)).reshape(k, B)
+
+    # Armijo thresholds for ALL K rungs as one barriered region, whatever
+    # the ladder length: both programs then contain the bit-identical
+    # (K, B) threshold tensor (the barrier keeps consumers from re-fusing
+    # the mul-add chain differently per phase), and the phases just index
+    # rows of it.
+    rhs = jax.lax.optimization_barrier(
+        F0[None] + c1 * alphas[:, None] * ddir[None])  # (K, B)
+
+    F = ladder_launch(alphas_np[:L])  # (L, B)
+    ok = F <= rhs[:L]  # (L, B)
     any_ok = jnp.any(ok, axis=0)
     k_acc = jnp.argmax(ok, axis=0)  # first accepted rung (0 when none)
     alpha_acc = alphas[k_acc]
     f_acc = jnp.take_along_axis(F, k_acc[None], axis=0)[0]
-    return BatchLineSearchResult(
-        alpha=jnp.where(any_ok, alpha_acc, alphas[-1] * shrink),
-        f_new=jnp.where(any_ok, f_acc, F[-1]),
-        n_evals=jnp.asarray(K, jnp.int32),
+    if L == K:
+        return BatchLineSearchResult(
+            alpha=jnp.where(any_ok, alpha_acc, alphas[-1] * shrink),
+            f_new=jnp.where(any_ok, f_acc, F[-1]),
+            n_evals=jnp.asarray(K, jnp.int32),
+        )
+
+    # Masked sequential fallback for lanes that exhausted the short ladder:
+    # rung i probes α_i for every still-searching lane (the whole (B, D)
+    # batch is evaluated — row-independence makes the masked rows free of
+    # side effects). The rungs are UNROLLED as one lax.cond per remaining
+    # rung rather than a lax.while_loop, each re-entering ladder_launch
+    # with a single-rung α constant — see ladder_launch's docstring for
+    # why that exact shape is what keeps the accept decisions bit-equal to
+    # the full ladder's. At runtime each cond short-circuits: once every
+    # lane has accepted, the remaining rungs skip their objective launch,
+    # so the physical cost is L·B + (worst surviving lane's extra
+    # depth)·B rows. A lane rejecting rung i carries α = α_i·shrink so
+    # exhaustion at i = K-1 reproduces the full ladder's alphas[-1]·shrink
+    # exactly.
+    def probe(state, i):
+        alpha, f1, done, n = state
+        Ft = ladder_launch(alphas_np[i:i + 1])[0]  # (B,) one batched rung
+        ok_i = Ft <= rhs[i]
+        searching = jnp.logical_not(done)
+        alpha = jnp.where(searching,
+                          jnp.where(ok_i, alphas[i], alphas[i] * shrink),
+                          alpha)
+        f1 = jnp.where(searching, Ft, f1)
+        return (alpha, f1,
+                jnp.logical_or(done, jnp.logical_and(searching, ok_i)),
+                n + 1)
+
+    state = (
+        jnp.where(any_ok, alpha_acc, alphas[L - 1] * shrink),
+        jnp.where(any_ok, f_acc, F[-1]),
+        any_ok,
+        jnp.asarray(L, jnp.int32),
     )
+    for i in range(L, K):
+        state = jax.lax.cond(
+            jnp.all(state[2]),
+            lambda s: s,
+            partial(probe, i=i),
+            state,
+        )
+    alpha, f1, _, n = state
+    return BatchLineSearchResult(alpha=alpha, f_new=f1,
+                                 n_evals=n.astype(jnp.int32))
 
 
 def wolfe_linesearch(

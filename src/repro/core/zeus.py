@@ -43,6 +43,14 @@ class ZeusOptions:
     # overrides the solver opts' active-lane compaction cadence (batched
     # sweeps only; 0 = off) — see core/engine.py "Active-lane compaction"
     compact_every: Optional[int] = None
+    # overrides the solver opts' global cross-chunk lane repacking cadence
+    # (batched + lane_chunk only; 0 = off) — see core/engine.py "Global
+    # cross-chunk lane repacking"
+    repack_every: Optional[int] = None
+    # overrides the solver opts' speculative Armijo ladder length (batched
+    # only; 0 = full ladder) — see core/engine.py "Adaptive speculative
+    # ladder"
+    ladder_len: Optional[int] = None
 
 
 class ZeusResult(NamedTuple):
@@ -81,6 +89,8 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
                 lane_chunk=b.lane_chunk,
                 sweep_mode=b.sweep_mode,
                 compact_every=b.compact_every,
+                repack_every=b.repack_every,
+                ladder_len=b.ladder_len,
             )
     elif name == "bfgs":
         solver_opts = opts.bfgs
@@ -91,6 +101,10 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
         eopts = dataclasses.replace(eopts, sweep_mode=opts.sweep_mode)
     if opts.compact_every is not None:
         eopts = dataclasses.replace(eopts, compact_every=opts.compact_every)
+    if opts.repack_every is not None:
+        eopts = dataclasses.replace(eopts, repack_every=opts.repack_every)
+    if opts.ladder_len is not None:
+        eopts = dataclasses.replace(eopts, ladder_len=opts.ladder_len)
     return run_multistart(f, x0, strategy, eopts, pcount=pcount)
 
 

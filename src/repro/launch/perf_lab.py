@@ -76,26 +76,39 @@ VARIANTS = {
 }
 
 
-# zeus engine variant name ->
-#   (solver, lane_chunk, hessian_impl, sweep_mode, compact_every)
+# zeus engine variant name -> (solver, lane_chunk, hessian_impl,
+#   sweep_mode, compact_every, repack_every, ladder_len)
 ZEUS_VARIANTS = {
-    "bfgs": ("bfgs", None, "fast", "per_lane", 0),
-    "bfgs_ref": ("bfgs", None, "reference", "per_lane", 0),
-    "bfgs_c64": ("bfgs", 64, "fast", "per_lane", 0),
-    "bfgs_c256": ("bfgs", 256, "fast", "per_lane", 0),
+    "bfgs": ("bfgs", None, "fast", "per_lane", 0, 0, 0),
+    "bfgs_ref": ("bfgs", None, "reference", "per_lane", 0, 0, 0),
+    "bfgs_c64": ("bfgs", 64, "fast", "per_lane", 0, 0, 0),
+    "bfgs_c256": ("bfgs", 256, "fast", "per_lane", 0, 0, 0),
     # batched sweep path: speculative ladder + fused batch kernels
-    "bfgs_batched": ("bfgs", None, "fast", "batched", 0),
-    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched", 0),
-    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched", 0),
+    "bfgs_batched": ("bfgs", None, "fast", "batched", 0, 0, 0),
+    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched", 0, 0, 0),
+    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched", 0, 0, 0),
     # + active-lane compaction: the sweep runs on the active-prefix bucket
     # only, so wall clock tracks the surviving lanes instead of B
-    "bfgs_batched_compact": ("bfgs", None, "fast", "batched", 1),
-    "bfgs_batched_c256_compact": ("bfgs", 256, "fast", "batched", 1),
-    "lbfgs": ("lbfgs", None, None, "per_lane", 0),
-    "lbfgs_c64": ("lbfgs", 64, None, "per_lane", 0),
-    "lbfgs_c256": ("lbfgs", 256, None, "per_lane", 0),
-    "lbfgs_batched": ("lbfgs", None, None, "batched", 0),
-    "lbfgs_batched_compact": ("lbfgs", None, None, "batched", 1),
+    "bfgs_batched_compact": ("bfgs", None, "fast", "batched", 1, 0, 0),
+    "bfgs_batched_c256_compact": ("bfgs", 256, "fast", "batched", 1, 0, 0),
+    # + global cross-chunk repacking: survivors re-gathered into fewer
+    # full chunks, so the lax.map trip count tracks the tail too
+    "bfgs_batched_c64_repack": ("bfgs", 64, "fast", "batched", 0, 1, 0),
+    "bfgs_batched_c64_repack_compact":
+        ("bfgs", 64, "fast", "batched", 1, 1, 0),
+    "bfgs_batched_c256_repack": ("bfgs", 256, "fast", "batched", 0, 1, 0),
+    # + adaptive speculative ladder: 4 speculative rungs + masked
+    # sequential fallback — same trajectory, fewer objective rows
+    "bfgs_batched_ladder4": ("bfgs", None, "fast", "batched", 0, 0, 4),
+    "bfgs_batched_c64_repack_ladder4":
+        ("bfgs", 64, "fast", "batched", 1, 1, 4),
+    "lbfgs": ("lbfgs", None, None, "per_lane", 0, 0, 0),
+    "lbfgs_c64": ("lbfgs", 64, None, "per_lane", 0, 0, 0),
+    "lbfgs_c256": ("lbfgs", 256, None, "per_lane", 0, 0, 0),
+    "lbfgs_batched": ("lbfgs", None, None, "batched", 0, 0, 0),
+    "lbfgs_batched_compact": ("lbfgs", None, None, "batched", 1, 0, 0),
+    "lbfgs_batched_c64_repack": ("lbfgs", 64, None, "batched", 0, 1, 0),
+    "lbfgs_batched_ladder4": ("lbfgs", None, None, "batched", 0, 0, 4),
 }
 
 
@@ -139,7 +152,8 @@ def _run_zeus_lab(args, results):
             f"unknown zeus variant(s) {', '.join(map(repr, unknown))}; "
             f"known: {', '.join(ZEUS_VARIANTS)}")
     for name in names:
-        solver, chunk, impl, sweep_mode, compact = ZEUS_VARIANTS[name]
+        (solver, chunk, impl, sweep_mode, compact, repack,
+         ladder) = ZEUS_VARIANTS[name]
         key = f"zeus|{args.zeus}|d{args.dim}|b{args.lanes}|i{args.iters}|{name}"
         if key in results and results[key].get("status") == "ok":
             print(f"[cached] {key}")
@@ -147,11 +161,13 @@ def _run_zeus_lab(args, results):
         if solver == "bfgs":
             sopts = BFGSOptions(iter_bfgs=args.iters, theta=1e-4,
                                 hessian_impl=impl, sweep_mode=sweep_mode,
-                                compact_every=compact)
+                                compact_every=compact, repack_every=repack,
+                                ladder_len=ladder)
         else:
             sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4,
                                  sweep_mode=sweep_mode,
-                                 compact_every=compact)
+                                 compact_every=compact, repack_every=repack,
+                                 ladder_len=ladder)
         strategy, eopts = get_solver(solver)(sopts, lane_chunk=chunk)
         run = jax.jit(lambda x: run_multistart(obj.fn, x, strategy, eopts))
         res = jax.block_until_ready(run(x0))  # compile + warm
@@ -167,6 +183,9 @@ def _run_zeus_lab(args, results):
             # physical batched-path objective rows (0 under per_lane) —
             # shows the compaction variants' tail-work cut directly
             "eval_rows": int(res.eval_rows),
+            # chunk-step (lax.map trip) count — shows the repack variants'
+            # tail-latency cut directly
+            "map_trips": int(res.map_trips),
         }
         print(f"[{name}] {wall:.3f}s for {int(res.iterations)} sweeps × "
               f"{args.lanes} lanes; n_conv={int(res.n_converged)}", flush=True)

@@ -9,11 +9,47 @@ absent, collection must still succeed — property tests skip via
 tests/_hypothesis_compat.py instead of killing the whole run with a
 ModuleNotFoundError at import time.
 """
+import collections
 import os
 import sys
 
 # fail fast if someone exported a device-count override into the test env
 os.environ.pop("XLA_FLAGS", None)
+
+# ---------------------------------------------------------------------------
+# Per-FILE test-duration budget (ISSUE 4 satellite). What rots the CI matrix
+# here is not one slow test but a whole parity-sweep FILE creeping up (every
+# engine test jit-compiles solves), so alongside `--durations` reporting we
+# track cumulative wall per test module and fail the session when any file
+# exceeds REPRO_TESTFILE_TIMEOUT_S seconds. Unset = disabled (local runs);
+# CI exports it so regressions surface as a red build with the offending
+# files listed, instead of a silently slower matrix.
+# ---------------------------------------------------------------------------
+_file_durations = collections.defaultdict(float)
+
+
+def pytest_runtest_logreport(report):
+    if report.when in ("setup", "call", "teardown"):
+        _file_durations[report.nodeid.split("::", 1)[0]] += getattr(
+            report, "duration", 0.0)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    budget = os.environ.get("REPRO_TESTFILE_TIMEOUT_S")
+    if not budget:
+        return
+    over = {p: d for p, d in _file_durations.items() if d > float(budget)}
+    if over:
+        print(
+            f"\nFAIL: test file(s) exceeded REPRO_TESTFILE_TIMEOUT_S="
+            f"{budget}s:\n" + "\n".join(
+                f"  {d:8.1f}s  {p}"
+                for p, d in sorted(over.items(), key=lambda kv: -kv[1])),
+            file=sys.stderr,
+        )
+        # wrap_session returns session.exitstatus after this hook runs, so
+        # overriding it here turns the budget breach into a red build
+        session.exitstatus = 1
 
 # make `import _hypothesis_compat` work regardless of rootdir/ini settings
 sys.path.insert(0, os.path.dirname(__file__))

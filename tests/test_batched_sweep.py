@@ -209,6 +209,220 @@ class TestBatchedSweepParity:
             batched_bfgs(obj.fn, x0, BFGSOptions(sweep_mode="warp"))
 
 
+class TestAdaptiveLadder:
+    """ISSUE 4: the adaptive speculative ladder (`ladder_len=L`) probes the
+    SAME α sequence as the full K-rung ladder — a short speculative launch
+    plus masked sequential backtracking for lanes that exhaust it, both
+    indexing one shared cumprod α array. Accepted α, statuses, and stop
+    sweeps are therefore exactly equal to ladder_len=0 for every
+    identically-rounding evaluator (fused kernels and jnp references);
+    only the *physical* eval counts shrink."""
+
+    # ---- line-search level: exact accepted-α parity -----------------------
+    @pytest.mark.parametrize("name,dim", [("sphere", 5), ("rastrigin", 3),
+                                          ("rosenbrock", 4)])
+    @pytest.mark.parametrize("L", [1, 3, 7])
+    def test_alpha_matches_full_ladder(self, name, dim, L):
+        """Exactness needs an identically-rounding evaluator: the full
+        ladder evaluates rung k inside one (K·B,) launch, the adaptive
+        fallback inside a (B,) launch, and only launch-size-stable codegen
+        (the fused kernels / jnp refs every named objective routes
+        through — NOT vmap-of-scalar closures, which XLA may
+        FMA-recontract per batch size) guarantees the same bits. Both
+        searches run under jit — the engine's production context; eager
+        per-op dispatch compiles the canonical trial graph separately per
+        op and can round it differently from any compiled program."""
+        obj, X = _starts(name, 24, dim, seed=dim)
+        f = obj.fn
+        value_batch = as_batched(f).value_batch
+        F0 = value_batch(X)
+        G0 = jax.vmap(jax.grad(f))(X)
+        P = -G0
+        # a few ascent lanes so the deep-backtracking + exhaustion branches
+        # of the fallback loop are exercised, not just rung-0 accepts
+        P = P.at[::5].set(G0[::5] * 0.1)
+        full = jax.jit(
+            lambda X, P, F0, G0: armijo_backtracking_batch(
+                value_batch, X, P, F0, G0, c1=0.3, max_iters=20)
+        )(X, P, F0, G0)
+        adap = jax.jit(
+            lambda X, P, F0, G0: armijo_backtracking_batch(
+                value_batch, X, P, F0, G0, c1=0.3, max_iters=20,
+                ladder_len=L)
+        )(X, P, F0, G0)
+        np.testing.assert_array_equal(np.asarray(full.alpha),
+                                      np.asarray(adap.alpha))
+        np.testing.assert_array_equal(np.asarray(full.f_new),
+                                      np.asarray(adap.f_new))
+
+    def test_alpha_matches_sequential_search(self):
+        """Transitivity spelled out: adaptive == sequential per-lane too."""
+        obj, X = _starts("rosenbrock", 16, 3, seed=2)
+        f = obj.fn
+        F0 = jax.vmap(f)(X)
+        G0 = jax.vmap(jax.grad(f))(X)
+        P = -G0
+        seq = jax.vmap(
+            lambda x, p, f0, g0: armijo_backtracking(
+                f, x, p, f0, g0, c1=0.3, max_iters=20)
+        )(X, P, F0, G0)
+        adap = armijo_backtracking_batch(jax.vmap(f), X, P, F0, G0,
+                                         c1=0.3, max_iters=20, ladder_len=2)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(adap.alpha))
+
+    def test_exhaustion_fallback_keeps_final_halved_alpha(self):
+        """Ascent direction: no rung ever accepts, the fallback runs to the
+        last rung, and the exhaustion α must be the full ladder's
+        alphas[K-1]·shrink bit-exactly."""
+        X = jnp.ones((4, 3))
+        G0 = jax.vmap(jax.grad(sphere))(X)
+        P = G0  # ascent
+        F0 = jax.vmap(sphere)(X)
+        full = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                         max_iters=20)
+        adap = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                         max_iters=20, ladder_len=4)
+        np.testing.assert_array_equal(np.asarray(full.alpha),
+                                      np.asarray(adap.alpha))
+        np.testing.assert_array_equal(np.asarray(full.f_new),
+                                      np.asarray(adap.f_new))
+        # the fallback had to run every remaining rung
+        assert int(adap.n_evals) == 20
+
+    def test_short_ladder_counts_fewer_evals(self):
+        """When every lane accepts rung 0 the adaptive search consumes
+        exactly ladder_len probes — the whole point of shortening."""
+        obj, X = _starts("sphere", 8, 3, seed=1)
+        G0 = jax.vmap(jax.grad(sphere))(X)
+        F0 = jax.vmap(sphere)(X)
+        P = -1e-3 * G0  # tiny descent step: rung 0 always accepts
+        adap = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                         max_iters=20, ladder_len=2)
+        assert int(adap.n_evals) == 2
+        full = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                         max_iters=20)
+        assert int(full.n_evals) == 20
+        np.testing.assert_array_equal(np.asarray(full.alpha),
+                                      np.asarray(adap.alpha))
+
+    def test_ladder_len_geq_k_is_full_ladder(self):
+        obj, X = _starts("sphere", 6, 2, seed=0)
+        G0 = jax.vmap(jax.grad(sphere))(X)
+        F0 = jax.vmap(sphere)(X)
+        full = armijo_backtracking_batch(jax.vmap(sphere), X, -G0, F0, G0,
+                                         max_iters=10)
+        same = armijo_backtracking_batch(jax.vmap(sphere), X, -G0, F0, G0,
+                                         max_iters=10, ladder_len=10)
+        more = armijo_backtracking_batch(jax.vmap(sphere), X, -G0, F0, G0,
+                                         max_iters=10, ladder_len=99)
+        for other in (same, more):
+            np.testing.assert_array_equal(np.asarray(full.alpha),
+                                          np.asarray(other.alpha))
+            assert int(other.n_evals) == 10
+
+    # ---- full-solve level: exact trajectory parity ------------------------
+    def _pair(self, f, x0, L, **kw):
+        base = dict(iter_bfgs=kw.pop("iter_bfgs", 80),
+                    theta=kw.pop("theta", 1e-4), sweep_mode="batched", **kw)
+        ref = batched_bfgs(f, x0, BFGSOptions(**base))
+        ada = batched_bfgs(f, x0, BFGSOptions(ladder_len=L, **base))
+        return ref, ada
+
+    def _assert_exact_trajectory(self, ref, ada):
+        # n_evals/eval_rows deliberately excluded: the adaptive ladder's
+        # whole purpose is to consume fewer probes
+        for fld in ("x", "fval", "grad_norm", "status"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, fld)), np.asarray(getattr(ada, fld)),
+                err_msg=fld)
+        assert int(ref.iterations) == int(ada.iterations)
+        assert int(ref.n_converged) == int(ada.n_converged)
+
+    @pytest.mark.parametrize("name,dim", [
+        ("sphere", 4), ("rosenbrock", 2), ("rastrigin", 3), ("ackley", 3)])
+    @pytest.mark.parametrize("L", [1, 4])
+    def test_exact_parity(self, name, dim, L):
+        obj, x0 = _starts(name, 32, dim, seed=dim)
+        self._assert_exact_trajectory(*self._pair(obj.fn, x0, L))
+
+    @pytest.mark.parametrize("chunk", [None, 16])
+    def test_exact_parity_chunked(self, chunk):
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        self._assert_exact_trajectory(
+            *self._pair(obj.fn, x0, 3, lane_chunk=chunk, iter_bfgs=100))
+
+    def test_required_c_stop_sweep_exact(self):
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,
+            jnp.tile(jnp.asarray([[-1.2, 1.0]]), (14, 1)),
+        ])
+        self._assert_exact_trajectory(
+            *self._pair(rosenbrock, x0, 2, iter_bfgs=100, required_c=2))
+
+    def test_disable_pallas_ref_leg(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+        obj, x0 = _starts("rastrigin", 24, 3, seed=5)
+        self._assert_exact_trajectory(
+            *self._pair(obj.fn, x0, 3, iter_bfgs=60))
+
+    def test_lbfgs_vmapped_adapter(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=11)
+        base = dict(iter_max=120, theta=1e-4, sweep_mode="batched")
+        ref = batched_lbfgs(obj.fn, x0, LBFGSOptions(**base))
+        ada = batched_lbfgs(obj.fn, x0, LBFGSOptions(ladder_len=4, **base))
+        self._assert_exact_trajectory(ref, ada)
+
+    def test_eval_rows_shrink(self):
+        """The honesty check: a short ladder physically evaluates fewer
+        objective rows (rung-0 accepts dominate on sphere) while the
+        trajectory is untouched."""
+        obj, x0 = _starts("sphere", 32, 4, seed=3)
+        ref, ada = self._pair(obj.fn, x0, 2, iter_bfgs=40)
+        self._assert_exact_trajectory(ref, ada)
+        assert int(ada.eval_rows) < int(ref.eval_rows)
+        # per-lane logical accounting shrinks with the physical probes too
+        assert int(jnp.max(ada.n_evals)) <= int(jnp.max(ref.n_evals))
+
+    def test_composes_with_compaction(self):
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        base = dict(iter_bfgs=80, theta=1e-4, sweep_mode="batched")
+        ref = batched_bfgs(obj.fn, x0, BFGSOptions(**base))
+        ada = batched_bfgs(obj.fn, x0, BFGSOptions(
+            ladder_len=3, compact_every=1, **base))
+        self._assert_exact_trajectory(ref, ada)
+        assert int(ada.eval_rows) < int(ref.eval_rows)
+
+    def test_per_lane_rejects_ladder_len(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="ladder_len"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(ladder_len=2))
+
+    def test_negative_ladder_len_rejected(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="ladder_len"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(sweep_mode="batched",
+                                                 ladder_len=-1))
+
+    def test_zeus_threading(self):
+        """ZeusOptions(ladder_len=...) reaches the engine and preserves the
+        solve exactly."""
+        from repro.core import ZeusOptions, zeus
+
+        obj = get_objective("sphere")
+        kw = dict(use_pso=False, sweep_mode="batched",
+                  bfgs=BFGSOptions(iter_bfgs=40, theta=1e-4))
+        key = jax.random.key(0)
+        ref = zeus(obj.fn, key, 4, obj.lower, obj.upper, ZeusOptions(**kw))
+        ada = zeus(obj.fn, key, 4, obj.lower, obj.upper,
+                   ZeusOptions(ladder_len=2, **kw))
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(ada.best_x))
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(ada.raw.status))
+        assert int(ada.raw.eval_rows) <= int(ref.raw.eval_rows)
+
+
 class TestBatchedObjectiveRegistry:
     def test_named_objectives_pick_fused_kernels(self):
         for name in ("sphere", "rastrigin", "rosenbrock", "ackley"):

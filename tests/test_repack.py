@@ -1,0 +1,419 @@
+"""Global cross-chunk lane repacking (engine repack_every, ISSUE 4).
+
+The repacking contract is EXACT — no tolerance. Every repacked chunk is
+exactly `lane_chunk` wide, so the evaluator batch size never varies and the
+bit-stability caveat per-chunk compaction carries (vmap AD closures
+re-specialized per bucket size) cannot apply to repacking alone: gathering a
+lane into a different chunk slot changes *where* it is computed, never what.
+Trajectories, statuses, and per-lane n_evals must therefore be array-equal
+to repack_every=0 for EVERY evaluator (fused Pallas kernels, jnp references
+under REPRO_DISABLE_PALLAS=1, and the vmap fallbacks), across chunk sizes ×
+cadences × freeze patterns — the property suite at the bottom drives
+randomized combinations through the same assertion.
+
+What repacking buys is counted, not assumed: `BFGSResult.map_trips` is the
+lax.map trip count the sweep driver actually issued, and the counter tests
+prove the tail trips drop from B/C to bucket(ceil(active/C)) per sweep
+(< 0.5x at 75% frozen — the ROADMAP criterion), while `eval_rows` follows
+the repacked chunk set.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    BFGSOptions,
+    LBFGSOptions,
+    batched_bfgs,
+    batched_lbfgs,
+)
+from repro.core.engine import _compaction_buckets
+from repro.core.objectives import get_objective, rosenbrock
+
+# rosenbrock's optimum (1, ..., 1) has a bit-exact zero gradient: lanes
+# started there are converged-from-init (frozen), lanes started in the
+# valley never reach theta=1e-30 — freeze patterns are fully deterministic
+HARD_START = [-1.2, 1.0]
+
+
+def _starts(name, B, dim, seed):
+    obj = get_objective(name)
+    return obj, jax.random.uniform(jax.random.key(seed), (B, dim),
+                                   minval=obj.lower, maxval=obj.upper)
+
+
+def _frozen_mix(frozen_mask):
+    """(B, 2) rosenbrock starts: True rows at the optimum (frozen from
+    init), False rows at the hard valley start (never converge)."""
+    frozen_mask = np.asarray(frozen_mask, bool)
+    x0 = np.tile(np.asarray([HARD_START]), (frozen_mask.shape[0], 1))
+    x0[frozen_mask] = 1.0
+    return jnp.asarray(x0, jnp.float32)
+
+
+def _assert_exact(ref, rep):
+    for fld in ("x", "fval", "grad_norm", "status", "n_evals"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, fld)), np.asarray(getattr(rep, fld)),
+            err_msg=fld)
+    assert int(ref.iterations) == int(rep.iterations)
+    assert int(ref.n_converged) == int(rep.n_converged)
+
+
+class TestRepackParity:
+    """Exact-parity across objectives × chunk sizes × cadences."""
+
+    def _pair(self, f, x0, re=1, chunk=8, **kw):
+        base = dict(iter_bfgs=kw.pop("iter_bfgs", 60),
+                    theta=kw.pop("theta", 1e-4), lane_chunk=chunk,
+                    sweep_mode="batched", **kw)
+        ref = batched_bfgs(f, x0, BFGSOptions(**base))
+        rep = batched_bfgs(f, x0, BFGSOptions(repack_every=re, **base))
+        return ref, rep
+
+    @pytest.mark.parametrize("name,dim", [
+        ("sphere", 4), ("rosenbrock", 2), ("rastrigin", 3), ("ackley", 3)])
+    @pytest.mark.parametrize("chunk", [8, 16])
+    def test_exact_parity(self, name, dim, chunk):
+        obj, x0 = _starts(name, 32, dim, seed=dim)
+        self._assert(*self._pair(obj.fn, x0, chunk=chunk))
+
+    def _assert(self, ref, rep):
+        _assert_exact(ref, rep)
+        assert int(rep.map_trips) <= int(ref.map_trips)
+        assert int(rep.eval_rows) <= int(ref.eval_rows)
+
+    @pytest.mark.parametrize("re", [2, 3, 5])
+    def test_refresh_cadence_parity(self, re):
+        """Between refreshes the stored chunk-count bucket keeps covering
+        the (only-shrinking) active set; any cadence is exact."""
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        self._assert(*self._pair(obj.fn, x0, re=re, iter_bfgs=80))
+
+    def test_vmap_fallback_exact(self):
+        """Repacking never changes the evaluator batch size (every chunk is
+        exactly C wide), so even the vmap-of-scalar AD fallbacks — which
+        per-chunk compaction can only hold to status parity — are exact."""
+        obj, x0 = _starts("rosenbrock", 24, 2, seed=7)
+        lam = lambda x: rosenbrock(x)  # noqa: E731 — vmap fallback route
+        for ad_mode in ("forward", "reverse"):
+            self._assert(*self._pair(lam, x0, chunk=4, iter_bfgs=40,
+                                     ad_mode=ad_mode))
+
+    def test_uneven_tail_chunk_padding(self):
+        """C does not divide B: padding lanes are frozen-from-birth and ride
+        the repack like any frozen lane."""
+        obj, x0 = _starts("rosenbrock", 30, 2, seed=11)
+        self._assert(*self._pair(obj.fn, x0, chunk=8, iter_bfgs=60))
+
+    def test_composes_with_compaction(self):
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        base = dict(iter_bfgs=80, theta=1e-4, lane_chunk=8,
+                    sweep_mode="batched")
+        ref = batched_bfgs(obj.fn, x0, BFGSOptions(**base))
+        for ce, re in ((1, 1), (2, 3), (1, 4)):
+            rep = batched_bfgs(obj.fn, x0, BFGSOptions(
+                repack_every=re, compact_every=ce, **base))
+            self._assert(ref, rep)
+
+    def test_composes_with_adaptive_ladder(self):
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        base = dict(iter_bfgs=80, theta=1e-4, lane_chunk=8,
+                    sweep_mode="batched")
+        ref = batched_bfgs(obj.fn, x0, BFGSOptions(**base))
+        rep = batched_bfgs(obj.fn, x0, BFGSOptions(
+            repack_every=1, compact_every=1, ladder_len=3, **base))
+        # ladder_len changes the physical probe counts, not the trajectory
+        for fld in ("x", "fval", "grad_norm", "status"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, fld)), np.asarray(getattr(rep, fld)),
+                err_msg=fld)
+        assert int(ref.iterations) == int(rep.iterations)
+        assert int(rep.eval_rows) < int(ref.eval_rows)
+        assert int(rep.map_trips) <= int(ref.map_trips)
+
+    def test_lbfgs_vmapped_adapter(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=11)
+        base = dict(iter_max=100, theta=1e-4, lane_chunk=4,
+                    sweep_mode="batched")
+        ref = batched_lbfgs(obj.fn, x0, LBFGSOptions(**base))
+        rep = batched_lbfgs(obj.fn, x0,
+                            LBFGSOptions(repack_every=1, **base))
+        _assert_exact(ref, rep)
+
+    def test_required_c_stop_parity(self):
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,
+            jnp.tile(jnp.asarray([HARD_START]), (14, 1)),
+        ])
+        self._assert(*self._pair(rosenbrock, x0, chunk=4, iter_bfgs=100,
+                                 required_c=2))
+
+    def test_disable_pallas_ref_leg(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+        obj, x0 = _starts("rastrigin", 24, 3, seed=5)
+        self._assert(*self._pair(obj.fn, x0, chunk=8, iter_bfgs=60))
+
+    def test_zeus_threading(self):
+        """ZeusOptions(repack_every=...) reaches the engine through
+        solve_phase2 and preserves the full-solve result exactly."""
+        from repro.core import ZeusOptions, zeus
+
+        obj = get_objective("sphere")
+        kw = dict(use_pso=False, sweep_mode="batched", lane_chunk=16,
+                  bfgs=BFGSOptions(iter_bfgs=40, theta=1e-4))
+        key = jax.random.key(0)
+        ref = zeus(obj.fn, key, 4, obj.lower, obj.upper, ZeusOptions(**kw))
+        rep = zeus(obj.fn, key, 4, obj.lower, obj.upper,
+                   ZeusOptions(repack_every=1, **kw))
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(rep.best_x))
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(rep.raw.status))
+        assert int(rep.raw.map_trips) <= int(ref.raw.map_trips)
+
+    def test_requires_batched_mode(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="repack_every"):
+            batched_bfgs(obj.fn, x0,
+                         BFGSOptions(repack_every=1, lane_chunk=4))
+
+    def test_requires_lane_chunk(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="lane_chunk"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(sweep_mode="batched",
+                                                 repack_every=1))
+
+    def test_negative_cadence_rejected(self):
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        with pytest.raises(ValueError, match="repack_every"):
+            batched_bfgs(obj.fn, x0, BFGSOptions(
+                sweep_mode="batched", lane_chunk=4, repack_every=-1))
+
+    def test_single_chunk_degenerates_to_static(self):
+        """lane_chunk >= B: nothing to repack across; the schedule silently
+        stays static rather than erroring on a no-op config."""
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        base = dict(iter_bfgs=20, theta=1e-4, lane_chunk=8,
+                    sweep_mode="batched")
+        ref = batched_bfgs(obj.fn, x0, BFGSOptions(**base))
+        rep = batched_bfgs(obj.fn, x0, BFGSOptions(repack_every=1, **base))
+        _assert_exact(ref, rep)
+        assert int(ref.map_trips) == int(rep.map_trips)
+
+
+class TestTripCount:
+    """Counter-based proof that the tail lax.map trip count shrinks —
+    mirroring PR 3's frozen-lanes-cost-zero test, at chunk granularity."""
+
+    def test_tail_trips_shrink(self):
+        """24/32 lanes frozen from init, C=4: the static schedule pays 8
+        trips per sweep; repacked, the 8 survivors fit ceil(8/4)=2 full
+        chunks — 0.25x trips, well under the <0.5x ROADMAP criterion."""
+        B, C, S, K = 32, 4, 5, 20
+        x0 = _frozen_mix([True] * 24 + [False] * 8)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=K, lane_chunk=C,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        rep = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(repack_every=1, **base))
+        _assert_exact(unc, rep)
+        assert int(unc.iterations) == int(rep.iterations) == S
+        assert int(unc.map_trips) == S * (B // C)
+        assert int(rep.map_trips) == S * 2
+        assert int(rep.map_trips) < 0.5 * int(unc.map_trips)
+        # physical rows follow the repacked chunk set: init B, then per
+        # sweep 2 full chunks x (K ladder + 1 vg) rows per lane
+        assert int(unc.eval_rows) == B + S * B * (K + 1)
+        assert int(rep.eval_rows) == B + S * 2 * C * (K + 1)
+
+    def test_trips_round_to_chunk_count_buckets(self):
+        """5 survivors at C=4 need ceil(5/4)=2 chunks — the bucket is the
+        chunk-count power of two, not the lane count."""
+        B, C, S = 32, 4, 3
+        x0 = _frozen_mix([True] * 27 + [False] * 5)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=5, lane_chunk=C,
+                    sweep_mode="batched")
+        rep = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(repack_every=1, **base))
+        assert int(rep.map_trips) == S * 2
+
+    def test_interleaved_freeze_pattern(self):
+        """Frozen lanes scattered across every chunk — the case per-chunk
+        compaction cannot help (each chunk keeps one active lane; 8 trips
+        regardless) but the global gather collapses to two chunks. The
+        repacked run is exact against the STATIC schedule; the compacted
+        run is compared on statuses/metrics only, because compaction's
+        exactness is a batch-size-codegen contract (DESIGN.md §11) and its
+        one-lane buckets here hit 5-row ladder launches where the
+        jnp-reference leg drifts by ULPs — the varying-launch-shape hazard
+        repacking avoids by construction (every chunk stays C wide)."""
+        B, C, S = 32, 4, 4
+        frozen = [True] * B
+        for i in range(0, B, C):  # one survivor per chunk
+            frozen[i] = False
+        x0 = _frozen_mix(frozen)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=5, lane_chunk=C,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        com = batched_bfgs(rosenbrock, x0, BFGSOptions(compact_every=1,
+                                                       **base))
+        rep = batched_bfgs(rosenbrock, x0, BFGSOptions(repack_every=1,
+                                                       **base))
+        _assert_exact(unc, rep)
+        np.testing.assert_array_equal(np.asarray(com.status),
+                                      np.asarray(rep.status))
+        assert int(com.map_trips) == S * (B // C)  # compaction: all trips
+        assert int(rep.map_trips) == S * 2  # 8 survivors / C=4 -> 2 chunks
+
+    def test_fully_active_swarm_is_static_schedule(self):
+        """Top chunk-count bucket = n_chunks: a swarm that never freezes
+        pays exactly the static trip count (repacking costs a gather, not
+        extra trips)."""
+        B, C, S = 32, 8, 4
+        x0 = _frozen_mix([False] * B)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=5, lane_chunk=C,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        rep = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(repack_every=1, **base))
+        _assert_exact(unc, rep)
+        assert int(unc.map_trips) == int(rep.map_trips) == S * (B // C)
+
+    def test_jit_cache_bounded_by_buckets(self):
+        """Trace-count instrumentation: the objective is traced a fixed
+        number of times per repack *bucket* (log2(n_chunks)+1 switch
+        branches), never per active count or per sweep — doubling the sweep
+        budget must add zero traces within one solve."""
+        counts = []
+
+        def run(iters):
+            calls = []
+
+            def lam(x):  # unregistered: vmap fallback, traced per codegen
+                calls.append(1)
+                return rosenbrock(x)
+
+            batched_bfgs(lam, _frozen_mix([True] * 24 + [False] * 8),
+                         BFGSOptions(iter_bfgs=iters, theta=1e-30,
+                                     ls_iters=5, lane_chunk=4,
+                                     sweep_mode="batched", repack_every=1,
+                                     ad_mode="reverse"))
+            counts.append(len(calls))
+
+        run(2)
+        run(8)
+        assert counts[0] == counts[1], counts
+        # 8 chunks -> 4 chunk-count buckets; a handful of traces each
+        # (ladder + vg + init), far below one per sweep or per active count
+        assert counts[0] <= 4 * 6, counts
+
+
+class TestAccountingInvariants:
+    """eval_rows / n_evals accounting under repacking."""
+
+    def test_eval_rows_formula(self):
+        """eval_rows is exactly init + sum over sweeps of the repacked
+        chunk set's rows — derivable because the active set is constant
+        (frozen-from-init lanes only)."""
+        B, C, S, K = 16, 4, 3, 6
+        for n_frozen in (0, 3, 9, 13, 15):
+            x0 = _frozen_mix([True] * n_frozen + [False] * (B - n_frozen))
+            rep = batched_bfgs(
+                rosenbrock, x0,
+                BFGSOptions(iter_bfgs=S, theta=1e-30, ls_iters=K,
+                            lane_chunk=C, sweep_mode="batched",
+                            repack_every=1))
+            n_active = B - n_frozen
+            n_needed = -(-n_active // C)
+            buckets = _compaction_buckets(B // C)
+            m = next(b for b in buckets if b >= n_needed)
+            assert int(rep.map_trips) == S * m, n_frozen
+            assert int(rep.eval_rows) == B + S * m * C * (K + 1), n_frozen
+
+    def test_n_evals_per_lane_invariant(self):
+        """The logical per-lane counters never see the schedule: frozen
+        lanes keep their init-gradient cost, active lanes pay the same
+        ladder+vg either way."""
+        x0 = _frozen_mix([True] * 10 + [False] * 6)
+        base = dict(iter_bfgs=4, theta=1e-30, ls_iters=6, lane_chunk=4,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        rep = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(repack_every=1, **base))
+        np.testing.assert_array_equal(np.asarray(unc.n_evals),
+                                      np.asarray(rep.n_evals))
+        np.testing.assert_array_equal(np.asarray(rep.n_evals[:10]), 2)
+
+    def test_map_trips_zero_before_first_sweep(self):
+        """iter_bfgs=0: init runs, no sweeps, no trips."""
+        obj, x0 = _starts("sphere", 8, 2, seed=0)
+        res = batched_bfgs(obj.fn, x0, BFGSOptions(
+            iter_bfgs=0, lane_chunk=4, sweep_mode="batched"))
+        assert int(res.map_trips) == 0
+
+    def test_per_lane_counts_trips_too(self):
+        """map_trips instruments every sweep mode (chunk-steps per sweep),
+        so schedule comparisons work across modes."""
+        x0 = _frozen_mix([False] * 8)  # never converge at theta=1e-30
+        res = batched_bfgs(rosenbrock, x0,
+                           BFGSOptions(iter_bfgs=3, theta=1e-30,
+                                       lane_chunk=4))
+        assert int(res.map_trips) == 3 * 2
+
+
+# ---------------------------------------------------------------------------
+# Property-based parity suite: random freeze patterns × chunk sizes ×
+# repack cadences (× per-chunk compaction), all funneled through the same
+# exact-equality assertion as the deterministic suite. Skips gracefully when
+# hypothesis is not installed (tests/_hypothesis_compat.py).
+# ---------------------------------------------------------------------------
+_BASELINE_CACHE = {}
+
+
+def _baseline(x0_key, chunk, ls_iters, sweeps):
+    key = (x0_key, chunk, ls_iters, sweeps)
+    if key not in _BASELINE_CACHE:
+        _BASELINE_CACHE[key] = batched_bfgs(
+            rosenbrock, _frozen_mix(x0_key),
+            BFGSOptions(iter_bfgs=sweeps, theta=1e-30, ls_iters=ls_iters,
+                        lane_chunk=chunk, sweep_mode="batched"))
+    return _BASELINE_CACHE[key]
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=12, deadline=None)
+@given(
+    frozen=st.lists(st.booleans(), min_size=16, max_size=16),
+    chunk=st.sampled_from([4, 8]),
+    repack_every=st.integers(min_value=1, max_value=4),
+    compact_every=st.integers(min_value=0, max_value=2),
+)
+def test_property_repack_parity(frozen, chunk, repack_every, compact_every):
+    """Any freeze pattern, chunk size, and cadence combination: repacked
+    trajectories are array-equal to the static schedule and the trip/row
+    accounting is exactly the repacked chunk set's."""
+    B, S, K = 16, 3, 5
+    x0_key = tuple(frozen)
+    ref = _baseline(x0_key, chunk, K, S)
+    rep = batched_bfgs(
+        rosenbrock, _frozen_mix(frozen),
+        BFGSOptions(iter_bfgs=S, theta=1e-30, ls_iters=K, lane_chunk=chunk,
+                    sweep_mode="batched", repack_every=repack_every,
+                    compact_every=compact_every))
+    _assert_exact(ref, rep)
+    n_active = B - sum(frozen)
+    if n_active == 0:
+        assert int(rep.iterations) == 0 and int(rep.map_trips) == 0
+        return
+    # the active set is constant (frozen-from-init only), so the repacked
+    # trip count is exactly S x bucket(ceil(active / chunk))
+    buckets = _compaction_buckets(B // chunk)
+    m = next(b for b in buckets if b >= -(-n_active // chunk))
+    assert int(rep.map_trips) == S * m
+    assert int(rep.map_trips) <= int(ref.map_trips)
+    assert int(rep.eval_rows) <= int(ref.eval_rows)
+    if compact_every == 0:
+        assert int(rep.eval_rows) == B + S * m * chunk * (K + 1)

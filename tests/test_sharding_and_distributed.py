@@ -92,6 +92,49 @@ def test_distributed_zeus_multidevice():
     assert "OK" in out
 
 
+def test_distributed_repack_and_ladder():
+    """ISSUE 4: the batched sweep's global lane repacking and adaptive
+    ladder compose with distributed_zeus — each shard repacks its own
+    lanes, and the eval_rows/map_trips diagnostics are psum'd across the
+    mesh (replicated scalars, smaller than the static schedule's)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.core import BFGSOptions, PSOOptions, ZeusOptions
+        from repro.core.distributed import distributed_zeus
+        from repro.core.objectives import rosenbrock
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((4,), ("data",))
+        # rosenbrock over its full range: lanes converge at widely
+        # different sweeps, so the tail the repacker compresses actually
+        # exists on every shard. required_c must be the GLOBAL lane count:
+        # the psum'd stop protocol counts convergences across the mesh,
+        # and the per-device default (local B) would stop the solve long
+        # before the tail regime.
+        base = dict(use_pso=False,
+                    pso=PSOOptions(n_particles=128, iter_pso=0),
+                    bfgs=BFGSOptions(iter_bfgs=100, theta=1e-4,
+                                     required_c=128),
+                    sweep_mode="batched", lane_chunk=4)
+        key = jax.random.key(3)
+        ref = jax.jit(distributed_zeus(
+            rosenbrock, 2, -5.0, 10.0, ZeusOptions(**base), mesh))(key)
+        rep = jax.jit(distributed_zeus(
+            rosenbrock, 2, -5.0, 10.0,
+            ZeusOptions(repack_every=1, ladder_len=2, **base), mesh))(key)
+        import numpy as np
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(rep.raw.status))
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(rep.best_x))
+        assert int(ref.raw.iterations) == int(rep.raw.iterations)
+        # psum'd whole-mesh diagnostics: the repacked tail does less work
+        assert int(rep.raw.map_trips) < int(ref.raw.map_trips)
+        assert int(rep.raw.eval_rows) < int(ref.raw.eval_rows)
+        print("OK", int(ref.raw.map_trips), int(rep.raw.map_trips))
+    """, devices=4)
+    assert "OK" in out
+
+
 def test_distributed_equals_single_device_semantics():
     """required_c semantics hold globally: stop counts converged lanes
     across all devices, not per device."""
