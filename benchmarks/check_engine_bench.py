@@ -23,10 +23,21 @@ when a perf floor regresses:
     identical trajectory) must stay <= BENCH_LADDER_ROWS_CEIL (default 1.0
     — the adaptive ladder can never pay MORE rows than full speculation;
     rosenbrock's deep backtracking makes the measured value modest, while
-    converging workloads approach ladder_len/ls_iters).
+    converging workloads approach ladder_len/ls_iters);
+  * `auto_trip_ratio` and `auto_rows_ratio` (schedule="auto" over the
+    per-metric BEST hand-tuned static schedule on the converging-swarm
+    cell) must stay <= BENCH_AUTO_SLACK (default 1.1 — the ISSUE-5
+    criterion: the controller, burn-in windows included, can never
+    silently regress below what a user could configure by hand).
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
+
+`--baseline COMMITTED.json` additionally runs every ratio gate against a
+second payload — the committed BENCH_engine.json — and fails if a
+previously-passing ratio in it breaches its ceiling. Without this, the
+gate only ever sees the freshly-generated file and rot in the committed
+trajectory file goes unnoticed until someone plots it.
 """
 from __future__ import annotations
 
@@ -44,22 +55,25 @@ MODE_KEYS = {
     "eval_launches_per_sweep",
 }
 TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep", "map_trips"}
+AUTO_MODE_KEYS = {"wall_s", "eval_rows", "map_trips"}
 
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
-          trip_ceil: float, ladder_ceil: float) -> list:
+          trip_ceil: float, ladder_ceil: float, auto_slack: float) -> list:
     errors = []
 
     def need(cond, msg):
         if not cond:
             errors.append(msg)
 
-    for key in ("objective", "sweeps", "ad_mode", "cells", "tail"):
+    for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
+    autos = payload.get("auto") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
+    need(len(autos) > 0, "no auto_vs_best_static cells measured")
 
     for name, cell in cells.items():
         for mode in ("per_lane", "batched", "compacted", "ladder"):
@@ -106,12 +120,39 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             f"tail.{name}: tail_trip_ratio {tratio!r} above ceiling "
             f"{trip_ceil}",
         )
+
+    for name, auto in autos.items():
+        block = auto.get("auto")
+        need(isinstance(block, dict), f"auto.{name}: missing 'auto' block")
+        statics = [k for k in auto
+                   if isinstance(auto.get(k), dict) and k.startswith("static")]
+        need(len(statics) >= 2,
+             f"auto.{name}: needs >= 2 hand-tuned static cells to compare "
+             f"against (got {sorted(statics)})")
+        for mode in statics + (["auto"] if isinstance(block, dict) else []):
+            missing = AUTO_MODE_KEYS - set(auto[mode])
+            need(not missing,
+                 f"auto.{name}.{mode}: missing keys {sorted(missing)}")
+            need(auto[mode].get("wall_s", 0) > 0,
+                 f"auto.{name}.{mode}: wall_s <= 0")
+        for ratio_key in ("auto_trip_ratio", "auto_rows_ratio"):
+            ratio = auto.get(ratio_key)
+            need(
+                isinstance(ratio, (int, float)) and 0 < ratio <= auto_slack,
+                f"auto.{name}: {ratio_key} {ratio!r} above slack "
+                f"{auto_slack} — the controller regressed below the best "
+                f"hand-tuned static schedule",
+            )
     return errors
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="BENCH_engine.json")
+    ap.add_argument(
+        "--baseline", default=None, metavar="COMMITTED.json",
+        help="also gate the committed trajectory file: fail when any "
+             "previously-passing ratio in it breaches its ceiling")
     ap.add_argument(
         "--launch-ratio-floor", type=float,
         default=float(os.environ.get("BENCH_LAUNCH_RATIO_FLOOR", "1.5")))
@@ -124,12 +165,23 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--ladder-rows-ceil", type=float,
         default=float(os.environ.get("BENCH_LADDER_ROWS_CEIL", "1.0")))
+    ap.add_argument(
+        "--auto-slack", type=float,
+        default=float(os.environ.get("BENCH_AUTO_SLACK", "1.1")))
     args = ap.parse_args(argv)
 
-    with open(args.path) as f:
-        payload = json.load(f)
-    errors = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
-                   args.tail_trip_ceil, args.ladder_rows_ceil)
+    def gate(path, label):
+        with open(path) as f:
+            payload = json.load(f)
+        errs = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
+                     args.tail_trip_ceil, args.ladder_rows_ceil,
+                     args.auto_slack)
+        return payload, [f"{label}: {e}" for e in errs] if label else errs
+
+    payload, errors = gate(args.path, "")
+    if args.baseline:
+        _, base_errors = gate(args.baseline, "baseline")
+        errors += base_errors
     if errors:
         for e in errors:
             print(f"FAIL: {e}", file=sys.stderr)
@@ -139,6 +191,8 @@ def main(argv=None) -> int:
     ladders = [c["ladder_rows_ratio"] for c in payload["cells"].values()]
     tails = [t["tail_work_ratio"] for t in payload["tail"].values()]
     trips = [t["tail_trip_ratio"] for t in payload["tail"].values()]
+    auto_t = [a["auto_trip_ratio"] for a in payload["auto"].values()]
+    auto_r = [a["auto_rows_ratio"] for a in payload["auto"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
@@ -147,7 +201,10 @@ def main(argv=None) -> int:
         f"tail_trip_ratio max {max(trips):.3f} "
         f"(ceiling {args.tail_trip_ceil}); "
         f"ladder_rows_ratio max {max(ladders):.3f} "
-        f"(ceiling {args.ladder_rows_ceil})"
+        f"(ceiling {args.ladder_rows_ceil}); "
+        f"auto_trip_ratio max {max(auto_t):.3f} / auto_rows_ratio max "
+        f"{max(auto_r):.3f} (slack {args.auto_slack})"
+        + (f"; baseline {args.baseline} OK" if args.baseline else "")
     )
     return 0
 

@@ -39,6 +39,15 @@ work of the dynamic schedules must track the active set —
 cross-chunk repacking at lane_chunk=B/8: 25% survivors need 2 of 8 chunks),
 gated < 0.5.
 
+The `auto` section is the ISSUE-5 auto-scheduling criterion: the same
+converging-swarm construction run once per hand-tuned static schedule
+(full ladder / short ladders × repack+compact, all at the same lane_chunk
+so trip counts are comparable) and once with `schedule="auto"`. The
+controller must land within BENCH_AUTO_SLACK (default 1.1×) of the BEST
+static cell on both tail metrics — `auto_trip_ratio` (map_trips) and
+`auto_rows_ratio` (eval_rows) — i.e. auto can never silently regress below
+what a user could configure by hand, burn-in windows included.
+
 ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
 equivalents per lane either way), so the ratio isolates the speculative
 ladder restructuring rather than forward-AD vs fused-kernel differences.
@@ -77,6 +86,17 @@ CELLS = [(256, 16), (256, 64), (1024, 16), (1024, 64)]
 SMALL_CELLS = [(256, 16)]
 TAIL_FROZEN_FRAC = 0.75
 TAIL_CHUNKS = 8  # tail repack runs at lane_chunk = B / TAIL_CHUNKS
+# auto_vs_best_static cell: long enough that the controller's burn-in
+# (startup full-ladder windows + the deep-backtracking phase where its
+# p90 candidate sits one notch above the rows-optimal ladder) amortizes
+# against the static schedules over the identical converged tail; window
+# = 1 sweep so the ladder hysteresis resolves at sweep latency
+AUTO_SWEEPS = 100
+AUTO_WINDOW = 1
+# the static ladder grid below as candidates, plus 16: deep-backtracking
+# phases sit at p90 rung 13..17, and without a candidate between 8 and the
+# full ladder the controller is forced to pay the full K rows there
+AUTO_LADDERS = (2, 4, 8, 16, 0)
 
 
 def _cells():
@@ -84,11 +104,11 @@ def _cells():
 
 
 def _opts(mode, compact_every=0, repack_every=0, ladder_len=0,
-          lane_chunk=None):
-    return BFGSOptions(iter_bfgs=SWEEPS, theta=1e-30, ad_mode="reverse",
+          lane_chunk=None, sweeps=SWEEPS, **kw):
+    return BFGSOptions(iter_bfgs=sweeps, theta=1e-30, ad_mode="reverse",
                        ls_iters=LS_ITERS, sweep_mode=mode,
                        compact_every=compact_every, repack_every=repack_every,
-                       ladder_len=ladder_len, lane_chunk=lane_chunk)
+                       ladder_len=ladder_len, lane_chunk=lane_chunk, **kw)
 
 
 def _one_cell(obj, B, D, mode, **okw):
@@ -163,6 +183,71 @@ def _tail_cell(obj, B, D):
     return cell
 
 
+def _auto_cell(obj, B, D):
+    """auto_vs_best_static criterion cell (ISSUE 5): the tail construction
+    (75% frozen from init, random never-converging survivors) run under
+    every hand-tuned static schedule a user could pick — the ladder grid ×
+    repack+compact, all at lane_chunk = B/TAIL_CHUNKS so map_trips are
+    comparable — and under schedule="auto". The gate: auto's map_trips and
+    eval_rows within BENCH_AUTO_SLACK of the per-metric best static cell.
+    The active count (25%) sits below auto_active_frac from sweep 0, so
+    the controller latches repack+compact at the first window; the ladder
+    re-targets to p90(accepted rung) after its two-window hysteresis."""
+    n_frozen = int(B * TAIL_FROZEN_FRAC)
+    x_opt = jnp.asarray(np.asarray(obj.x_star(D)), jnp.float32)
+    hard = jax.random.uniform(jax.random.key(D + 1), (B - n_frozen, D),
+                              minval=obj.lower, maxval=obj.upper)
+    x0 = jnp.concatenate([jnp.broadcast_to(x_opt, (n_frozen, D)), hard])
+    C = B // TAIL_CHUNKS
+
+    statics = {
+        "static_full": {},
+        "static_repack": {"repack_every": 1, "compact_every": 1},
+    }
+    for L in (l for l in AUTO_LADDERS if l):
+        statics[f"static_repack_ladder{L}"] = {
+            "repack_every": 1, "compact_every": 1, "ladder_len": L}
+
+    cell = {}
+    for label, okw in statics.items():
+        opts = _opts("batched", lane_chunk=C, sweeps=AUTO_SWEEPS, **okw)
+        run = jax.jit(lambda x, o=opts: batched_bfgs(obj.fn, x, o))
+        us = timeit(run, x0)
+        res = run(x0)
+        cell[label] = {
+            "wall_s": us / 1e6,
+            "eval_rows": int(res.eval_rows),
+            "map_trips": int(res.map_trips),
+        }
+
+    opts = _opts("batched", lane_chunk=C, sweeps=AUTO_SWEEPS,
+                 schedule="auto", schedule_every=AUTO_WINDOW,
+                 auto_ladders=AUTO_LADDERS)
+    run = jax.jit(lambda x, o=opts: batched_bfgs(obj.fn, x, o))
+    us = timeit(run, x0)
+    res = run(x0)
+    trace = np.asarray(res.schedule_trace)
+    cell["auto"] = {
+        "wall_s": us / 1e6,
+        "eval_rows": int(res.eval_rows),
+        "map_trips": int(res.map_trips),
+        # the static plan sequence the controller actually ran (replayable
+        # via EngineOptions(schedule="replay", schedule_plans=...))
+        "plans": [int(row.argmax()) if row.any() else -1 for row in trace],
+    }
+
+    best_trips = min(c["map_trips"] for k, c in cell.items() if k != "auto")
+    best_rows = min(c["eval_rows"] for k, c in cell.items() if k != "auto")
+    cell["best_static_trips"] = best_trips
+    cell["best_static_rows"] = best_rows
+    cell["auto_trip_ratio"] = cell["auto"]["map_trips"] / best_trips
+    cell["auto_rows_ratio"] = cell["auto"]["eval_rows"] / best_rows
+    cell["sweeps"] = AUTO_SWEEPS
+    cell["schedule_every"] = AUTO_WINDOW
+    cell["frozen_frac"] = TAIL_FROZEN_FRAC
+    return cell
+
+
 def engine_sweep(out_path: str = "BENCH_engine.json"):
     """Batched vs per_lane vs compacted sweep execution over (B, D) cells."""
     with kernel_ops.reference_kernels_off_tpu():  # see module docstring
@@ -213,6 +298,16 @@ def _engine_sweep(out_path: str):
             f"tail_wall_speedup={tail['wall_speedup']:.2f}x;"
             f"repack_wall_speedup={tail['repack_wall_speedup']:.2f}x",
         )
+    # auto_vs_best_static: one cell (the grid's smallest — the criterion is
+    # structural counters, not wall clock, so one size suffices)
+    B, D = _cells()[0]
+    auto = _auto_cell(obj, B, D)
+    emit(
+        f"engine_auto_b{B}_d{D}",
+        auto["auto"]["wall_s"] * 1e6,
+        f"auto_trip_ratio={auto['auto_trip_ratio']:.3f};"
+        f"auto_rows_ratio={auto['auto_rows_ratio']:.3f}",
+    )
     payload = {
         "objective": obj.name,
         "sweeps": SWEEPS,
@@ -226,9 +321,14 @@ def _engine_sweep(out_path: str):
                  "75% of lanes frozen from init; tail_work_ratio = compacted "
                  "/ uncompacted physical rows per sweep (gate: <= 0.5); "
                  "tail_trip_ratio = repacked / static-chunked lax.map trips "
-                 "at lane_chunk=B/8 (gate: < 0.5)"),
+                 "at lane_chunk=B/8 (gate: < 0.5). auto: schedule='auto' on "
+                 "the converging-swarm cell vs every hand-tuned static "
+                 "schedule at the same lane_chunk; auto_trip_ratio / "
+                 "auto_rows_ratio = auto over the per-metric best static "
+                 "(gate: <= BENCH_AUTO_SLACK, default 1.1)"),
         "cells": results,
         "tail": tails,
+        "auto": {f"b{B}_d{D}": auto},
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

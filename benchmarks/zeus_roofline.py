@@ -98,7 +98,8 @@ def lower_batched_sweep(mesh):
         as_batched_strategy(DenseBFGS()),
         EngineOptions(ad_mode="reverse", sweep_mode="batched"),
     )
-    # drop the physical-row counter: this lowering costs the lane math
+    # drop the physical-row counter and rung histogram: this lowering
+    # costs the lane math only
     step = lambda lanes: step_rows(lanes)[0]
     with mesh:
         jitted = jax.jit(step, in_shardings=(state_shard,),

@@ -23,9 +23,11 @@ from repro.core.engine import (
     EngineOptions,
     VmappedStrategy,
     as_batched_strategy,
+    auto_plan_lattice,
     get_solver,
     register_solver,
     run_multistart,
+    schedule_trace_plans,
     solver_names,
 )
 from repro.core.lbfgs import LBFGS, LBFGSOptions, batched_lbfgs
@@ -64,6 +66,7 @@ __all__ = [
     "VmappedStrategy",
     "as_batched",
     "as_batched_strategy",
+    "auto_plan_lattice",
     "LBFGS",
     "LBFGSOptions",
     "OBJECTIVES",
@@ -84,6 +87,7 @@ __all__ = [
     "run_multistart",
     "run_pso",
     "run_until_confident",
+    "schedule_trace_plans",
     "sequential_pso",
     "sequential_zeus",
     "serial_bfgs",

@@ -53,6 +53,20 @@ class BFGSOptions:
     # speculative Armijo ladder length (0 = full ls_iters ladder; batched
     # only — see core/engine.py "Adaptive speculative ladder")
     ladder_len: int = 0
+    # sweep schedule: "static" (the knobs above), "auto" (in-carry
+    # controller picks the repack/compact/ladder plan per window), or
+    # "replay" (force schedule_plans) — see core/engine.py
+    # "Auto-scheduling controller"
+    schedule: str = "static"
+    schedule_every: int = 4  # controller refresh window, in sweeps
+    # replay-forced plan indices (schedule="replay" only); record one via
+    # engine.schedule_trace_plans(result.schedule_trace)
+    schedule_plans: Optional[tuple] = None
+    # auto-controller plan lattice knobs: candidate ladder lengths (None =
+    # {0} ∪ powers of two < ls_iters) and the active-count fraction that
+    # latches the dynamic (repack+compact) plan
+    auto_ladders: Optional[tuple] = None
+    auto_active_frac: float = 0.5
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +179,11 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         compact_every=opts.compact_every,
         repack_every=opts.repack_every,
         ladder_len=opts.ladder_len,
+        schedule=opts.schedule,
+        schedule_every=opts.schedule_every,
+        schedule_plans=opts.schedule_plans,
+        auto_ladders=opts.auto_ladders,
+        auto_active_frac=opts.auto_active_frac,
     )
 
 

@@ -29,8 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import BFGSResult
 from repro.core.pso import PSOOptions, SwarmState, init_swarm, pso_step
-from repro.core.zeus import (ZeusOptions, ZeusResult, _select_best,
-                             solve_phase2, uniform_starts)
+from repro.core.zeus import (ZeusOptions, ZeusResult, _phase2_setup,
+                             _select_best, solve_phase2, uniform_starts)
 
 
 def shard_map_compat(fn, mesh, in_specs, out_specs):
@@ -124,10 +124,16 @@ def _local_zeus(
     # eval_rows sums the physical batched-sweep rows over the mesh (0 under
     # per_lane) and map_trips the per-shard chunk-step trips — each shard
     # repacks/compacts its own lanes, so the psum'd totals surface the
-    # whole-mesh tail work
+    # whole-mesh tail work. The schedule trace psums the per-window plan
+    # choices the same way: the auto controller decides per shard (its
+    # signals are local, collective-free), so row w of the psum'd trace
+    # reads "how many shards ran plan p in window w".
     res = res._replace(n_converged=pcount(res.n_converged),
                        eval_rows=pcount(res.eval_rows),
-                       map_trips=pcount(res.map_trips))
+                       map_trips=pcount(res.map_trips),
+                       schedule_trace=(pcount(res.schedule_trace)
+                                       if res.schedule_trace is not None
+                                       else None))
 
     # global best among converged lanes
     best_x, best_f = _select_best(res)
@@ -158,6 +164,11 @@ def distributed_zeus(
         )
     n_local = n_total // n_devices
 
+    # whether the engine will emit a ScheduleTrace decides the out-spec
+    # pytree's shape (None leaves are empty nodes under shard_map)
+    _, eopts = _phase2_setup(opts)
+    traced_schedule = eopts.schedule in ("auto", "replay")
+
     lane_spec = P(axis_names)  # lane axis sharded over all mesh axes
     out_specs = (
         P(),  # best_x (replicated)
@@ -172,6 +183,9 @@ def distributed_zeus(
             n_evals=lane_spec,
             eval_rows=P(),
             map_trips=P(),
+            # psum'd per-window plan counts, replicated like the other
+            # whole-mesh diagnostics
+            schedule_trace=P() if traced_schedule else None,
         ),
         P(),  # pso gf
     )

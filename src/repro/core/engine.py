@@ -114,6 +114,42 @@ and statuses bit-identical to the full ladder for identically-rounding
 (launch-size-stable) evaluators — see core/linesearch.py for the codegen
 reasoning and tests/test_batched_sweep.py::TestAdaptiveLadder for the
 enforcement.
+
+Auto-scheduling controller
+--------------------------
+All of the above are *static* schedules: the right repack/compact cadence
+and ladder length depend on how the swarm actually converges (the paper's
+§V trade-off study), which the user cannot know before the solve.
+`schedule="auto"` (batched mode only) moves the choice into the while-loop
+carry: a controller watches two schedule-invariant signals — the local
+active-lane count and a running histogram of accepted Armijo rungs
+(surfaced per lane by `armijo_backtracking_batch`) — and picks a *plan*
+per refresh window of `schedule_every` sweeps. A plan is a point in a
+small lattice: {static, dynamic} × candidate ladder lengths, where
+"dynamic" is repack+compact (chunked) or prefix compaction (monolithic),
+and the candidate ladders default to powers of two below ls_iters plus
+the full ladder. The controller starts on the full-ladder static plan,
+latches the dynamic plan once the active count drops below
+`auto_active_frac`·B (latched = hysteresis by monotonicity: frozen lanes
+never unfreeze), and re-targets the ladder at the smallest candidate
+covering p90 of the window's accepted rungs — adopting shorter candidates
+immediately (rows are monotone in ladder length, so shortening is free
+insurance) and longer ones only after two consecutive windows map to the
+same candidate (asymmetric hysteresis against thrash). Execution is a
+lax.switch over the plan lattice whose branches re-enter the SAME
+plan/execute closures the static schedules use, so every plan the
+controller can pick is one of the already-bit-identical schedules and an
+auto trajectory is array-equal to some static schedule sequence. That
+argument is enforceable: `BFGSResult.schedule_trace` records the chosen
+plan per window (a (n_windows, n_plans) count matrix, psum'd across
+shards by the distributed driver), and `schedule="replay"` +
+`schedule_plans=...` re-runs with a traced plan sequence forced — the
+replay suite (tests/test_autoschedule.py) asserts array-equality.
+Decisions are per shard and collective-free, like repacking: each shard
+watches its own lanes, so shards in different convergence regimes pick
+different plans without a psum. jit-cache bound: n_ladders ×
+(1 + repack-bucket × compaction-bucket branches) step specializations
+(DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -123,6 +159,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dual import grad_eval_cost, value_and_grad_fn
 from repro.core.linesearch import (
@@ -164,6 +201,13 @@ class BFGSResult(NamedTuple):
     # repacking (repack_every > 0) — the tail-latency metric repacking
     # optimizes. Psum'd across the mesh by the distributed driver.
     map_trips: Optional[jnp.ndarray] = None
+    # (n_windows, n_plans) int32 — how many shards chose plan p in refresh
+    # window w (schedule="auto"/"replay" only, else None). Single-host rows
+    # are one-hot for executed windows and all-zero after an early stop;
+    # decode with schedule_trace_plans() and replay with
+    # EngineOptions(schedule="replay", schedule_plans=...). Psum'd across
+    # the mesh by the distributed driver (per-shard decisions differ).
+    schedule_trace: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +249,27 @@ class EngineOptions:
     # by construction (core/linesearch.py), K·B → L·B + depth·B ladder rows
     # per sweep when most lanes accept early rungs.
     ladder_len: int = 0
+    # Sweep schedule selection (batched mode only for "auto"/"replay").
+    # "static": the repack_every/compact_every/ladder_len knobs above.
+    # "auto":   the in-carry controller picks a (dynamic?, ladder) plan per
+    #           refresh window from the active count + accepted-rung
+    #           histogram (module docstring); the static knobs must stay 0.
+    # "replay": force the plan sequence in schedule_plans (one plan index
+    #           per window — record one from an auto run's schedule_trace
+    #           via schedule_trace_plans()).
+    schedule: str = "static"
+    # Controller refresh window in sweeps: plans are re-decided (and the
+    # gather plans re-computed) every schedule_every sweeps.
+    schedule_every: int = 4
+    # Replay-forced plan indices, one per window (schedule="replay" only).
+    schedule_plans: Optional[Tuple[int, ...]] = None
+    # Candidate ladder lengths for the auto controller (0 = the full
+    # ls_iters ladder, always kept as the startup/most-conservative plan).
+    # None derives {0} ∪ {powers of two < ls_iters}.
+    auto_ladders: Optional[Tuple[int, ...]] = None
+    # Enable the dynamic (repack+compact) plan once the LOCAL active count
+    # drops below this fraction of the shard's lanes; latched once on.
+    auto_active_frac: float = 0.5
 
 
 class DirectionStrategy(Protocol):
@@ -427,16 +492,21 @@ def batch_lanes_init(bobj, bstrategy: BatchedDirectionStrategy,
 
 def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
                      opts: EngineOptions, lanes: BatchLanes
-                     ) -> Tuple[BatchLanes, jnp.ndarray]:
+                     ) -> Tuple[BatchLanes, jnp.ndarray, jnp.ndarray]:
     """One sweep over the whole stack (Alg. 4 lines 10-16, batch level).
 
-    Returns (lanes', rows) where rows is the scalar int32 count of physical
-    objective rows this step evaluated — (ladder probes + 1 value+grad) per
-    lane in the stack, masked/padding lanes included. The sweep driver sums
-    these into BFGSResult.eval_rows; deriving rows here (from the actual
-    stack size and the line search's actual probe count) is what keeps the
-    accounting honest under compaction, repacking, and the adaptive ladder,
-    whose per-sweep work is dynamic."""
+    Returns (lanes', rows, rung_hist): rows is the scalar int32 count of
+    physical objective rows this step evaluated — (ladder probes + 1
+    value+grad) per lane in the stack, masked/padding lanes included — and
+    rung_hist is the (ls_iters + 1,) int32 histogram of accepted Armijo
+    rungs over the ACTIVE lanes in the stack (bin ls_iters = exhausted),
+    the auto controller's ladder signal. The sweep driver sums rows into
+    BFGSResult.eval_rows; deriving them here (from the actual stack size
+    and the line search's actual probe count) is what keeps the accounting
+    honest under compaction, repacking, and the adaptive ladder, whose
+    per-sweep work is dynamic. The histogram counts active lanes only, so
+    it is identical under every schedule (frozen/padding lanes are
+    evaluated-but-masked and must not pollute the signal)."""
     X, F, G, P = lanes.x, lanes.f, lanes.g, lanes.p
     active = jnp.logical_not(jnp.logical_or(lanes.converged, lanes.failed))
 
@@ -488,7 +558,9 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
         direction_state=state,
     )
     rows = (ls.n_evals.astype(jnp.int32) + 1) * X.shape[0]
-    return stepped, rows
+    hist = jnp.zeros((opts.ls_iters + 1,), jnp.int32).at[ls.rung].add(
+        active.astype(jnp.int32))
+    return stepped, rows, hist
 
 
 # ---------------------------------------------------------------------------
@@ -541,18 +613,22 @@ def _compacted_sweep(step_fn, buckets: Tuple[int, ...], lanes,
     — guaranteed between plan refreshes because frozen lanes never unfreeze
     (converged/failed are sticky), so the active set only shrinks.
 
-    `step_fn` returns (lanes', rows); the scatter passes rows through, so
-    the caller's eval_rows accounting sees the bucket's physical work."""
+    `step_fn` returns (lanes', rows, rung_hist); the scatter passes both
+    counters through, so the caller's eval_rows accounting sees the
+    bucket's physical work and the controller sees the active lanes'
+    accepted rungs (frozen lanes in the padding are masked out of the
+    histogram by the step itself)."""
 
     def make_branch(size: int):
         def branch(operands):
             lanes, perm = operands
             idx = perm[:size]
             sub = jax.tree.map(lambda a: jnp.take(a, idx, axis=0), lanes)
-            sub, rows = step_fn(sub)
+            sub, rows, hist = step_fn(sub)
             return (
                 jax.tree.map(lambda a, s: a.at[idx].set(s), lanes, sub),
                 rows,
+                hist,
             )
 
         return branch
@@ -604,7 +680,7 @@ def _repacked_sweep(inner_sweep, cbuckets: Tuple[int, ...], chunk: int,
     optionally per-chunk-compacted via `inner_aux`) over the m chunks, and
     scatters back. Valid between plan refreshes for the same reason
     compaction is: frozen lanes never unfreeze, so every active lane stays
-    inside the gathered prefix. Returns (lanes', rows)."""
+    inside the gathered prefix. Returns (lanes', rows, rung_hist)."""
     n_chunks = lanes.x.shape[0]
 
     def make_branch(m: int):
@@ -620,7 +696,7 @@ def _repacked_sweep(inner_sweep, cbuckets: Tuple[int, ...], chunk: int,
                 ),
                 flat,
             )
-            sub, rows = inner_sweep(sub, inner_aux, m)
+            sub, rows, hist = inner_sweep(sub, inner_aux, m)
             flat = jax.tree.map(
                 lambda a, s: a.at[idx].set(
                     s.reshape((m * chunk,) + s.shape[2:])
@@ -630,12 +706,79 @@ def _repacked_sweep(inner_sweep, cbuckets: Tuple[int, ...], chunk: int,
             out = jax.tree.map(
                 lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), flat
             )
-            return out, rows
+            return out, rows, hist
 
         return branch
 
     return jax.lax.switch(gcidx, [make_branch(m) for m in cbuckets],
                           (lanes, gperm, inner_aux))
+
+
+# ---------------------------------------------------------------------------
+# Auto-scheduling controller (schedule="auto") and traced-plan replay
+# (schedule="replay") — module docstring "Auto-scheduling controller".
+#
+# The controller lives in the while-loop carry and decides, at every
+# schedule_every-sweep window boundary, which plan of a small host-defined
+# lattice the next window runs: {static, dynamic} × candidate ladder
+# lengths. Every plan re-enters the SAME plan/execute closures the static
+# schedules use (lax.switch over the lattice), so an auto trajectory is by
+# construction array-equal to the static schedule sequence its
+# schedule_trace records — the parity argument schedule="replay" turns into
+# a test.
+# ---------------------------------------------------------------------------
+class _AutoState(NamedTuple):
+    """Controller carry: current plan, latched dynamic flag, the previous
+    window's ladder candidate (the asymmetric hysteresis consults it when
+    lengthening the ladder), the accepted-rung histogram accumulated over
+    the current window, and the per-window plan trace."""
+
+    plan: jnp.ndarray  # scalar int32 — current plan index
+    dyn_on: jnp.ndarray  # scalar bool — dynamic plan latched
+    prev_lidx: jnp.ndarray  # scalar int32 — last window's ladder candidate
+    hist: jnp.ndarray  # (ls_iters + 1,) int32 — current window's rungs
+    trace: jnp.ndarray  # (n_windows, n_plans) int32
+
+
+def _auto_ladders(opts: EngineOptions) -> Tuple[int, ...]:
+    """Canonical candidate ladder lengths for the controller: sorted by
+    effective length (0 = the full ls_iters ladder) with the full ladder
+    LAST — index n_ladders-1 is the startup / most conservative plan."""
+    K = opts.ls_iters
+    if opts.auto_ladders is not None:
+        cand = {int(L) for L in opts.auto_ladders}
+        for L in cand:
+            if L < 0 or L > K:
+                raise ValueError(
+                    f"auto_ladders entries must be in [0, ls_iters={K}] "
+                    f"(got {L})")
+    else:
+        cand = {0}
+        L = 1
+        while L < K:
+            cand.add(L)
+            L *= 2
+    cand.discard(K)  # ladder_len == K is the full ladder; canonical spelling
+    cand.add(0)
+    return tuple(sorted(cand - {0})) + (0,)
+
+
+def auto_plan_lattice(opts: EngineOptions) -> Tuple[Tuple[int, int], ...]:
+    """The (dynamic, ladder_len) plans schedule="auto" can pick, in
+    plan-index order (index p = dynamic · n_ladders + ladder_idx).
+    dynamic=1 means repack+compact (chunked) / prefix compaction
+    (monolithic). Decode ScheduleTrace rows against this."""
+    ladders = _auto_ladders(opts)
+    return tuple((dyn, L) for dyn in (0, 1) for L in ladders)
+
+
+def schedule_trace_plans(trace) -> Tuple[int, ...]:
+    """Decode a single-shard ScheduleTrace into per-window plan indices,
+    suitable for EngineOptions(schedule="replay", schedule_plans=...).
+    All-zero rows (windows after an early stop) decode to plan 0 — those
+    windows are never executed by the replay either."""
+    t = np.asarray(trace)
+    return tuple(int(np.argmax(row)) if row.any() else 0 for row in t)
 
 
 def run_multistart(
@@ -693,6 +836,30 @@ def run_multistart(
             f"requires sweep_mode='batched' (got {opts.sweep_mode!r}); the "
             "per-lane sequential search is already adaptive"
         )
+    if opts.schedule not in ("static", "auto", "replay"):
+        raise ValueError(
+            f"unknown schedule {opts.schedule!r}; "
+            "expected 'static', 'auto' or 'replay'"
+        )
+    scheduling = opts.schedule != "static"
+    if scheduling:
+        if opts.sweep_mode != "batched":
+            raise ValueError(
+                f"schedule={opts.schedule!r} drives the batched sweep's "
+                f"plans and requires sweep_mode='batched' "
+                f"(got {opts.sweep_mode!r})"
+            )
+        if opts.compact_every or opts.repack_every or opts.ladder_len:
+            raise ValueError(
+                f"schedule={opts.schedule!r} owns the cadence/ladder plan; "
+                "leave repack_every/compact_every/ladder_len at 0 (got "
+                f"repack_every={opts.repack_every}, "
+                f"compact_every={opts.compact_every}, "
+                f"ladder_len={opts.ladder_len})"
+            )
+        if opts.schedule_every <= 0:
+            raise ValueError(
+                f"schedule_every must be >= 1 (got {opts.schedule_every})")
 
     if opts.sweep_mode == "batched":
         if opts.linesearch != "armijo":
@@ -713,10 +880,11 @@ def run_multistart(
         step_one = functools.partial(lane_step, f, vg, strategy, opts)
         init_chunk = jax.vmap(init_one)
         step_vmapped = jax.vmap(step_one)
-        # same (lanes', rows) contract as the batched step so the sweep
-        # driver below is schedule-agnostic; per_lane rows are not
-        # instrumented (eval_rows stays 0)
-        step_chunk = lambda ls: (step_vmapped(ls), jnp.zeros((), jnp.int32))
+        # same (lanes', rows, rung_hist) contract as the batched step so the
+        # sweep driver below is schedule-agnostic; per_lane rows/rungs are
+        # not instrumented (eval_rows stays 0, the histogram empty)
+        step_chunk = lambda ls: (step_vmapped(ls), jnp.zeros((), jnp.int32),
+                                 jnp.zeros((opts.ls_iters + 1,), jnp.int32))
     else:
         raise ValueError(
             f"unknown sweep_mode {opts.sweep_mode!r}; "
@@ -741,8 +909,8 @@ def run_multistart(
                 failed=jnp.logical_or(lanes.failed, is_pad),
             )
         def sweep(ls):
-            new, rows = jax.lax.map(step_chunk, ls)
-            return new, jnp.sum(rows)
+            new, rows, hist = jax.lax.map(step_chunk, ls)
+            return new, jnp.sum(rows), jnp.sum(hist, axis=0)
 
         group, n_groups = C, n_chunks
     else:
@@ -784,15 +952,15 @@ def run_multistart(
 
             def inner_sweep(sub, inner_aux, m):
                 cperm, cbidx = inner_aux
-                new, rows = jax.lax.map(
+                new, rows, hist = jax.lax.map(
                     lambda args: _compacted_sweep(step_chunk, buckets, *args),
                     (sub, cperm[:m], cbidx[:m]),
                 )
-                return new, jnp.sum(rows)
+                return new, jnp.sum(rows), jnp.sum(hist, axis=0)
         else:
             def inner_sweep(sub, inner_aux, m):
-                new, rows = jax.lax.map(step_chunk, sub)
-                return new, jnp.sum(rows)
+                new, rows, hist = jax.lax.map(step_chunk, sub)
+                return new, jnp.sum(rows), jnp.sum(hist, axis=0)
 
         def refresh_plans(k, lanes, aux):
             """Boundary-sweep plan refreshes, both skipped via lax.cond in
@@ -822,8 +990,8 @@ def run_multistart(
         def repacked(lanes, aux):
             gperm, gcidx = aux[0], aux[1]
             inner_aux = aux[2:]
-            lanes, srows = _repacked_sweep(inner_sweep, cbuckets, C, lanes,
-                                           gperm, gcidx, inner_aux)
+            lanes, srows, _ = _repacked_sweep(inner_sweep, cbuckets, C, lanes,
+                                              gperm, gcidx, inner_aux)
             return lanes, srows, cbuckets_arr[gcidx]
 
         gp0 = gplan(_active_mask(lanes).reshape(-1))
@@ -833,7 +1001,7 @@ def run_multistart(
             plan_fn = jax.vmap(plan_one)  # each chunk compacts independently
 
             def compacted(lanes, perm, bidx):
-                new, rows = jax.lax.map(
+                new, rows, _ = jax.lax.map(
                     lambda args: _compacted_sweep(step_chunk, buckets, *args),
                     (lanes, perm, bidx),
                 )
@@ -842,12 +1010,225 @@ def run_multistart(
             plan_fn = plan_one
 
             def compacted(lanes, perm, bidx):
-                return _compacted_sweep(step_chunk, buckets, lanes, perm,
-                                        bidx)
+                new, rows, _ = _compacted_sweep(step_chunk, buckets, lanes,
+                                                perm, bidx)
+                return new, rows
 
         aux0 = plan_fn(_active_mask(lanes))
     else:
         aux0 = ()
+
+    # ------------------------------------------------------------------
+    # Auto-scheduling controller (schedule="auto") / traced-plan replay
+    # (schedule="replay"). Every plan executor re-enters the same step and
+    # gather/scatter machinery the static schedules use, parameterized only
+    # by the plan's ladder length — which is what makes an auto trajectory
+    # array-equal to its recorded static plan sequence (module docstring).
+    # ------------------------------------------------------------------
+    if scheduling:
+        every = opts.schedule_every
+        n_windows = max(1, -(-opts.iter_max // every))
+        ladders = _auto_ladders(opts)
+        n_ladders = len(ladders)
+        n_plans = 2 * n_ladders
+        # effective ladder lengths (0 = the full ls_iters ladder, last) —
+        # ascending, for the smallest-candidate-covering-target search
+        eff_arr = jnp.asarray(
+            [L if L > 0 else opts.ls_iters for L in ladders], jnp.int32)
+        act_thresh = opts.auto_active_frac * B
+        if opts.schedule == "replay":
+            if opts.schedule_plans is None:
+                raise ValueError(
+                    "schedule='replay' needs schedule_plans (one plan index "
+                    "per window — see schedule_trace_plans())")
+            plans_seq = tuple(int(p) for p in opts.schedule_plans)
+            if len(plans_seq) < n_windows:
+                raise ValueError(
+                    f"schedule_plans has {len(plans_seq)} entries; "
+                    f"iter_max={opts.iter_max} at schedule_every={every} "
+                    f"needs {n_windows}")
+            if any(p < 0 or p >= n_plans for p in plans_seq):
+                raise ValueError(
+                    f"schedule_plans entries must be in [0, {n_plans}) for "
+                    f"this plan lattice (got {plans_seq})")
+            plans_arr = jnp.asarray(plans_seq[:n_windows], jnp.int32)
+
+        # one step variant per candidate ladder; everything else (bobj,
+        # strategy, stop protocol) is shared with the static paths.
+        # The plan/gather closures below (fresh_aux / inner / the dyn
+        # executors) deliberately MIRROR the static schedules' machinery
+        # above (fresh_inner_aux / inner_sweep / repacked / compacted),
+        # differing only in closing over step_L[L] instead of step_chunk:
+        # the two copies must stay in lockstep for the auto==static parity
+        # argument, which tests/test_autoschedule.py enforces by replay.
+        step_L = {
+            L: functools.partial(
+                batch_lanes_step, bobj, bstrategy,
+                dataclasses.replace(opts, ladder_len=L))
+            for L in ladders
+        }
+        sbuckets = _compaction_buckets(group)
+        splan_one = functools.partial(
+            _compaction_plan, buckets=jnp.asarray(sbuckets, jnp.int32))
+        if chunked:
+            scbuckets = _compaction_buckets(n_chunks)
+            scbuckets_arr = jnp.asarray(scbuckets, jnp.int32)
+            sgplan = functools.partial(_repack_plan, chunk=C,
+                                       cbuckets=scbuckets_arr)
+            splan_fn = jax.vmap(splan_one)
+
+            def fresh_aux(ls):
+                # repack plan over the flattened lanes + per-chunk
+                # compaction plans of the repacked layout (same recipe as
+                # the static repack+compact schedule's refresh)
+                act = _active_mask(ls).reshape(-1)
+                gperm, gcidx = sgplan(act)
+                gact = jnp.take(act, gperm).reshape(n_chunks, C)
+                cperm, cbidx = splan_fn(gact)
+                return (gperm, gcidx, cperm, cbidx)
+
+            def make_static_exec(L):
+                step = step_L[L]
+
+                def ex(operands):
+                    ls, _ = operands
+                    new, rows, hist = jax.lax.map(step, ls)
+                    return (new, jnp.sum(rows), trips_static,
+                            jnp.sum(hist, axis=0))
+
+                return ex
+
+            def make_dyn_exec(L):
+                step = step_L[L]
+
+                def inner(sub, inner_aux, m):
+                    cperm, cbidx = inner_aux
+                    new, rows, hist = jax.lax.map(
+                        lambda args: _compacted_sweep(step, sbuckets, *args),
+                        (sub, cperm[:m], cbidx[:m]),
+                    )
+                    return new, jnp.sum(rows), jnp.sum(hist, axis=0)
+
+                def ex(operands):
+                    ls, aux = operands
+                    new, rows, hist = _repacked_sweep(
+                        inner, scbuckets, C, ls, aux[0], aux[1], aux[2:])
+                    return new, rows, scbuckets_arr[aux[1]], hist
+
+                return ex
+        else:
+            def fresh_aux(ls):
+                return splan_one(_active_mask(ls))
+
+            def make_static_exec(L):
+                step = step_L[L]
+
+                def ex(operands):
+                    ls, _ = operands
+                    new, rows, hist = step(ls)
+                    return new, rows, trips_static, hist
+
+                return ex
+
+            def make_dyn_exec(L):
+                step = step_L[L]
+
+                def ex(operands):
+                    ls, aux = operands
+                    perm, bidx = aux
+                    new, rows, hist = _compacted_sweep(step, sbuckets, ls,
+                                                       perm, bidx)
+                    return new, rows, trips_static, hist
+
+                return ex
+
+        # plan index p = dyn · n_ladders + ladder_idx (auto_plan_lattice)
+        executors = ([make_static_exec(L) for L in ladders]
+                     + [make_dyn_exec(L) for L in ladders])
+
+        def controller(astate, lanes):
+            """New plan from the window's signals (module docstring): latch
+            the dynamic plan on the LOCAL active count (per-shard, no
+            collective) and re-target the ladder at the smallest candidate
+            covering p90 of the window's accepted rungs. The ladder
+            hysteresis is ASYMMETRIC, at candidate granularity: a SHORTER
+            candidate is adopted immediately — per-sweep ladder rows are
+            max(L, maxrung+1)+1, monotone in L, so shortening can never
+            cost rows; the only risk is extra one-rung fallback launches
+            for a window if the histogram was transiently optimistic —
+            while a LONGER candidate (the launch-saving, rows-paying
+            direction) needs two consecutive windows mapping to the same
+            candidate before it is adopted. That keeps a noisy histogram
+            from oscillating the ladder upward while letting the
+            controller track a calming swarm at window latency (a
+            symmetric two-window rule measurably sat on the expensive
+            startup ladder through rosenbrock's whole chaotic phase)."""
+            act = jnp.sum(_active_mask(lanes).astype(jnp.int32))
+            dyn_on = jnp.logical_or(astate.dyn_on, act < act_thresh)
+            total = jnp.sum(astate.hist)
+            csum = jnp.cumsum(astate.hist)
+            need = (9 * total + 9) // 10  # ceil(0.9 · total)
+            r90 = jnp.argmax(csum >= need).astype(jnp.int32)
+            target = r90 + 1  # rungs needed to cover p90 speculatively
+            lidx = jnp.minimum(
+                jnp.searchsorted(eff_arr, target).astype(jnp.int32),
+                n_ladders - 1)
+            cur = astate.plan % n_ladders
+            stable_up = jnp.logical_and(lidx > cur,
+                                        lidx == astate.prev_lidx)
+            adopt = jnp.logical_and(total > 0,
+                                    jnp.logical_or(lidx < cur, stable_up))
+            new_lidx = jnp.where(adopt, lidx, cur)
+            return astate._replace(
+                plan=(jnp.where(dyn_on, n_ladders, 0)
+                      + new_lidx).astype(jnp.int32),
+                dyn_on=dyn_on,
+                prev_lidx=jnp.where(total > 0, lidx, astate.prev_lidx),
+                hist=jnp.zeros_like(astate.hist),  # window accumulator reset
+            )
+
+        def sched_body(carry):
+            k, lanes, _, _, aux, rows, trips, astate = carry
+            w = k // every
+            boundary = (k % every) == 0
+            if opts.schedule == "replay":
+                decided = astate._replace(
+                    plan=plans_arr[w], hist=jnp.zeros_like(astate.hist))
+            else:
+                decided = controller(astate, lanes)
+            # the decision (and the window-histogram reset) lands only on
+            # boundary sweeps; in between the stored plan keeps running
+            astate = jax.tree.map(
+                lambda n, o: jnp.where(boundary, n, o), decided, astate)
+            trace = astate.trace.at[w, astate.plan].add(
+                boundary.astype(jnp.int32))
+            # gather plans refresh at every boundary whose (just-decided)
+            # plan is dynamic — static executors never read aux, and
+            # dynamic windows always refresh because the decision precedes
+            # this refresh, so a static→dynamic switch sees a current
+            # layout; stored plans stay valid in between (the active set
+            # only shrinks)
+            aux = jax.lax.cond(
+                jnp.logical_and(boundary, astate.plan >= n_ladders),
+                fresh_aux, lambda ls: aux, lanes)
+            lanes, srows, strips, shist = jax.lax.switch(
+                astate.plan, executors, (lanes, aux))
+            astate = astate._replace(hist=astate.hist + shist, trace=trace)
+            n_conv, n_act = counts(lanes)
+            return (k + 1, lanes, n_conv, n_act, aux, rows + srows,
+                    trips + strips, astate)
+
+        astate0 = _AutoState(
+            plan=jnp.asarray(n_ladders - 1, jnp.int32),  # full-ladder static
+            dyn_on=jnp.zeros((), bool),
+            # -1 never matches a candidate, so the (guarded) lengthening
+            # direction needs two real windows of histogram; shortening
+            # from the full-ladder startup doesn't consult it
+            prev_lidx=jnp.asarray(-1, jnp.int32),
+            hist=jnp.zeros((opts.ls_iters + 1,), jnp.int32),
+            trace=jnp.zeros((n_windows, n_plans), jnp.int32),
+        )
+        aux0 = fresh_aux(lanes)
 
     def counts(lanes):
         """Global (converged, active) lane counts. The collective (when the
@@ -858,10 +1239,10 @@ def run_multistart(
         return n_conv, n_act
 
     def cond(carry):
-        k, lanes, n_conv, n_act, _, _, _ = carry
+        # shared by the static (7-tuple) and scheduling (8-tuple) carries
         return jnp.logical_and(
-            k < opts.iter_max,
-            jnp.logical_and(n_conv < required_c, n_act > 0),
+            carry[0] < opts.iter_max,
+            jnp.logical_and(carry[2] < required_c, carry[3] > 0),
         )
 
     def body(carry):
@@ -886,18 +1267,28 @@ def run_multistart(
             lanes, srows = compacted(lanes, perm, bidx)
             strips = trips_static
         else:
-            lanes, srows = sweep(lanes)
+            lanes, srows, _ = sweep(lanes)
             strips = trips_static
         n_conv, n_act = counts(lanes)
         return (k + 1, lanes, n_conv, n_act, aux, rows + srows,
                 trips + strips)
 
     n_conv0, n_act0 = counts(lanes)
-    k, lanes, _, _, _, eval_rows, map_trips = jax.lax.while_loop(
-        cond, body,
-        (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0, eval_rows0,
-         jnp.zeros((), jnp.int32)),
-    )
+    if scheduling:
+        out = jax.lax.while_loop(
+            cond, sched_body,
+            (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0,
+             eval_rows0, jnp.zeros((), jnp.int32), astate0),
+        )
+        k, lanes, eval_rows, map_trips = out[0], out[1], out[5], out[6]
+        schedule_trace = out[7].trace
+    else:
+        k, lanes, _, _, _, eval_rows, map_trips = jax.lax.while_loop(
+            cond, body,
+            (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0,
+             eval_rows0, jnp.zeros((), jnp.int32)),
+        )
+        schedule_trace = None
 
     if chunked:
         lanes = jax.tree.map(
@@ -921,6 +1312,7 @@ def run_multistart(
         n_evals=lanes.n_evals,
         eval_rows=eval_rows,
         map_trips=map_trips,
+        schedule_trace=schedule_trace,
     )
 
 

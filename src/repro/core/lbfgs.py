@@ -49,6 +49,13 @@ class LBFGSOptions:
     repack_every: int = 0
     # speculative Armijo ladder length (0 = full ladder; batched only)
     ladder_len: int = 0
+    # sweep schedule: "static" | "auto" | "replay" (engine; batched only
+    # for the latter two — core/engine.py "Auto-scheduling controller")
+    schedule: str = "static"
+    schedule_every: int = 4
+    schedule_plans: Optional[tuple] = None
+    auto_ladders: Optional[tuple] = None
+    auto_active_frac: float = 0.5
 
 
 class LBFGSMemory(NamedTuple):
@@ -150,6 +157,11 @@ def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
         compact_every=opts.compact_every,
         repack_every=opts.repack_every,
         ladder_len=opts.ladder_len,
+        schedule=opts.schedule,
+        schedule_every=opts.schedule_every,
+        schedule_plans=opts.schedule_plans,
+        auto_ladders=opts.auto_ladders,
+        auto_active_frac=opts.auto_active_frac,
     )
 
 

@@ -72,6 +72,14 @@ class BatchLineSearchResult(NamedTuple):
     # full speculative ladder; traced (ladder_len + executed fallback
     # rungs) for the adaptive ladder.
     n_evals: jnp.ndarray
+    # (B,) int32 — the accepted rung index per lane (0..K-1), K when the
+    # search exhausted every rung. This is the per-lane fallback-depth
+    # signal the auto-scheduling controller histograms: a lane with
+    # rung >= ladder_len pays (rung - ladder_len + 1) sequential fallback
+    # probes under an L-rung speculative ladder. Identical between the
+    # full and adaptive ladders by the same argument as alpha (both
+    # phases make the same Armijo accept decisions).
+    rung: jnp.ndarray
 
 
 def armijo_backtracking_batch(
@@ -129,6 +137,7 @@ def armijo_backtracking_batch(
             alpha=jnp.full((B,), alpha0, dtype),
             f_new=F0,
             n_evals=jnp.zeros((), jnp.int32),
+            rung=jnp.zeros((B,), jnp.int32),
         )
     L = K if ladder_len <= 0 else min(ladder_len, K)
     ddir = jnp.sum(G0 * P, axis=-1)  # (B,) directional derivatives
@@ -180,6 +189,7 @@ def armijo_backtracking_batch(
             alpha=jnp.where(any_ok, alpha_acc, alphas[-1] * shrink),
             f_new=jnp.where(any_ok, f_acc, F[-1]),
             n_evals=jnp.asarray(K, jnp.int32),
+            rung=jnp.where(any_ok, k_acc, K).astype(jnp.int32),
         )
 
     # Masked sequential fallback for lanes that exhausted the short ladder:
@@ -196,7 +206,7 @@ def armijo_backtracking_batch(
     # exhaustion at i = K-1 reproduces the full ladder's alphas[-1]·shrink
     # exactly.
     def probe(state, i):
-        alpha, f1, done, n = state
+        alpha, f1, done, n, rung = state
         Ft = ladder_launch(alphas_np[i:i + 1])[0]  # (B,) one batched rung
         ok_i = Ft <= rhs[i]
         searching = jnp.logical_not(done)
@@ -204,15 +214,20 @@ def armijo_backtracking_batch(
                           jnp.where(ok_i, alphas[i], alphas[i] * shrink),
                           alpha)
         f1 = jnp.where(searching, Ft, f1)
+        accepted = jnp.logical_and(searching, ok_i)
         return (alpha, f1,
-                jnp.logical_or(done, jnp.logical_and(searching, ok_i)),
-                n + 1)
+                jnp.logical_or(done, accepted),
+                n + 1,
+                jnp.where(accepted, i, rung).astype(jnp.int32))
 
     state = (
         jnp.where(any_ok, alpha_acc, alphas[L - 1] * shrink),
         jnp.where(any_ok, f_acc, F[-1]),
         any_ok,
         jnp.asarray(L, jnp.int32),
+        # still-searching lanes carry rung = K (exhausted) until a fallback
+        # probe accepts, so exhaustion reports the same K as the full ladder
+        jnp.where(any_ok, k_acc, K).astype(jnp.int32),
     )
     for i in range(L, K):
         state = jax.lax.cond(
@@ -221,9 +236,9 @@ def armijo_backtracking_batch(
             partial(probe, i=i),
             state,
         )
-    alpha, f1, _, n = state
+    alpha, f1, _, n, rung = state
     return BatchLineSearchResult(alpha=alpha, f_new=f1,
-                                 n_evals=n.astype(jnp.int32))
+                                 n_evals=n.astype(jnp.int32), rung=rung)
 
 
 def wolfe_linesearch(

@@ -51,6 +51,13 @@ class ZeusOptions:
     # only; 0 = full ladder) — see core/engine.py "Adaptive speculative
     # ladder"
     ladder_len: Optional[int] = None
+    # overrides the solver opts' sweep schedule ("static" | "auto" |
+    # "replay") and controller window — see core/engine.py
+    # "Auto-scheduling controller"
+    schedule: Optional[str] = None
+    schedule_every: Optional[int] = None
+    # replay-forced plan indices (with schedule="replay")
+    schedule_plans: Optional[tuple] = None
 
 
 class ZeusResult(NamedTuple):
@@ -68,8 +75,11 @@ def _solver_name(opts: ZeusOptions) -> str:
     return opts.solver
 
 
-def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
-    """Phase 2 through the engine: registry lookup -> run_multistart."""
+def _phase2_setup(opts: ZeusOptions):
+    """Resolve the phase-2 (strategy, EngineOptions) pair: registry lookup
+    plus the ZeusOptions-level overrides. Shared by solve_phase2 and the
+    distributed driver (which needs the effective EngineOptions to shape
+    its out-specs — e.g. whether a ScheduleTrace will be produced)."""
     name = _solver_name(opts)
     factory = get_solver(name)
     if name == "lbfgs":
@@ -91,6 +101,11 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
                 compact_every=b.compact_every,
                 repack_every=b.repack_every,
                 ladder_len=b.ladder_len,
+                schedule=b.schedule,
+                schedule_every=b.schedule_every,
+                schedule_plans=b.schedule_plans,
+                auto_ladders=b.auto_ladders,
+                auto_active_frac=b.auto_active_frac,
             )
     elif name == "bfgs":
         solver_opts = opts.bfgs
@@ -105,6 +120,18 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
         eopts = dataclasses.replace(eopts, repack_every=opts.repack_every)
     if opts.ladder_len is not None:
         eopts = dataclasses.replace(eopts, ladder_len=opts.ladder_len)
+    if opts.schedule is not None:
+        eopts = dataclasses.replace(eopts, schedule=opts.schedule)
+    if opts.schedule_every is not None:
+        eopts = dataclasses.replace(eopts, schedule_every=opts.schedule_every)
+    if opts.schedule_plans is not None:
+        eopts = dataclasses.replace(eopts, schedule_plans=opts.schedule_plans)
+    return strategy, eopts
+
+
+def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
+    """Phase 2 through the engine: registry lookup -> run_multistart."""
+    strategy, eopts = _phase2_setup(opts)
     return run_multistart(f, x0, strategy, eopts, pcount=pcount)
 
 

@@ -77,38 +77,55 @@ VARIANTS = {
 
 
 # zeus engine variant name -> (solver, lane_chunk, hessian_impl,
-#   sweep_mode, compact_every, repack_every, ladder_len)
+#   sweep_mode, compact_every, repack_every, ladder_len, schedule)
 ZEUS_VARIANTS = {
-    "bfgs": ("bfgs", None, "fast", "per_lane", 0, 0, 0),
-    "bfgs_ref": ("bfgs", None, "reference", "per_lane", 0, 0, 0),
-    "bfgs_c64": ("bfgs", 64, "fast", "per_lane", 0, 0, 0),
-    "bfgs_c256": ("bfgs", 256, "fast", "per_lane", 0, 0, 0),
+    "bfgs": ("bfgs", None, "fast", "per_lane", 0, 0, 0, "static"),
+    "bfgs_ref": ("bfgs", None, "reference", "per_lane", 0, 0, 0, "static"),
+    "bfgs_c64": ("bfgs", 64, "fast", "per_lane", 0, 0, 0, "static"),
+    "bfgs_c256": ("bfgs", 256, "fast", "per_lane", 0, 0, 0, "static"),
     # batched sweep path: speculative ladder + fused batch kernels
-    "bfgs_batched": ("bfgs", None, "fast", "batched", 0, 0, 0),
-    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched", 0, 0, 0),
-    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched", 0, 0, 0),
+    "bfgs_batched": ("bfgs", None, "fast", "batched", 0, 0, 0, "static"),
+    "bfgs_batched_c64": ("bfgs", 64, "fast", "batched", 0, 0, 0, "static"),
+    "bfgs_batched_c256": ("bfgs", 256, "fast", "batched", 0, 0, 0, "static"),
     # + active-lane compaction: the sweep runs on the active-prefix bucket
     # only, so wall clock tracks the surviving lanes instead of B
-    "bfgs_batched_compact": ("bfgs", None, "fast", "batched", 1, 0, 0),
-    "bfgs_batched_c256_compact": ("bfgs", 256, "fast", "batched", 1, 0, 0),
+    "bfgs_batched_compact": ("bfgs", None, "fast", "batched", 1, 0, 0,
+                             "static"),
+    "bfgs_batched_c256_compact": ("bfgs", 256, "fast", "batched", 1, 0, 0,
+                                  "static"),
     # + global cross-chunk repacking: survivors re-gathered into fewer
     # full chunks, so the lax.map trip count tracks the tail too
-    "bfgs_batched_c64_repack": ("bfgs", 64, "fast", "batched", 0, 1, 0),
+    "bfgs_batched_c64_repack": ("bfgs", 64, "fast", "batched", 0, 1, 0,
+                                "static"),
     "bfgs_batched_c64_repack_compact":
-        ("bfgs", 64, "fast", "batched", 1, 1, 0),
-    "bfgs_batched_c256_repack": ("bfgs", 256, "fast", "batched", 0, 1, 0),
+        ("bfgs", 64, "fast", "batched", 1, 1, 0, "static"),
+    "bfgs_batched_c256_repack": ("bfgs", 256, "fast", "batched", 0, 1, 0,
+                                 "static"),
     # + adaptive speculative ladder: 4 speculative rungs + masked
     # sequential fallback — same trajectory, fewer objective rows
-    "bfgs_batched_ladder4": ("bfgs", None, "fast", "batched", 0, 0, 4),
+    "bfgs_batched_ladder4": ("bfgs", None, "fast", "batched", 0, 0, 4,
+                             "static"),
     "bfgs_batched_c64_repack_ladder4":
-        ("bfgs", 64, "fast", "batched", 1, 1, 4),
-    "lbfgs": ("lbfgs", None, None, "per_lane", 0, 0, 0),
-    "lbfgs_c64": ("lbfgs", 64, None, "per_lane", 0, 0, 0),
-    "lbfgs_c256": ("lbfgs", 256, None, "per_lane", 0, 0, 0),
-    "lbfgs_batched": ("lbfgs", None, None, "batched", 0, 0, 0),
-    "lbfgs_batched_compact": ("lbfgs", None, None, "batched", 1, 0, 0),
-    "lbfgs_batched_c64_repack": ("lbfgs", 64, None, "batched", 0, 1, 0),
-    "lbfgs_batched_ladder4": ("lbfgs", None, None, "batched", 0, 0, 4),
+        ("bfgs", 64, "fast", "batched", 1, 1, 4, "static"),
+    # auto-scheduling controller: the engine picks the repack/compact and
+    # ladder plan per window from the active count + accepted-rung
+    # histogram — compare against the hand-tuned static variants above
+    "bfgs_batched_auto": ("bfgs", None, "fast", "batched", 0, 0, 0, "auto"),
+    "bfgs_batched_c64_auto": ("bfgs", 64, "fast", "batched", 0, 0, 0,
+                              "auto"),
+    "bfgs_batched_c256_auto": ("bfgs", 256, "fast", "batched", 0, 0, 0,
+                               "auto"),
+    "lbfgs": ("lbfgs", None, None, "per_lane", 0, 0, 0, "static"),
+    "lbfgs_c64": ("lbfgs", 64, None, "per_lane", 0, 0, 0, "static"),
+    "lbfgs_c256": ("lbfgs", 256, None, "per_lane", 0, 0, 0, "static"),
+    "lbfgs_batched": ("lbfgs", None, None, "batched", 0, 0, 0, "static"),
+    "lbfgs_batched_compact": ("lbfgs", None, None, "batched", 1, 0, 0,
+                              "static"),
+    "lbfgs_batched_c64_repack": ("lbfgs", 64, None, "batched", 0, 1, 0,
+                                 "static"),
+    "lbfgs_batched_ladder4": ("lbfgs", None, None, "batched", 0, 0, 4,
+                              "static"),
+    "lbfgs_batched_auto": ("lbfgs", None, None, "batched", 0, 0, 0, "auto"),
 }
 
 
@@ -152,8 +169,8 @@ def _run_zeus_lab(args, results):
             f"unknown zeus variant(s) {', '.join(map(repr, unknown))}; "
             f"known: {', '.join(ZEUS_VARIANTS)}")
     for name in names:
-        (solver, chunk, impl, sweep_mode, compact, repack,
-         ladder) = ZEUS_VARIANTS[name]
+        (solver, chunk, impl, sweep_mode, compact, repack, ladder,
+         schedule) = ZEUS_VARIANTS[name]
         key = f"zeus|{args.zeus}|d{args.dim}|b{args.lanes}|i{args.iters}|{name}"
         if key in results and results[key].get("status") == "ok":
             print(f"[cached] {key}")
@@ -162,12 +179,12 @@ def _run_zeus_lab(args, results):
             sopts = BFGSOptions(iter_bfgs=args.iters, theta=1e-4,
                                 hessian_impl=impl, sweep_mode=sweep_mode,
                                 compact_every=compact, repack_every=repack,
-                                ladder_len=ladder)
+                                ladder_len=ladder, schedule=schedule)
         else:
             sopts = LBFGSOptions(iter_max=args.iters, theta=1e-4,
                                  sweep_mode=sweep_mode,
                                  compact_every=compact, repack_every=repack,
-                                 ladder_len=ladder)
+                                 ladder_len=ladder, schedule=schedule)
         strategy, eopts = get_solver(solver)(sopts, lane_chunk=chunk)
         run = jax.jit(lambda x: run_multistart(obj.fn, x, strategy, eopts))
         res = jax.block_until_ready(run(x0))  # compile + warm

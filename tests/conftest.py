@@ -62,7 +62,10 @@ else:
     settings.register_profile(
         "repro",
         deadline=None,
-        max_examples=25,
+        # the weekly CI deep run raises the budget (property tests that set
+        # their own max_examples read the same env var)
+        max_examples=int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES",
+                                        "25")),
         suppress_health_check=[HealthCheck.too_slow],
     )
     settings.load_profile("repro")

@@ -1,0 +1,442 @@
+"""Auto-scheduling controller (engine schedule="auto"/"replay", ISSUE 5).
+
+The parity argument, as tests: every plan the controller can pick —
+{static, dynamic} × candidate ladder lengths — is one of the already
+bit-identical static schedules, so an auto trajectory must be array-equal
+to (a) the plain static batched run, for every bit-stable evaluator, and
+(b) the replayed run that forces the recorded plan sequence
+(schedule="replay" + schedule_plans from schedule_trace_plans), per-lane
+n_evals and counters included, since the replay runs the very same plans.
+The controller's signals are schedule-invariant by construction: the
+active count is a lane property, and the accepted-rung histogram counts
+active lanes only, whose accepted α (and therefore rung) is identical
+under every schedule — the rung suite below pins the per-lane signal
+against hand-computed backtracking depths.
+
+Tests use small auto_ladders lattices: the lax.switch over the plan
+lattice compiles n_ladders × (repack-bucket × compaction-bucket) step
+specializations, and the default ls_iters=20 lattice is production-sized,
+not test-sized. Run with REPRO_DISABLE_PALLAS=1 for the jnp reference leg
+(CI runs both).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    BFGSOptions,
+    LBFGSOptions,
+    auto_plan_lattice,
+    batched_bfgs,
+    batched_lbfgs,
+    schedule_trace_plans,
+)
+from repro.core.engine import EngineOptions, _auto_ladders
+from repro.core.linesearch import armijo_backtracking, armijo_backtracking_batch
+from repro.core.objectives import get_objective, rosenbrock, sphere
+
+# small lattice: {ladder 2, full ladder} × {static, dynamic} = 4 plans
+LADDERS = (2, 0)
+
+# rosenbrock's optimum (1, ..., 1) has a bit-exact zero gradient: lanes
+# started there are frozen from init, lanes at the hard valley start never
+# converge at theta=1e-30 — deterministic freeze patterns (cf. test_repack)
+HARD_START = [-1.2, 1.0]
+
+
+def _starts(name, B, dim, seed):
+    obj = get_objective(name)
+    return obj, jax.random.uniform(jax.random.key(seed), (B, dim),
+                                   minval=obj.lower, maxval=obj.upper)
+
+
+def _frozen_mix(frozen_mask):
+    frozen_mask = np.asarray(frozen_mask, bool)
+    x0 = np.tile(np.asarray([HARD_START]), (frozen_mask.shape[0], 1))
+    x0[frozen_mask] = 1.0
+    return jnp.asarray(x0, jnp.float32)
+
+
+def _assert_trajectory_equal(ref, other):
+    """Array-equal trajectories; n_evals excluded (plans with shorter
+    ladders legitimately consume fewer logical probes)."""
+    for fld in ("x", "fval", "grad_norm", "status"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, fld)), np.asarray(getattr(other, fld)),
+            err_msg=fld)
+    assert int(ref.iterations) == int(other.iterations)
+    assert int(ref.n_converged) == int(other.n_converged)
+
+
+def _assert_replay_equal(auto, rep):
+    """Replay forces the same plans, so EVERYTHING must match — the
+    physical counters and per-lane probe accounting included."""
+    _assert_trajectory_equal(auto, rep)
+    for fld in ("n_evals", "eval_rows", "map_trips"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(auto, fld)), np.asarray(getattr(rep, fld)),
+            err_msg=fld)
+    np.testing.assert_array_equal(np.asarray(auto.schedule_trace),
+                                  np.asarray(rep.schedule_trace))
+
+
+class TestRungSignal:
+    """Satellite: armijo_backtracking_batch surfaces the accepted rung per
+    lane — the controller's fallback-depth signal — pinned against a
+    hand-computed deep-backtracking case."""
+
+    def _sphere_case(self, K=8):
+        """p = -t·g on sphere accepts iff t·α <= 0.7 (with c1=0.3), so the
+        accepted rung is max(0, ceil(log2(t / 0.7))) exactly — far from any
+        knife edge for these t. t=200 exhausts all 8 rungs
+        (200 · 2^-7 > 0.7) and must report rung K."""
+        t = jnp.asarray([0.5, 1.0, 4.0, 4.0, 200.0])
+        X = jnp.tile(jnp.asarray([[1.0, 0.0, 0.0]]), (5, 1))
+        G0 = jax.vmap(jax.grad(sphere))(X)
+        P = -t[:, None] * G0
+        F0 = jax.vmap(sphere)(X)
+        expected = np.asarray([0, 1, 3, 3, K])
+        return X, P, F0, G0, expected
+
+    @pytest.mark.parametrize("L", [0, 2])
+    def test_rung_hand_computed(self, L):
+        X, P, F0, G0, expected = self._sphere_case()
+        res = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                        c1=0.3, max_iters=8, ladder_len=L)
+        np.testing.assert_array_equal(np.asarray(res.rung), expected)
+
+    def test_histogram_hand_computed(self):
+        """The histogram the engine accumulates is bincount(rung) over
+        active lanes: one lane at rung 0, one at 1, two at 3, one
+        exhausted."""
+        X, P, F0, G0, expected = self._sphere_case()
+        res = armijo_backtracking_batch(jax.vmap(sphere), X, P, F0, G0,
+                                        c1=0.3, max_iters=8)
+        hist = np.bincount(np.asarray(res.rung), minlength=9)
+        np.testing.assert_array_equal(hist,
+                                      np.bincount(expected, minlength=9))
+
+    def test_rung_consistent_with_sequential_depth(self):
+        """The sequential search probes rung+1 trials for an accepted lane
+        (and K for an exhausted one) — the rung is the same signal the
+        per-lane n_evals always summed away."""
+        X, P, F0, G0, expected = self._sphere_case()
+        seq = jax.vmap(
+            lambda x, p, f0, g0: armijo_backtracking(
+                sphere, x, p, f0, g0, c1=0.3, max_iters=8)
+        )(X, P, F0, G0)
+        rung = np.asarray(armijo_backtracking_batch(
+            jax.vmap(sphere), X, P, F0, G0, c1=0.3, max_iters=8).rung)
+        accepted = expected < 8
+        np.testing.assert_array_equal(np.asarray(seq.n_evals)[accepted],
+                                      rung[accepted] + 1)
+        np.testing.assert_array_equal(np.asarray(seq.n_evals)[~accepted], 8)
+
+    @pytest.mark.parametrize("name,dim", [("rosenbrock", 2),
+                                          ("rastrigin", 3)])
+    def test_rung_matches_adaptive_ladder(self, name, dim):
+        """The rung is part of the full-vs-adaptive exactness contract."""
+        obj, X = _starts(name, 16, dim, seed=dim)
+        value_batch = jax.vmap(obj.fn)
+        F0 = value_batch(X)
+        G0 = jax.vmap(jax.grad(obj.fn))(X)
+        P = -G0
+        P = P.at[::5].set(G0[::5] * 0.1)  # some deep/exhausted lanes
+        full = jax.jit(lambda *a: armijo_backtracking_batch(
+            value_batch, *a, c1=0.3, max_iters=12))(X, P, F0, G0)
+        adap = jax.jit(lambda *a: armijo_backtracking_batch(
+            value_batch, *a, c1=0.3, max_iters=12, ladder_len=3))(
+            X, P, F0, G0)
+        np.testing.assert_array_equal(np.asarray(full.rung),
+                                      np.asarray(adap.rung))
+
+
+class TestAutoParity:
+    """schedule="auto" == the plain static schedule == its replay."""
+
+    def _base(self, **kw):
+        return dict(iter_bfgs=kw.pop("iter_bfgs", 60),
+                    theta=kw.pop("theta", 1e-4),
+                    ls_iters=kw.pop("ls_iters", 10),
+                    sweep_mode="batched", **kw)
+
+    def _triple(self, f, x0, chunk=None, every=2, **kw):
+        base = self._base(lane_chunk=chunk, **kw)
+        ref = batched_bfgs(f, x0, BFGSOptions(**base))
+        auto = batched_bfgs(f, x0, BFGSOptions(
+            schedule="auto", schedule_every=every, auto_ladders=LADDERS,
+            **base))
+        plans = schedule_trace_plans(auto.schedule_trace)
+        rep = batched_bfgs(f, x0, BFGSOptions(
+            schedule="replay", schedule_plans=plans, schedule_every=every,
+            auto_ladders=LADDERS, **base))
+        return ref, auto, rep
+
+    @pytest.mark.parametrize("name,dim", [
+        ("sphere", 4), ("rosenbrock", 2), ("rastrigin", 3), ("ackley", 3)])
+    def test_exact_parity_and_replay(self, name, dim):
+        obj, x0 = _starts(name, 32, dim, seed=dim)
+        ref, auto, rep = self._triple(obj.fn, x0)
+        _assert_trajectory_equal(ref, auto)
+        _assert_replay_equal(auto, rep)
+
+    @pytest.mark.parametrize("chunk", [8])
+    def test_exact_parity_chunked(self, chunk):
+        """Chunked lanes: the dynamic plan is global repack + per-chunk
+        compaction, still array-equal to the static schedule."""
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        ref, auto, rep = self._triple(obj.fn, x0, chunk=chunk, iter_bfgs=80)
+        _assert_trajectory_equal(ref, auto)
+        _assert_replay_equal(auto, rep)
+
+    @pytest.mark.parametrize("every", [3])
+    def test_window_cadence_parity(self, every):
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        ref, auto, rep = self._triple(obj.fn, x0, every=every, iter_bfgs=50)
+        _assert_trajectory_equal(ref, auto)
+        _assert_replay_equal(auto, rep)
+
+    def test_required_c_stop_sweep_exact(self):
+        x0 = jnp.concatenate([
+            jnp.full((2, 2), 1.0) + 1e-4,
+            jnp.tile(jnp.asarray([HARD_START]), (14, 1)),
+        ])
+        ref, auto, rep = self._triple(rosenbrock, x0, iter_bfgs=60,
+                                      required_c=2)
+        _assert_trajectory_equal(ref, auto)
+        _assert_replay_equal(auto, rep)
+
+    def test_disable_pallas_ref_leg(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+        obj, x0 = _starts("rastrigin", 24, 3, seed=5)
+        ref, auto, rep = self._triple(obj.fn, x0, iter_bfgs=40)
+        _assert_trajectory_equal(ref, auto)
+        _assert_replay_equal(auto, rep)
+
+    def test_lbfgs_vmapped_adapter(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=11)
+        base = dict(iter_max=80, theta=1e-4, ls_iters=10,
+                    sweep_mode="batched")
+        ref = batched_lbfgs(obj.fn, x0, LBFGSOptions(**base))
+        auto = batched_lbfgs(obj.fn, x0, LBFGSOptions(
+            schedule="auto", schedule_every=2, auto_ladders=LADDERS, **base))
+        _assert_trajectory_equal(ref, auto)
+        rep = batched_lbfgs(obj.fn, x0, LBFGSOptions(
+            schedule="replay",
+            schedule_plans=schedule_trace_plans(auto.schedule_trace),
+            schedule_every=2, auto_ladders=LADDERS, **base))
+        _assert_replay_equal(auto, rep)
+
+    def test_zeus_threading(self):
+        """ZeusOptions(schedule="auto") reaches the engine and preserves
+        the solve; the trace surfaces in raw.schedule_trace."""
+        from repro.core import ZeusOptions, zeus
+
+        obj = get_objective("sphere")
+        kw = dict(use_pso=False, sweep_mode="batched",
+                  bfgs=BFGSOptions(iter_bfgs=40, theta=1e-4, ls_iters=10,
+                                   auto_ladders=LADDERS))
+        key = jax.random.key(0)
+        ref = zeus(obj.fn, key, 4, obj.lower, obj.upper, ZeusOptions(**kw))
+        auto = zeus(obj.fn, key, 4, obj.lower, obj.upper,
+                    ZeusOptions(schedule="auto", schedule_every=2, **kw))
+        assert ref.raw.schedule_trace is None
+        assert auto.raw.schedule_trace is not None
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(auto.best_x))
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(auto.raw.status))
+
+
+class TestControllerBehavior:
+    """What the controller *chooses* — trips/rows shrink, the trace is
+    well-formed, hysteresis holds."""
+
+    def test_dynamic_latches_on_frozen_tail(self):
+        """24/32 lanes frozen from init: the local active count (8) is
+        below B/2 at the very first window, so the dynamic plan latches
+        immediately and the trip count matches the static repack schedule —
+        2 chunks per sweep instead of 8 — with an identical trajectory."""
+        B, C, S, K = 32, 4, 6, 10
+        x0 = _frozen_mix([True] * 24 + [False] * 8)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=K, lane_chunk=C,
+                    sweep_mode="batched")
+        unc = batched_bfgs(rosenbrock, x0, BFGSOptions(**base))
+        auto = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            schedule="auto", schedule_every=1, auto_ladders=LADDERS, **base))
+        _assert_trajectory_equal(unc, auto)
+        assert int(unc.map_trips) == S * (B // C)
+        assert int(auto.map_trips) == S * 2  # bucket(ceil(8/4)) = 2
+        trace = np.asarray(auto.schedule_trace)
+        n_plans = trace.shape[1]
+        # every executed window chose a dynamic plan (second half of the
+        # lattice) and no window chose a static one
+        assert trace[:S, n_plans // 2:].sum() == S
+        assert trace[:, : n_plans // 2].sum() == 0
+
+    def test_fully_active_swarm_stays_static(self):
+        """No lane ever freezes and the histogram is reset every window:
+        with a one-window hysteresis horizon the first window must run the
+        startup full-ladder static plan."""
+        B, S = 16, 4
+        x0 = _frozen_mix([False] * B)
+        base = dict(iter_bfgs=S, theta=1e-30, ls_iters=10,
+                    sweep_mode="batched")
+        auto = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            schedule="auto", schedule_every=S, auto_ladders=LADDERS, **base))
+        trace = np.asarray(auto.schedule_trace)
+        lattice = auto_plan_lattice(EngineOptions(
+            ls_iters=10, auto_ladders=LADDERS))
+        full_static = lattice.index((0, 0))
+        assert trace[0, full_static] == 1 and trace[0].sum() == 1
+
+    def test_trace_one_plan_per_executed_window(self):
+        obj, x0 = _starts("sphere", 16, 3, seed=1)
+        S, E = 40, 2
+        auto = batched_bfgs(obj.fn, x0, BFGSOptions(
+            iter_bfgs=S, theta=1e-4, ls_iters=10, sweep_mode="batched",
+            schedule="auto", schedule_every=E, auto_ladders=LADDERS))
+        trace = np.asarray(auto.schedule_trace)
+        assert trace.shape == (S // E, 2 * len(LADDERS))
+        executed = -(-int(auto.iterations) // E)
+        np.testing.assert_array_equal(trace.sum(axis=1)[:executed], 1)
+        np.testing.assert_array_equal(trace.sum(axis=1)[executed:], 0)
+
+    def test_controller_cuts_rows_on_converging_swarm(self):
+        """The end-to-end win the bench gates: on a converging swarm the
+        controller's plans do strictly less physical work than the static
+        full-ladder schedule, at an identical trajectory."""
+        obj, x0 = _starts("rosenbrock", 32, 2, seed=9)
+        base = dict(iter_bfgs=80, theta=1e-4, ls_iters=10,
+                    sweep_mode="batched")
+        ref = batched_bfgs(obj.fn, x0, BFGSOptions(**base))
+        auto = batched_bfgs(obj.fn, x0, BFGSOptions(
+            schedule="auto", schedule_every=2, auto_ladders=LADDERS, **base))
+        _assert_trajectory_equal(ref, auto)
+        assert int(auto.eval_rows) < int(ref.eval_rows)
+
+    def test_rung_histogram_feeds_ladder_choice(self):
+        """Ladder hysteresis end-to-end: rosenbrock valley lanes never
+        converge at theta=1e-30 and settle into shallow accepted rungs, so
+        once two consecutive windows agree on the p90 target the
+        controller drops from the startup full ladder to the 2-rung
+        candidate — visible in the trace, and in strictly fewer physical
+        rows than the full-ladder equivalent (30 sweeps × 8 lanes × 11
+        rows)."""
+        x0 = _frozen_mix([False] * 8)
+        auto = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            iter_bfgs=30, theta=1e-30, ls_iters=10, sweep_mode="batched",
+            schedule="auto", schedule_every=1, auto_ladders=LADDERS))
+        trace = np.asarray(auto.schedule_trace)
+        lattice = auto_plan_lattice(EngineOptions(
+            ls_iters=10, auto_ladders=LADDERS))
+        short = [i for i, (_, L) in enumerate(lattice) if L == 2]
+        full_static = lattice.index((0, 0))
+        assert trace[0, full_static] == 1  # startup plan: full ladder
+        assert trace[:, short].sum() > 0, trace
+        assert int(auto.eval_rows) < 8 + 30 * 8 * 11
+
+    def test_lattice_canonical_order(self):
+        lat = auto_plan_lattice(EngineOptions(ls_iters=20))
+        # ladders ascend by effective length, full ladder last, dynamic
+        # half mirrors the static half
+        assert lat == ((0, 1), (0, 2), (0, 4), (0, 8), (0, 16), (0, 0),
+                       (1, 1), (1, 2), (1, 4), (1, 8), (1, 16), (1, 0))
+        assert _auto_ladders(EngineOptions(ls_iters=20,
+                                           auto_ladders=(4, 20))) == (4, 0)
+
+
+class TestValidation:
+    def _x0(self):
+        return _starts("sphere", 8, 2, seed=0)[1]
+
+    def test_auto_requires_batched(self):
+        with pytest.raises(ValueError, match="sweep_mode"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(schedule="auto"))
+
+    def test_auto_rejects_static_knobs(self):
+        for knob in ({"compact_every": 1}, {"ladder_len": 2},
+                     {"repack_every": 1, "lane_chunk": 4}):
+            with pytest.raises(ValueError, match="schedule"):
+                batched_bfgs(sphere, self._x0(), BFGSOptions(
+                    sweep_mode="batched", schedule="auto", **knob))
+
+    def test_unknown_schedule_rejected(self):
+        with pytest.raises(ValueError, match="schedule"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="manual"))
+
+    def test_replay_needs_plans(self):
+        with pytest.raises(ValueError, match="schedule_plans"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="replay"))
+
+    def test_replay_plan_length_checked(self):
+        with pytest.raises(ValueError, match="entries"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="replay", iter_bfgs=40,
+                schedule_every=4, schedule_plans=(0, 0)))
+
+    def test_replay_plan_index_checked(self):
+        with pytest.raises(ValueError, match="lattice"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="replay", iter_bfgs=8,
+                schedule_every=4, schedule_plans=(99, 0),
+                auto_ladders=LADDERS))
+
+    def test_bad_window_rejected(self):
+        with pytest.raises(ValueError, match="schedule_every"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="auto", schedule_every=0))
+
+    def test_bad_auto_ladders_rejected(self):
+        with pytest.raises(ValueError, match="auto_ladders"):
+            batched_bfgs(sphere, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="auto", ls_iters=10,
+                auto_ladders=(12,)))
+
+
+# ---------------------------------------------------------------------------
+# Property-based replay suite: random freeze patterns × window cadences —
+# the same exact-equality funnel as the deterministic tests.
+# ---------------------------------------------------------------------------
+_BASELINE_CACHE = {}
+
+
+def _baseline(x0_key):
+    if x0_key not in _BASELINE_CACHE:
+        _BASELINE_CACHE[x0_key] = batched_bfgs(
+            rosenbrock, _frozen_mix(x0_key),
+            BFGSOptions(iter_bfgs=4, theta=1e-30, ls_iters=6,
+                        lane_chunk=4, sweep_mode="batched"))
+    return _BASELINE_CACHE[x0_key]
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES",
+                                          "6")),
+          deadline=None)
+@given(
+    frozen=st.lists(st.booleans(), min_size=16, max_size=16),
+    every=st.integers(min_value=1, max_value=3),
+)
+def test_property_auto_static_parity(frozen, every):
+    """Any freeze pattern and controller cadence: auto trajectories are
+    array-equal to the static schedule. (The replay leg lives in the
+    deterministic suite above: each distinct recorded plan tuple is a
+    fresh jit specialization, which a per-example property would pay as a
+    recompile per draw.)"""
+    x0_key = tuple(frozen)
+    ref = _baseline(x0_key)
+    auto = batched_bfgs(
+        rosenbrock, _frozen_mix(frozen),
+        BFGSOptions(iter_bfgs=4, theta=1e-30, ls_iters=6, lane_chunk=4,
+                    sweep_mode="batched", auto_ladders=LADDERS,
+                    schedule="auto", schedule_every=every))
+    _assert_trajectory_equal(ref, auto)
+    assert int(auto.eval_rows) <= int(ref.eval_rows)
+    assert int(auto.map_trips) <= int(ref.map_trips)

@@ -17,6 +17,8 @@ prove the tail trips drop from B/C to bucket(ceil(active/C)) per sweep
 (< 0.5x at 75% frozen — the ROADMAP criterion), while `eval_rows` follows
 the repacked chunk set.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -384,7 +386,9 @@ def _baseline(x0_key, chunk, ls_iters, sweeps):
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
-@settings(max_examples=12, deadline=None)
+@settings(max_examples=int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES",
+                                          "12")),
+          deadline=None)
 @given(
     frozen=st.lists(st.booleans(), min_size=16, max_size=16),
     chunk=st.sampled_from([4, 8]),

@@ -135,6 +135,50 @@ def test_distributed_repack_and_ladder():
     assert "OK" in out
 
 
+def test_distributed_auto_schedule():
+    """ISSUE 5: schedule="auto" composes with distributed_zeus — each shard
+    runs its own controller on its own (collective-free) signals, the
+    trajectory stays array-equal to the static schedule, and the
+    ScheduleTrace is psum'd: row w of the replicated trace counts how many
+    shards ran plan p in window w, so every executed window sums to the
+    shard count."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import BFGSOptions, PSOOptions, ZeusOptions
+        from repro.core.distributed import distributed_zeus
+        from repro.core.objectives import rosenbrock
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((4,), ("data",))
+        base = dict(use_pso=False,
+                    pso=PSOOptions(n_particles=64, iter_pso=0),
+                    bfgs=BFGSOptions(iter_bfgs=60, theta=1e-4, ls_iters=10,
+                                     required_c=64, auto_ladders=(2, 0)),
+                    sweep_mode="batched", lane_chunk=4)
+        key = jax.random.key(3)
+        ref = jax.jit(distributed_zeus(
+            rosenbrock, 2, -5.0, 10.0, ZeusOptions(**base), mesh))(key)
+        aut = jax.jit(distributed_zeus(
+            rosenbrock, 2, -5.0, 10.0,
+            ZeusOptions(schedule="auto", schedule_every=2, **base),
+            mesh))(key)
+        assert ref.raw.schedule_trace is None
+        np.testing.assert_array_equal(np.asarray(ref.raw.status),
+                                      np.asarray(aut.raw.status))
+        np.testing.assert_array_equal(np.asarray(ref.best_x),
+                                      np.asarray(aut.best_x))
+        assert int(ref.raw.iterations) == int(aut.raw.iterations)
+        tr = np.asarray(aut.raw.schedule_trace)
+        # sweeps are globally synchronized, so every shard logged one plan
+        # per executed window: psum'd rows sum to the shard count
+        executed = -(-int(aut.raw.iterations) // 2)
+        sums = tr.sum(axis=1)
+        assert (sums[:executed] == 4).all(), tr
+        assert (sums[executed:] == 0).all(), tr
+        print("OK", int(aut.raw.iterations), tr.sum())
+    """, devices=4)
+    assert "OK" in out
+
+
 def test_distributed_equals_single_device_semantics():
     """required_c semantics hold globally: stop counts converged lanes
     across all devices, not per device."""
