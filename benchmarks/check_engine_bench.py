@@ -28,7 +28,15 @@ when a perf floor regresses:
     per-metric BEST hand-tuned static schedule on the converging-swarm
     cell) must stay <= BENCH_AUTO_SLACK (default 1.1 — the ISSUE-5
     criterion: the controller, burn-in windows included, can never
-    silently regress below what a user could configure by hand).
+    silently regress below what a user could configure by hand);
+  * `megakernel_wall_ratio` (sweep_mode="megakernel" / staged batched wall
+    on the megakernel-supported cell) must stay <= BENCH_MEGAKERNEL_CEIL
+    (default 1.1 — the ISSUE-6 criterion as a parity ceiling: on the CPU
+    ref leg the megakernel step delegates to the staged program, so ~1.0
+    is expected; the structural win lives in `launches_per_sweep`, which
+    must stay <= 2 for both megakernel shapes while staged records 3);
+    `exact_match` (staged vs megakernel results array-identical) must be
+    true.
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
@@ -56,24 +64,30 @@ MODE_KEYS = {
 }
 TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep", "map_trips"}
 AUTO_MODE_KEYS = {"wall_s", "eval_rows", "map_trips"}
+MEGA_MODE_KEYS = {"wall_s", "eval_rows", "map_trips", "launches_per_sweep"}
+MEGA_LAUNCH_CEIL = 2.0  # structural: full ladder = 1, short ladder = 2
 
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
-          trip_ceil: float, ladder_ceil: float, auto_slack: float) -> list:
+          trip_ceil: float, ladder_ceil: float, auto_slack: float,
+          mega_ceil: float) -> list:
     errors = []
 
     def need(cond, msg):
         if not cond:
             errors.append(msg)
 
-    for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto"):
+    for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto",
+                "mega"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
     autos = payload.get("auto") or {}
+    megas = payload.get("mega") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
     need(len(autos) > 0, "no auto_vs_best_static cells measured")
+    need(len(megas) > 0, "no megakernel cells measured")
 
     for name, cell in cells.items():
         for mode in ("per_lane", "batched", "compacted", "ladder"):
@@ -143,6 +157,34 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
                 f"{auto_slack} — the controller regressed below the best "
                 f"hand-tuned static schedule",
             )
+
+    for name, mega in megas.items():
+        for mode in ("staged", "megakernel", "megakernel_ladder"):
+            block = mega.get(mode)
+            need(isinstance(block, dict), f"mega.{name}: missing {mode!r}")
+            if not isinstance(block, dict):
+                continue
+            missing = MEGA_MODE_KEYS - set(block)
+            need(not missing,
+                 f"mega.{name}.{mode}: missing keys {sorted(missing)}")
+            need(block.get("wall_s", 0) > 0, f"mega.{name}.{mode}: wall_s <= 0")
+            if mode != "staged":
+                launches = block.get("launches_per_sweep", 1e9)
+                need(
+                    launches <= MEGA_LAUNCH_CEIL,
+                    f"mega.{name}.{mode}: launches_per_sweep {launches!r} "
+                    f"above the structural ceiling {MEGA_LAUNCH_CEIL} — the "
+                    f"fused sweep regressed to staged launches",
+                )
+        ratio = mega.get("megakernel_wall_ratio")
+        need(
+            isinstance(ratio, (int, float)) and 0 < ratio <= mega_ceil,
+            f"mega.{name}: megakernel_wall_ratio {ratio!r} above ceiling "
+            f"{mega_ceil}",
+        )
+        need(mega.get("exact_match") is True,
+             f"mega.{name}: exact_match is not True — megakernel results "
+             f"diverged from the staged batched path")
     return errors
 
 
@@ -168,6 +210,9 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--auto-slack", type=float,
         default=float(os.environ.get("BENCH_AUTO_SLACK", "1.1")))
+    ap.add_argument(
+        "--megakernel-ceil", type=float,
+        default=float(os.environ.get("BENCH_MEGAKERNEL_CEIL", "1.1")))
     args = ap.parse_args(argv)
 
     def gate(path, label):
@@ -175,7 +220,7 @@ def main(argv=None) -> int:
             payload = json.load(f)
         errs = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
                      args.tail_trip_ceil, args.ladder_rows_ceil,
-                     args.auto_slack)
+                     args.auto_slack, args.megakernel_ceil)
         return payload, [f"{label}: {e}" for e in errs] if label else errs
 
     payload, errors = gate(args.path, "")
@@ -193,6 +238,9 @@ def main(argv=None) -> int:
     trips = [t["tail_trip_ratio"] for t in payload["tail"].values()]
     auto_t = [a["auto_trip_ratio"] for a in payload["auto"].values()]
     auto_r = [a["auto_rows_ratio"] for a in payload["auto"].values()]
+    mega_w = [m["megakernel_wall_ratio"] for m in payload["mega"].values()]
+    mega_l = [m["megakernel"]["launches_per_sweep"]
+              for m in payload["mega"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
@@ -203,7 +251,10 @@ def main(argv=None) -> int:
         f"ladder_rows_ratio max {max(ladders):.3f} "
         f"(ceiling {args.ladder_rows_ceil}); "
         f"auto_trip_ratio max {max(auto_t):.3f} / auto_rows_ratio max "
-        f"{max(auto_r):.3f} (slack {args.auto_slack})"
+        f"{max(auto_r):.3f} (slack {args.auto_slack}); "
+        f"megakernel_wall_ratio max {max(mega_w):.3f} "
+        f"(ceiling {args.megakernel_ceil}); megakernel launches/sweep "
+        f"{max(mega_l):.0f} (ceiling {MEGA_LAUNCH_CEIL:.0f})"
         + (f"; baseline {args.baseline} OK" if args.baseline else "")
     )
     return 0

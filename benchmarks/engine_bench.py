@@ -48,6 +48,21 @@ static cell on both tail metrics — `auto_trip_ratio` (map_trips) and
 `auto_rows_ratio` (eval_rows) — i.e. auto can never silently regress below
 what a user could configure by hand, burn-in windows included.
 
+The `mega` section is the ISSUE-6 sweep-megakernel criterion: the same
+no-early-convergence construction on a megakernel-supported objective
+(rastrigin — the main grid's rosenbrock falls back at D=16/64 because lane
+padding is inexact for its coupled terms) run with sweep_mode="batched"
+(staged) and sweep_mode="megakernel" (full ladder and ladder_len=LADDER_LEN
+short-ladder shapes). `megakernel_wall_ratio` = megakernel / staged wall
+and `launches_per_sweep` = Pallas kernel launches per sweep on the real
+backend — a *structural* count from the sweep-path construction (staged: 3
+= ladder value kernel + fused value+grad + guarded H-update; megakernel
+full ladder: 1; short ladder: 2 = staged speculative launch + fused
+commit). On this host the ref leg times the delegated staged program (see
+below), so the wall gate is a parity ceiling (~1.0x expected) and the
+launch count is the metric that carries the win; `exact_match` records
+that both modes returned array-identical results.
+
 ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
 equivalents per lane either way), so the ratio isolates the speculative
 ladder restructuring rather than forward-AD vs fused-kernel differences.
@@ -248,6 +263,52 @@ def _auto_cell(obj, B, D):
     return cell
 
 
+# structural Pallas-launch counts per sweep (see module docstring): the
+# staged batched sweep issues the ladder value kernel, the fused
+# value+grad kernel, and the guarded H-update kernel; the megakernel
+# fuses all three (full ladder) or the latter two (short ladder, the
+# staged speculative launch kept verbatim for its cond-guarded fallback)
+STAGED_LAUNCHES = 3.0
+MEGA_FULL_LAUNCHES = 1.0
+MEGA_LADDER_LAUNCHES = 2.0
+
+
+def _mega_cell(B, D):
+    """Sweep-megakernel criterion cell (ISSUE 6): staged vs fused sweeps on
+    rastrigin (megakernel-supported at any D — its padding is exact). Same
+    theta=1e-30 construction, so both modes run all SWEEPS sweeps and the
+    comparison isolates the sweep-path restructuring."""
+    obj = get_objective("rastrigin")
+    x0 = jax.random.uniform(jax.random.key(B ^ D), (B, D),
+                            minval=obj.lower, maxval=obj.upper)
+
+    cell, runs = {}, {}
+    for label, mode, okw, launches in (
+        ("staged", "batched", {}, STAGED_LAUNCHES),
+        ("megakernel", "megakernel", {}, MEGA_FULL_LAUNCHES),
+        ("megakernel_ladder", "megakernel", {"ladder_len": LADDER_LEN},
+         MEGA_LADDER_LAUNCHES),
+    ):
+        opts = _opts(mode, **okw)
+        run = jax.jit(lambda x, o=opts: batched_bfgs(obj.fn, x, o))
+        us = timeit(run, x0)
+        runs[label] = res = run(x0)
+        cell[label] = {
+            "wall_s": us / 1e6,
+            "eval_rows": int(res.eval_rows),
+            "map_trips": int(res.map_trips),
+            "launches_per_sweep": launches,
+        }
+    cell["exact_match"] = all(
+        bool(np.array_equal(np.asarray(getattr(runs["staged"], fld)),
+                            np.asarray(getattr(runs["megakernel"], fld))))
+        for fld in ("x", "fval", "grad_norm", "status", "n_evals"))
+    cell["megakernel_wall_ratio"] = (
+        cell["megakernel"]["wall_s"] / cell["staged"]["wall_s"])
+    cell["objective"] = obj.name
+    return cell
+
+
 def engine_sweep(out_path: str = "BENCH_engine.json"):
     """Batched vs per_lane vs compacted sweep execution over (B, D) cells."""
     with kernel_ops.reference_kernels_off_tpu():  # see module docstring
@@ -308,6 +369,18 @@ def _engine_sweep(out_path: str):
         f"auto_trip_ratio={auto['auto_trip_ratio']:.3f};"
         f"auto_rows_ratio={auto['auto_rows_ratio']:.3f}",
     )
+    # megakernel criterion: one cell (like auto — the launch count is
+    # structural, so one size suffices; wall ratio is a parity ceiling on
+    # the ref leg)
+    mega = _mega_cell(B, D)
+    emit(
+        f"engine_mega_b{B}_d{D}",
+        mega["megakernel"]["wall_s"] * 1e6,
+        f"megakernel_wall_ratio={mega['megakernel_wall_ratio']:.3f};"
+        f"launches_per_sweep={mega['megakernel']['launches_per_sweep']:.0f}"
+        f"(staged={mega['staged']['launches_per_sweep']:.0f});"
+        f"exact_match={mega['exact_match']}",
+    )
     payload = {
         "objective": obj.name,
         "sweeps": SWEEPS,
@@ -325,10 +398,17 @@ def _engine_sweep(out_path: str):
                  "the converging-swarm cell vs every hand-tuned static "
                  "schedule at the same lane_chunk; auto_trip_ratio / "
                  "auto_rows_ratio = auto over the per-metric best static "
-                 "(gate: <= BENCH_AUTO_SLACK, default 1.1)"),
+                 "(gate: <= BENCH_AUTO_SLACK, default 1.1). mega: "
+                 "sweep_mode='megakernel' vs staged batched on rastrigin; "
+                 "launches_per_sweep is the structural Pallas launch count "
+                 "(gate: <= 2); megakernel_wall_ratio gated <= "
+                 "BENCH_MEGAKERNEL_CEIL (default 1.1 — the ref leg times "
+                 "the delegated staged program, so ~1.0 is expected and "
+                 "the launch count carries the win)"),
         "cells": results,
         "tail": tails,
         "auto": {f"b{B}_d{D}": auto},
+        "mega": {f"b{B}_d{D}": mega},
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -14,6 +14,21 @@ compiled HLO:
   fused     — fast + the next search direction in the same pass, so H
               streams HBM once per sweep instead of twice (kernel:
               kernels/bfgs_update.py::update_direction_pallas)
+  batched   — the engine's staged batched sweep (speculative ladder +
+              fused vg + guarded H'+p'), lowered whole
+  megakernel— the ISSUE-6 fused sweep (kernels/sweep_megakernel.py): the
+              FLOPs are the batched row's bit-for-bit (exactness is the
+              contract), but the inter-launch materializations (trial
+              block, ladder values, commit iterate/grad) never touch HBM,
+              so its memory term is the analytic resident-VMEM model
+              (launch/roofline.megakernel_sweep_hbm_bytes) — the compiled
+              CPU artifact can't show this because the ref leg delegates
+              to the staged program.
+
+The last column, roofline_frac, is the achieved-fraction-of-roofline
+(launch/roofline.roofline_fraction): the share of peak FLOP/s attainable
+at each impl's arithmetic intensity. The megakernel row shows how far
+keeping x/g/p/H VMEM-resident closes the sweep on the roofline.
 
     PYTHONPATH=src python -m benchmarks.zeus_roofline
 """
@@ -34,10 +49,18 @@ from repro.core.objectives import rastrigin
 from repro.kernels import ref as kref
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    megakernel_sweep_hbm_bytes,
+    roofline_fraction,
+    staged_sweep_seam_bytes,
+)
 
 D = 256
 LANES_PER_DEV = 1024
+LS_ITERS = 20  # the engine default — the megakernel fuses this K-rung ladder
 
 
 def fused_sweep(f, vg, opts, state):
@@ -154,10 +177,26 @@ def main():
     os.environ["REPRO_DISABLE_PALLAS"] = "1"  # CPU: analyze the jnp schedule
     mesh = make_production_mesh()
     out = {}
-    print("impl,compute_s,memory_s,collective_s,bottleneck,hbm_GB_per_dev")
-    for impl in ("reference", "fast", "fused", "batched"):
-        compiled = lower_sweep(mesh, impl)
-        r = analyze_hlo(compiled.as_text(), 256)
+    print("impl,compute_s,memory_s,collective_s,bottleneck,hbm_GB_per_dev,"
+          "roofline_frac")
+    for impl in ("reference", "fast", "fused", "batched", "megakernel"):
+        if impl == "megakernel":
+            # same FLOPs as the batched row (exactness contract); memory =
+            # the analytic resident-VMEM model — see the module docstring
+            batched = out["batched"]
+            flops = batched["flops"]
+            mega_bytes = megakernel_sweep_hbm_bytes(LANES_PER_DEV, D,
+                                                    LS_ITERS)
+            seam = staged_sweep_seam_bytes(LANES_PER_DEV, D, LS_ITERS)
+            # never claim more than the staged artifact minus its seams:
+            # the HLO's major_bytes includes evaluator internals the
+            # analytic per-lane model doesn't see
+            major = max(mega_bytes, batched["hbm_bytes"] - seam)
+            r = {"flops": flops, "major_bytes": major,
+                 "collectives": {}}
+        else:
+            compiled = lower_sweep(mesh, impl)
+            r = analyze_hlo(compiled.as_text(), 256)
         compute_s = r["flops"] / PEAK_FLOPS
         memory_s = r["major_bytes"] / HBM_BW
         wire = sum(d["wire_bytes"] for d in r["collectives"].values())
@@ -165,11 +204,12 @@ def main():
         bott = max(
             (("compute", compute_s), ("memory", memory_s),
              ("collective", coll_s)), key=lambda kv: kv[1])[0]
+        frac = roofline_fraction(r["flops"], r["major_bytes"])
         print(f"{impl},{compute_s:.6f},{memory_s:.6f},{coll_s:.8f},{bott},"
-              f"{r['major_bytes']/1e9:.2f}")
+              f"{r['major_bytes']/1e9:.2f},{frac:.3f}")
         out[impl] = {"compute_s": compute_s, "memory_s": memory_s,
                      "collective_s": coll_s, "hbm_bytes": r["major_bytes"],
-                     "flops": r["flops"]}
+                     "flops": r["flops"], "roofline_frac": frac}
     with open("zeus_roofline.json", "w") as f:
         json.dump(out, f, indent=1)
 

@@ -44,7 +44,9 @@ class BFGSOptions:
     # under REPRO_DISABLE_PALLAS=1) — see DenseBFGS.as_batched.
     hessian_impl: str = "fast"  # "reference" | "fast" | "pallas"
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
-    sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
+    # "per_lane" | "batched" | "megakernel" (engine sweeps; megakernel =
+    # batched fused into 1–2 Pallas launches, staged fallback when unsupported)
+    sweep_mode: str = "per_lane"
     # active-lane compaction cadence for batched sweeps (0 = off; engine)
     compact_every: int = 0
     # global cross-chunk lane repacking cadence (0 = off; batched +
@@ -144,6 +146,13 @@ class BatchedDenseBFGS:
     mask and becomes ρ = 0 (with zeroed pairs): every update term vanishes,
     so a guarded/frozen lane's H' = H exactly with no second read to undo.
     """
+
+    # The direction state is literally the dense (B, D, D) H stack and the
+    # update is the guarded ρ-form kernel body — exactly what the sweep
+    # megakernel inlines — so sweep_mode="megakernel" may absorb this
+    # strategy's update into the fused sweep launch
+    # (engine.megakernel_unsupported_reason checks this flag).
+    megakernel_dense_h = True
 
     def init_state_batch(self, X0):
         B, D = X0.shape

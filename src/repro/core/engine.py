@@ -38,6 +38,12 @@ exactly the α sequence the sequential search does, so the accepted α is
 identical whenever the evaluators round identically (exact for the vmap
 fallback; fused-kernel objectives can flip a knife-edge accept by a ULP);
 iterates agree to fp32 tolerance (tests/test_batched_sweep.py).
+"megakernel" keeps the batched semantics but collapses the staged launches
+into the fused VMEM-resident sweep kernel — 1 launch per sweep for the full
+ladder, 2 for the adaptive ladder — with ARRAY-EQUAL results to "batched"
+(kernels/sweep_megakernel.py, tests/test_megakernel.py); capability-gated
+to analytic fused objectives + dense-H strategies, staged fallback with a
+warning otherwise.
 
 Chunked lane execution
 ----------------------
@@ -155,6 +161,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
@@ -174,6 +181,11 @@ CONVERGED = 1
 STOPPED = 2  # stop-flag: other lanes filled required_c first
 
 _CURV_EPS = 1e-10
+
+# sweep modes that run whole-batch sweeps (vs the vmapped per-lane step);
+# "megakernel" is the batched semantics with the staged launches fused into
+# the sweep megakernel, so every batched-only knob/schedule accepts both
+_BATCHED_MODES = ("batched", "megakernel")
 
 
 class BFGSResult(NamedTuple):
@@ -227,6 +239,12 @@ class EngineOptions:
     #             + fused batch kernels; armijo only. Same accepted α ladder
     #             and statuses as per_lane on fixed seeds (fp32-tolerance
     #             iterates); enforced by tests/test_batched_sweep.py.
+    # "megakernel": batched semantics with the staged launches fused into
+    #             ONE VMEM-resident Pallas sweep kernel (1–2 launches/sweep;
+    #             kernels/sweep_megakernel.py). Array-equal to "batched"
+    #             (tests/test_megakernel.py); requires an analytic fused
+    #             objective + dense-H strategy within the VMEM cap, else
+    #             falls back to the staged path with a RuntimeWarning.
     sweep_mode: str = "per_lane"
     # Active-lane compaction cadence (batched mode only). 0 disables; n > 0
     # refreshes the active-prefix partition and its power-of-two size bucket
@@ -564,6 +582,143 @@ def batch_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
 
 
 # ---------------------------------------------------------------------------
+# Megakernel sweep path (sweep_mode="megakernel").
+#
+# Same sweep semantics as batch_lanes_step behind the same
+# (lanes', rows, rung_hist) contract — every downstream schedule
+# (lane_chunk, compaction, repacking, the auto controller) composes
+# unchanged — but the four staged launches collapse into the fused Pallas
+# sweep kernels (kernels/sweep_megakernel.py): ONE launch per sweep for the
+# full speculative ladder, TWO (staged ladder + fused commit) for the
+# adaptive ladder, whose sequential fallback deliberately stays un-fused
+# (see the kernel module docstring). Exactness contract: trajectories,
+# accepted α, statuses and counters are ARRAY-EQUAL to the staged batched
+# path (tests/test_megakernel.py enforces it, no tolerance) — the kernel
+# reproduces the staged program's reduction shapes and materialization
+# seams rather than approximating them. Reached only for analytic
+# fused-kernel objectives + dense-H strategies within the VMEM cap;
+# run_multistart routes everything else back to batch_lanes_step with a
+# warning (megakernel_unsupported_reason).
+# ---------------------------------------------------------------------------
+def megakernel_unsupported_reason(bobj, bstrategy, dim: int,
+                                  opts: EngineOptions) -> Optional[str]:
+    """Why sweep_mode='megakernel' cannot serve this solve, or None if it
+    can. A non-None reason means run_multistart falls back to the staged
+    batched path — bit-identical results, just staged launches."""
+    from repro.core.objectives import analytic_fused_name
+    from repro.kernels import ops as kernel_ops
+
+    name = analytic_fused_name(bobj)
+    if name is None:
+        return (
+            f"objective {getattr(bobj, 'name', None)!r} has no analytic "
+            "fused kernel body to inline (custom-registered evaluators are "
+            "opaque callables)")
+    if not getattr(bstrategy, "megakernel_dense_h", False):
+        return (
+            f"direction strategy {type(bstrategy).__name__} does not "
+            "advertise a dense-H megakernel form (megakernel_dense_h)")
+    if opts.ls_iters < 1:
+        return "ls_iters < 1 leaves no ladder to fuse"
+    Dp = kernel_ops._padded_dim(dim)
+    if name == "rosenbrock" and Dp != dim:
+        return (
+            f"rosenbrock at D={dim} needs lane padding to {Dp}, which is "
+            "not exact for its coupled terms")
+    if Dp > kernel_ops.MEGAKERNEL_MAX_DIM:
+        return (
+            f"padded dim {Dp} exceeds the {kernel_ops.MEGAKERNEL_MAX_DIM} "
+            "VMEM cap for the resident (Dp, Dp) H tile")
+    return None
+
+
+def megakernel_lanes_step(bobj, bstrategy: BatchedDirectionStrategy,
+                          opts: EngineOptions, lanes: BatchLanes
+                          ) -> Tuple[BatchLanes, jnp.ndarray, jnp.ndarray]:
+    """One fused sweep over the stack — batch_lanes_step's contract, 1–2
+    launches. Only called when megakernel_unsupported_reason returned None;
+    under REPRO_DISABLE_PALLAS=1 it delegates wholesale to the staged step,
+    which IS the megakernel's reference semantics."""
+    from repro.core.linesearch import armijo_thresholds, ladder_alphas
+    from repro.kernels import ops as kernel_ops
+
+    if not kernel_ops.pallas_enabled():
+        return batch_lanes_step(bobj, bstrategy, opts, lanes)
+
+    from repro.core.objectives import analytic_fused_name
+
+    name = analytic_fused_name(bobj)
+    X, F, G = lanes.x, lanes.f, lanes.g
+    H = lanes.direction_state
+    active = jnp.logical_not(jnp.logical_or(lanes.converged, lanes.failed))
+
+    # descent safeguard, rowwise — same rule, outside the kernel so the
+    # ladder sees exactly the staged path's P
+    descent = jnp.sum(lanes.p * G, axis=-1) < 0
+    P = jnp.where(descent[:, None], lanes.p, -G)
+
+    K = opts.ls_iters
+    L = K if opts.ladder_len <= 0 else min(opts.ladder_len, K)
+    if L == K:
+        # full speculative ladder: ONE fused launch. The ladder constants
+        # and the barriered Armijo thresholds are built by the same
+        # linesearch helpers the staged program uses, so the kernel
+        # compares the bit-identical rhs tensor.
+        ddir = jnp.sum(G * P, axis=-1)
+        alphas_np = ladder_alphas(K, X.dtype)
+        rhs = armijo_thresholds(F, ddir, jnp.asarray(alphas_np), opts.ls_c1)
+        X_new, F_new, G_new, state, P_next, _alpha, rung = (
+            kernel_ops.sweep_megakernel_full(
+                name, X, P, G, H, active, rhs, alphas_np))
+        ls_n_evals = jnp.asarray(K, jnp.int32)
+    else:
+        # adaptive ladder: the staged speculative launch + cond-guarded
+        # fallback probes run VERBATIM (their early exit is the point —
+        # see kernels/sweep_megakernel.py on why they stay un-fused), then
+        # everything after the accept fuses into one commit launch.
+        ls = armijo_backtracking_batch(
+            bobj.value_batch, X, P, F, G, c1=opts.ls_c1,
+            max_iters=K, ladder_len=opts.ladder_len,
+        )
+        X_new, F_new, G_new, state, P_next = (
+            kernel_ops.sweep_megakernel_commit(
+                name, X, P, G, H, active, ls.alpha))
+        ls_n_evals, rung = ls.n_evals, ls.rung
+
+    # epilogue: textually in lockstep with batch_lanes_step (the reference
+    # program) — convergence/failure flags, keep-masking, row accounting
+    gn = jnp.linalg.norm(G_new, axis=-1)
+    now_converged = gn < opts.theta
+    now_failed = jnp.logical_not(
+        jnp.logical_and(
+            jnp.isfinite(F_new), jnp.all(jnp.isfinite(G_new), axis=-1)
+        )
+    )
+
+    def keep(new, old):
+        mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
+
+    stepped = BatchLanes(
+        x=keep(X_new, X),
+        f=keep(F_new, F),
+        g=keep(G_new, G),
+        p=keep(P_next, lanes.p),
+        converged=jnp.where(active, now_converged, lanes.converged),
+        failed=jnp.where(active, now_failed, lanes.failed),
+        n_evals=lanes.n_evals
+        + jnp.where(
+            active, ls_n_evals + bobj.vg_cost(X.shape[-1]), 0
+        ).astype(jnp.int32),
+        direction_state=state,
+    )
+    rows = (ls_n_evals.astype(jnp.int32) + 1) * X.shape[0]
+    hist = jnp.zeros((opts.ls_iters + 1,), jnp.int32).at[rung].add(
+        active.astype(jnp.int32))
+    return stepped, rows, hist
+
+
+# ---------------------------------------------------------------------------
 # Active-lane compaction (sweep_mode="batched", compact_every > 0).
 #
 # Frozen lanes still occupy ladder rows in the batched sweep; once most of
@@ -811,16 +966,16 @@ def run_multistart(
 
     if opts.compact_every < 0:
         raise ValueError(f"compact_every must be >= 0 (got {opts.compact_every})")
-    if opts.compact_every > 0 and opts.sweep_mode != "batched":
+    if opts.compact_every > 0 and opts.sweep_mode not in _BATCHED_MODES:
         raise ValueError(
-            "compact_every > 0 requires sweep_mode='batched' "
+            "compact_every > 0 requires sweep_mode='batched'/'megakernel' "
             f"(got sweep_mode={opts.sweep_mode!r})"
         )
     if opts.repack_every < 0:
         raise ValueError(f"repack_every must be >= 0 (got {opts.repack_every})")
-    if opts.repack_every > 0 and opts.sweep_mode != "batched":
+    if opts.repack_every > 0 and opts.sweep_mode not in _BATCHED_MODES:
         raise ValueError(
-            "repack_every > 0 requires sweep_mode='batched' "
+            "repack_every > 0 requires sweep_mode='batched'/'megakernel' "
             f"(got sweep_mode={opts.sweep_mode!r})"
         )
     if opts.repack_every > 0 and opts.lane_chunk is None:
@@ -830,11 +985,12 @@ def run_multistart(
         )
     if opts.ladder_len < 0:
         raise ValueError(f"ladder_len must be >= 0 (got {opts.ladder_len})")
-    if opts.ladder_len > 0 and opts.sweep_mode != "batched":
+    if opts.ladder_len > 0 and opts.sweep_mode not in _BATCHED_MODES:
         raise ValueError(
             "ladder_len > 0 shortens the speculative batched ladder and "
-            f"requires sweep_mode='batched' (got {opts.sweep_mode!r}); the "
-            "per-lane sequential search is already adaptive"
+            "requires sweep_mode='batched'/'megakernel' "
+            f"(got {opts.sweep_mode!r}); the per-lane sequential search is "
+            "already adaptive"
         )
     if opts.schedule not in ("static", "auto", "replay"):
         raise ValueError(
@@ -843,10 +999,10 @@ def run_multistart(
         )
     scheduling = opts.schedule != "static"
     if scheduling:
-        if opts.sweep_mode != "batched":
+        if opts.sweep_mode not in _BATCHED_MODES:
             raise ValueError(
                 f"schedule={opts.schedule!r} drives the batched sweep's "
-                f"plans and requires sweep_mode='batched' "
+                f"plans and requires sweep_mode='batched'/'megakernel' "
                 f"(got {opts.sweep_mode!r})"
             )
         if opts.compact_every or opts.repack_every or opts.ladder_len:
@@ -861,18 +1017,30 @@ def run_multistart(
             raise ValueError(
                 f"schedule_every must be >= 1 (got {opts.schedule_every})")
 
-    if opts.sweep_mode == "batched":
+    if opts.sweep_mode in _BATCHED_MODES:
         if opts.linesearch != "armijo":
             raise ValueError(
-                "sweep_mode='batched' supports linesearch='armijo' only "
-                f"(got {opts.linesearch!r}); use sweep_mode='per_lane'"
+                f"sweep_mode={opts.sweep_mode!r} supports linesearch="
+                f"'armijo' only (got {opts.linesearch!r}); use "
+                "sweep_mode='per_lane'"
             )
         from repro.core.objectives import as_batched  # import-cycle-safe
 
         bobj = as_batched(f, ad_mode=opts.ad_mode)
         bstrategy = as_batched_strategy(strategy)
+        step_impl = batch_lanes_step
+        if opts.sweep_mode == "megakernel":
+            reason = megakernel_unsupported_reason(bobj, bstrategy, D, opts)
+            if reason is None:
+                step_impl = megakernel_lanes_step
+            else:
+                warnings.warn(
+                    f"sweep_mode='megakernel': {reason}; running the staged "
+                    "batched path instead (bit-identical results)",
+                    RuntimeWarning, stacklevel=2,
+                )
         init_chunk = lambda X: batch_lanes_init(bobj, bstrategy, X, opts.theta)
-        step_chunk = functools.partial(batch_lanes_step, bobj, bstrategy, opts)
+        step_chunk = functools.partial(step_impl, bobj, bstrategy, opts)
     elif opts.sweep_mode == "per_lane":
         vg = value_and_grad_fn(f, opts.ad_mode)
         init_one = lambda x: lane_init(vg, strategy, x, opts.theta,
@@ -888,12 +1056,12 @@ def run_multistart(
     else:
         raise ValueError(
             f"unknown sweep_mode {opts.sweep_mode!r}; "
-            "expected 'per_lane' or 'batched'"
+            "expected 'per_lane', 'batched' or 'megakernel'"
         )
 
     C = opts.lane_chunk
     chunked = C is not None and 0 < C < B
-    batched = opts.sweep_mode == "batched"
+    batched = opts.sweep_mode in _BATCHED_MODES
     if chunked:
         n_chunks = -(-B // C)
         pad = n_chunks * C - B
@@ -1063,7 +1231,7 @@ def run_multistart(
         # argument, which tests/test_autoschedule.py enforces by replay.
         step_L = {
             L: functools.partial(
-                batch_lanes_step, bobj, bstrategy,
+                step_impl, bobj, bstrategy,
                 dataclasses.replace(opts, ladder_len=L))
             for L in ladders
         }

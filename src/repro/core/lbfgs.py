@@ -41,7 +41,9 @@ class LBFGSOptions:
     linesearch: str = "armijo"
     ad_mode: str = "reverse"  # reverse is the right default at high D
     lane_chunk: Optional[int] = None  # chunked lane execution (engine)
-    sweep_mode: str = "per_lane"  # "per_lane" | "batched" (engine sweeps)
+    # "per_lane" | "batched" | "megakernel" (engine sweeps; megakernel falls
+    # back to the staged batched path for L-BFGS — no dense H to fuse)
+    sweep_mode: str = "per_lane"
     # active-lane compaction cadence for batched sweeps (0 = off; engine)
     compact_every: int = 0
     # global cross-chunk lane repacking cadence (0 = off; batched +

@@ -65,6 +65,38 @@ def armijo_backtracking(
     return LineSearchResult(alpha=alpha, f_new=f1, n_evals=i)
 
 
+def ladder_alphas(K: int, dtype, alpha0: float = 1.0,
+                  shrink: float = 0.5) -> np.ndarray:
+    """The host-side α ladder α₀·shrinkᵏ, k = 0..K-1, as a numpy (K,) array.
+
+    Computed on the HOST in the array dtype: sequential repeated multiplies
+    (cumprod) reproduce the per-lane search's alpha *= shrink bit-for-bit
+    (unlike shrink**k for non-binary shrink), and baking the values in as
+    constants lets every launch slice them without introducing traced-slice
+    ops into the trial graph. This is THE canonical ladder: the staged
+    batched search, its sequential fallback probes, and the sweep
+    megakernel's in-kernel ladder all index this one constant vector, which
+    is one leg of the exact-parity contract between those programs."""
+    npdt = np.dtype(dtype)
+    steps = np.full((K,), shrink, npdt)
+    steps[0] = npdt.type(1.0)
+    return (npdt.type(alpha0) * np.cumprod(steps)).astype(npdt)
+
+
+def armijo_thresholds(F0: jnp.ndarray, ddir: jnp.ndarray,
+                      alphas: jnp.ndarray, c1: float) -> jnp.ndarray:
+    """Armijo accept thresholds f₀ + c1·αₖ·(g₀ᵀp) for ALL K rungs as one
+    barriered (K, B) region.
+
+    Every program that shares accept decisions (full ladder, adaptive
+    ladder + fallback, sweep megakernel) computes this ONE tensor and just
+    indexes rows of it; the optimization_barrier keeps consumers from
+    re-fusing the mul-add chain differently per program, which would flip
+    knife-edge accepts by a ULP."""
+    return jax.lax.optimization_barrier(
+        F0[None] + c1 * alphas[:, None] * ddir[None])  # (K, B)
+
+
 class BatchLineSearchResult(NamedTuple):
     alpha: jnp.ndarray  # (B,) accepted step sizes
     f_new: jnp.ndarray  # (B,) f at the accepted (or last evaluated) trial
@@ -141,15 +173,7 @@ def armijo_backtracking_batch(
         )
     L = K if ladder_len <= 0 else min(ladder_len, K)
     ddir = jnp.sum(G0 * P, axis=-1)  # (B,) directional derivatives
-    # The α ladder is computed on the HOST in the array dtype: sequential
-    # repeated multiplies (cumprod) reproduce the per-lane search's
-    # alpha *= shrink bit-for-bit (unlike shrink**k for non-binary shrink),
-    # and baking the values in as constants lets every launch below slice
-    # them without introducing traced-slice ops into the trial graph.
-    npdt = np.dtype(dtype)
-    steps = np.full((K,), shrink, npdt)
-    steps[0] = npdt.type(1.0)
-    alphas_np = (npdt.type(alpha0) * np.cumprod(steps)).astype(npdt)  # (K,)
+    alphas_np = ladder_alphas(K, dtype, alpha0, shrink)  # (K,) host constants
     alphas = jnp.asarray(alphas_np)
 
     def ladder_launch(al_np):
@@ -171,12 +195,9 @@ def armijo_backtracking_batch(
         return value_batch(trials.reshape(k * B, D)).reshape(k, B)
 
     # Armijo thresholds for ALL K rungs as one barriered region, whatever
-    # the ladder length: both programs then contain the bit-identical
-    # (K, B) threshold tensor (the barrier keeps consumers from re-fusing
-    # the mul-add chain differently per phase), and the phases just index
-    # rows of it.
-    rhs = jax.lax.optimization_barrier(
-        F0[None] + c1 * alphas[:, None] * ddir[None])  # (K, B)
+    # the ladder length: every program variant contains the bit-identical
+    # (K, B) threshold tensor and just indexes rows of it.
+    rhs = armijo_thresholds(F0, ddir, alphas, c1)  # (K, B)
 
     F = ladder_launch(alphas_np[:L])  # (L, B)
     ok = F <= rhs[:L]  # (L, B)

@@ -232,6 +232,23 @@ def _fused_impls_for(name: str):
     return None
 
 
+def analytic_fused_name(bobj) -> "Optional[str]":
+    """The analytic fused-KERNEL name a batched objective routes through,
+    or None.
+
+    `bobj.fused` is not enough for the sweep megakernel: registered custom
+    evaluators (register_batched_vg) are "fused" from the engine's point of
+    view but are opaque callables with no in-kernel body to inline — only
+    names that resolve to kernels/fused_obj.py bodies (and were NOT
+    shadowed by a custom registration) can run inside the megakernel."""
+    from repro.kernels import ops as kernel_ops  # deferred: pallas import
+
+    name = getattr(bobj, "name", None)
+    if name is None or name in _BATCHED_VG:
+        return None
+    return name if kernel_ops.megakernel_supported_objective(name) else None
+
+
 class BatchedObjective:
     """A scalar objective lifted to whole-batch evaluation.
 

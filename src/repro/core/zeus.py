@@ -36,9 +36,10 @@ class ZeusOptions:
     dtype: str = "float32"
     solver: str = "bfgs"  # phase-2 strategy name in the engine registry
     lane_chunk: Optional[int] = None  # overrides the solver opts' lane_chunk
-    # overrides the solver opts' sweep_mode ("per_lane" | "batched"); named
-    # objectives (obj.fn from the registry) automatically pick the fused
-    # value+grad kernels on the batched path
+    # overrides the solver opts' sweep_mode ("per_lane" | "batched" |
+    # "megakernel"); named objectives (obj.fn from the registry)
+    # automatically pick the fused value+grad kernels on the batched path
+    # and the fused sweep kernel on the megakernel path
     sweep_mode: Optional[str] = None
     # overrides the solver opts' active-lane compaction cadence (batched
     # sweeps only; 0 = off) — see core/engine.py "Active-lane compaction"

@@ -36,39 +36,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _bfgs_update_kernel(h_ref, dx_ref, dg_ref, out_ref):
-    """Grid step: one lane. Blocks: H (1, D, D), dx/dg (1, D)."""
-    H = h_ref[0]  # (D, D) in VMEM
-    dx = dx_ref[0]  # (D,)
-    dg = dg_ref[0]
+def matvec_body(H, v):
+    """In-kernel single-lane matvec H (D, D) · v (D,) -> (D,) on the MXU.
 
-    rho = 1.0 / jnp.dot(dx, dg)
-    u = jax.lax.dot_general(
-        H, dg[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0]  # u = H @ dg via MXU
-    s = jnp.dot(dg, u)
-    coef = rho * rho * s + rho
-    # three rank-1 updates fused in VMEM
-    out_ref[0] = (
-        H
-        - rho * (u[:, None] * dx[None, :] + dx[:, None] * u[None, :])
-        + coef * (dx[:, None] * dx[None, :])
-    ).astype(out_ref.dtype)
-
-
-def _update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, hout_ref, pout_ref):
-    """Fused: H' update + p' = -H' g_new, one HBM read + write of H."""
-    H = h_ref[0]
-    dx = dx_ref[0]
-    dg = dg_ref[0]
-    gn = gnew_ref[0]
-
-    rho = 1.0 / jnp.dot(dx, dg)
-    u = jax.lax.dot_general(
-        H, dg[:, None], (((1,), (0,)), ((), ())),
+    Every H·vector product in this file and in the sweep megakernel goes
+    through this ONE shape — (D, D)×(D, 1) dot_general, fp32 accumulate —
+    so per-lane rounding is identical whichever kernel a lane's update
+    rides in (the megakernel parity contract depends on this)."""
+    return jax.lax.dot_general(
+        H, v[:, None], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )[:, 0]
+
+
+def hupdate_body(H, dx, dg, rho):
+    """In-kernel body: ρ-form BFGS H' for ONE lane, H (D, D), dx/dg (D,).
+
+        u = H δg,  s = δgᵀ u
+        H' = H − ρ(u δxᵀ + δx uᵀ) + (ρ²s + ρ) δx δxᵀ
+
+    ONE matvec + three rank-1s fused in VMEM. With ρ = 0 and zeroed
+    (δx, δg) every term vanishes, so H' = H exactly — the batch-level
+    curvature guard. Returns (H', u) — u is dead code for callers that
+    don't need it and DCE'd."""
+    u = matvec_body(H, dg)
     s = jnp.dot(dg, u)
     coef = rho * rho * s + rho
     H_new = (
@@ -76,12 +67,30 @@ def _update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, hout_ref, pout_ref
         - rho * (u[:, None] * dx[None, :] + dx[:, None] * u[None, :])
         + coef * (dx[:, None] * dx[None, :])
     )
+    return H_new, u
+
+
+def update_direction_body(H, dx, dg, gn, rho):
+    """In-kernel body: H' update + p' = -H' g_new for one lane."""
+    H_new, _ = hupdate_body(H, dx, dg, rho)
+    return H_new, -matvec_body(H_new, gn)
+
+
+def _bfgs_update_kernel(h_ref, dx_ref, dg_ref, out_ref):
+    """Grid step: one lane. Blocks: H (1, D, D), dx/dg (1, D)."""
+    dx, dg = dx_ref[0], dg_ref[0]
+    rho = 1.0 / jnp.dot(dx, dg)
+    H_new, _ = hupdate_body(h_ref[0], dx, dg, rho)
+    out_ref[0] = H_new.astype(out_ref.dtype)
+
+
+def _update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, hout_ref, pout_ref):
+    """Fused: H' update + p' = -H' g_new, one HBM read + write of H."""
+    dx, dg = dx_ref[0], dg_ref[0]
+    rho = 1.0 / jnp.dot(dx, dg)
+    H_new, p = update_direction_body(h_ref[0], dx, dg, gnew_ref[0], rho)
     hout_ref[0] = H_new.astype(hout_ref.dtype)
-    p = jax.lax.dot_general(
-        H_new, gn[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0]
-    pout_ref[0] = (-p).astype(pout_ref.dtype)
+    pout_ref[0] = p.astype(pout_ref.dtype)
 
 
 def _guarded_update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, rho_ref,
@@ -92,29 +101,10 @@ def _guarded_update_direction_kernel(h_ref, dx_ref, dg_ref, gnew_ref, rho_ref,
     passing ρ = 0 for guarded/frozen lanes: with ρ = 0 and zeroed (δx, δg)
     every update term vanishes, so H' = H exactly and p' = -H g' — no
     second read of H to undo a discarded update."""
-    H = h_ref[0]
-    dx = dx_ref[0]
-    dg = dg_ref[0]
-    gn = gnew_ref[0]
-    rho = rho_ref[0]
-
-    u = jax.lax.dot_general(
-        H, dg[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0]
-    s = jnp.dot(dg, u)
-    coef = rho * rho * s + rho
-    H_new = (
-        H
-        - rho * (u[:, None] * dx[None, :] + dx[:, None] * u[None, :])
-        + coef * (dx[:, None] * dx[None, :])
-    )
+    H_new, p = update_direction_body(
+        h_ref[0], dx_ref[0], dg_ref[0], gnew_ref[0], rho_ref[0])
     hout_ref[0] = H_new.astype(hout_ref.dtype)
-    p = jax.lax.dot_general(
-        H_new, gn[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0]
-    pout_ref[0] = (-p).astype(pout_ref.dtype)
+    pout_ref[0] = p.astype(pout_ref.dtype)
 
 
 def bfgs_update_pallas(H, dx, dg, *, interpret=False):

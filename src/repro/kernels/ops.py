@@ -37,6 +37,16 @@ def _use_pallas() -> bool:
     return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
 
 
+def pallas_enabled() -> bool:
+    """Public probe: do ops dispatch to Pallas kernels right now?
+
+    The engine's megakernel sweep step checks this to decide between the
+    fused launch and wholesale delegation to the staged batched step (the
+    megakernel's reference semantics under REPRO_DISABLE_PALLAS=1 — there
+    is no separate jnp reference for the fused sweep, by design)."""
+    return _use_pallas()
+
+
 def _interpret() -> bool:
     return not _on_tpu()
 
@@ -207,6 +217,82 @@ def fused_value(name: str, x: jnp.ndarray):
         return ref.rosenbrock_vg_ref(x)[0]
     return fused_value_pallas(name, _pad_to(x, Dp, 1), dim=D,
                               interpret=_interpret())
+
+
+# -- sweep megakernel ---------------------------------------------------------
+# Hard VMEM cap on the PADDED lane dim for the fused sweep kernels: the
+# per-grid-step working set is dominated by H in + H out + the rank-1
+# update temporaries (see kernels/sweep_megakernel.py docstring) — the same
+# envelope the guarded-update kernel already compiles in at Dp = 1024.
+MEGAKERNEL_MAX_DIM = 1024
+
+
+def megakernel_supported_objective(name) -> bool:
+    """Objectives whose value/value+grad bodies can run inside the sweep
+    megakernel. A subset of FUSED_OBJECTIVES: every analytic body qualifies
+    (rosenbrock's extra Dp == D condition is dimension-dependent and checked
+    separately in engine.megakernel_unsupported_reason)."""
+    return name in FUSED_OBJECTIVES
+
+
+def sweep_megakernel_full(name, X, P, G, H, active, rhs, alphas_np):
+    """ONE launch: ladder + accept + value_grad + guarded H' + p'.
+
+    X/P/G (B, D) unpadded, H (B, D, D), active (B,) bool, rhs (K, B) the
+    barriered Armijo thresholds (core/linesearch.armijo_thresholds),
+    alphas_np the (K,) host ladder constants. Returns
+    (x', f', g', H', p', α, rung) sliced back to D. No jnp reference —
+    callers must route to the staged step when pallas is disabled."""
+    if not _use_pallas():
+        raise RuntimeError(
+            "sweep_megakernel_full has no jnp reference; the engine "
+            "delegates to batch_lanes_step under REPRO_DISABLE_PALLAS=1")
+    from repro.kernels.sweep_megakernel import sweep_megakernel_full_pallas
+
+    B, D = X.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    x, f, g, Hn, p, alpha, rung = sweep_megakernel_full_pallas(
+        name,
+        _pad_to(X, Dp, 1),
+        _pad_to(P, Dp, 1),
+        _pad_to(G, Dp, 1),
+        Hp,
+        active,
+        rhs,
+        alphas_np,
+        dim=D,
+        interpret=_interpret(),
+    )
+    return (x[:, :D], f, g[:, :D], Hn[:, :D, :D], p[:, :D], alpha, rung)
+
+
+def sweep_megakernel_commit(name, X, P, G, H, active, alpha):
+    """ONE launch: step to x + α·p + value_grad + guarded H' + p', with α
+    already accepted by the staged adaptive ladder (the short-ladder
+    megakernel path's second and last launch). Returns (x', f', g', H', p')
+    sliced back to D. No jnp reference (see sweep_megakernel_full)."""
+    if not _use_pallas():
+        raise RuntimeError(
+            "sweep_megakernel_commit has no jnp reference; the engine "
+            "delegates to batch_lanes_step under REPRO_DISABLE_PALLAS=1")
+    from repro.kernels.sweep_megakernel import sweep_megakernel_commit_pallas
+
+    B, D = X.shape
+    Dp = _padded_dim(D)
+    Hp = _pad_to(_pad_to(H, Dp, 1), Dp, 2)
+    x, f, g, Hn, p = sweep_megakernel_commit_pallas(
+        name,
+        _pad_to(X, Dp, 1),
+        _pad_to(P, Dp, 1),
+        _pad_to(G, Dp, 1),
+        Hp,
+        active,
+        alpha,
+        dim=D,
+        interpret=_interpret(),
+    )
+    return (x[:, :D], f, g[:, :D], Hn[:, :D, :D], p[:, :D])
 
 
 # -- flash attention -----------------------------------------------------------

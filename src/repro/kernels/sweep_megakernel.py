@@ -1,0 +1,248 @@
+"""Pallas sweep megakernel: direction → ladder → accept → H-update fused.
+
+After PRs 2–5 a batched BFGS sweep is still four separate XLA computations
+— speculative-ladder launch, fused value+grad, guarded H-update+direction,
+plus the glue between them — with the (B, D) x/g rows and the (B, D, D) H
+tile round-tripping through HBM between every stage. The paper's core
+claim (ZEUS §V) is that *residency* is what makes PSO+BFGS+AD competitive;
+He et al. (arXiv 2404.11631) measure the same staged-launch overhead
+dominating GPU simulation-optimization loops at exactly this granularity.
+This module is the TPU answer: ONE `pl.pallas_call` per sweep whose grid
+step keeps a lane's x, g, p, f-thresholds and full (Dp, Dp) H tile in VMEM
+across all four stages.
+
+Stage layout per grid step (one lane — see "why one lane" below):
+  1. ladder   : trials (K, Dp) = x + αₖ·p from the HOST-constant α ladder
+                (core/linesearch.ladder_alphas — the canonical ladder every
+                Armijo program in this codebase indexes);
+  2. values   : the fused objective's value body (fused_obj.objective_body)
+                inline on the trial rows — the same row-independent body the
+                staged ladder's pallas_call runs on (tn, Dp) tiles;
+  3. accept   : first Armijo-accepted rung by min-index over the masked rung
+                iota, against the PRECOMPUTED barriered thresholds rhs
+                (K, 1) block (core/linesearch.armijo_thresholds — computed
+                once outside so both programs compare against the
+                bit-identical tensor); α selected by one-hot sum over the
+                ladder constants (exact: one term survives, the rest are
+                0.0 by `where`, never by multiplication);
+  4. commit   : x' = x + α·p, fused value+grad body at x', curvature
+                guard ρ (sliced to the TRUE dim so the reduction has the
+                same length and order as the staged path's out-of-kernel
+                `jnp.sum(dX·dG, -1)`), then the guarded ρ-form H' update
+                and p' = −H'·g' through bfgs_update.update_direction_body —
+                the very body the staged `_guarded_update_direction_kernel`
+                runs, at the same (Dp, Dp)×(Dp, 1) dot shapes.
+
+Why one lane per grid step: exactness. Every reduction in the staged path
+is either per-row (objective bodies), per-lane at (Dp, Dp)×(Dp, 1) (the
+update kernel, grid=(B,)), or out-of-kernel over the true D (curv, ddir).
+Reproducing those exact shapes per grid step makes each lane's arithmetic
+independent of B and bit-identical to the staged program wherever the
+backend's reductions are length-stable — the same batch-size-stability
+contract compaction already leans on. A lane-tile variant would batch the
+update matvecs into (TB, Dp, Dp)×(TB, Dp) dot_generals whose per-lane
+rounding the staged kernels never produce.
+
+Why the sequential fallback stays un-fused (PR 4 semantics): when
+0 < ladder_len < K the staged adaptive ladder's fallback probes are
+lax.cond-guarded LAUNCHES that short-circuit to zero objective work once
+every lane has accepted — fusing them into the kernel would evaluate all
+K−L residual rungs unconditionally for every lane (a kernel has no early
+exit across grid steps), turning the adaptive ladder's row *savings* back
+into full-ladder rows. So the short-ladder megakernel path reuses
+`armijo_backtracking_batch` verbatim (launch #1, bit-identical α by
+construction) and fuses everything after the accept — value+grad, guard,
+H', p' — into the commit kernel (launch #2).
+
+VMEM budget per grid step: H in + H out is 2·Dp²·4 B and the three rank-1
+update terms cost up to ~2 more Dp² temporaries before fusion; trials add
+K·Dp·4 B and the vectors ~8·Dp·4 B. At the ops.MEGAKERNEL_MAX_DIM = 1024
+cap that is ≈16 MB worst-case pre-fusion — the same envelope the existing
+guarded-update kernel already compiles in — and ≈4.2 MB at D = 256.
+Oversized D (and non-fused objectives, and rosenbrock at D not a multiple
+of 128, where zero padding is inexact) are routed back to the staged path
+by `engine.megakernel_unsupported_reason` before this module is reached.
+
+There is deliberately NO jnp reference here: under REPRO_DISABLE_PALLAS=1
+the engine's megakernel step delegates wholesale to `batch_lanes_step` —
+the staged program IS the megakernel's reference semantics, bit-for-bit.
+The interpret leg (CPU) runs the real fused bodies below; the
+`jax.lax.optimization_barrier`s inside the body sit at exactly the staged
+program's materialization points (pallas_call input/output boundaries), so
+XLA cannot re-fuse across a stage seam the staged program keeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bfgs_update import update_direction_body
+from repro.kernels.fused_obj import objective_body
+
+_CURV_EPS = 1e-10  # engine._CURV_EPS; kept literal to avoid a core import
+
+
+def _seam(x):
+    """A staged-launch seam: barrier so consumers can't re-fuse across it.
+
+    Placed where the staged program materializes an array at a pallas_call
+    boundary (trial tensor in, ladder values out, x' in, value+grad out,
+    (ρ, δx, δg) in). Elementwise-identity, so it never changes values —
+    only prevents ULP-flipping recontraction across the seam."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _commit_tail(body, d, x, p, g, H, act, alpha):
+    """Stage 4, shared by both kernels: step, value+grad, guard, H', p'.
+
+    All inputs are one lane's (Dp,)/(Dp, Dp) rows; `d` is the true dim."""
+    x_new = _seam(x + alpha * p)
+    f_new, g_row = body(x_new[None, :], with_grad=True)
+    f_new, g_new = _seam(f_new[0]), _seam(g_row[0])
+    dx = x_new - x
+    dg = g_new - g
+    # curvature guard on the TRUE dim: the staged path computes
+    # jnp.sum(dX*dG, -1) on the engine's UNPADDED (B, D) arrays, so the
+    # in-kernel reduction must see the same D elements in the same order —
+    # a static slice of the padded rows, not a masked sum over Dp.
+    curv = jnp.sum(dx[:d] * dg[:d])
+    ok = jnp.logical_and(act, jnp.logical_and(
+        jnp.isfinite(curv), curv > _CURV_EPS))
+    # mirrors BatchedDenseBFGS.update_and_direction_batch's sanitisation
+    rho = _seam(jnp.where(ok, 1.0 / jnp.where(ok, curv, 1.0), 0.0))
+    dxs = _seam(jnp.where(ok, dx, 0.0))
+    dgs = _seam(jnp.where(ok, dg, 0.0))
+    h_new, p_new = update_direction_body(H, dxs, dgs, g_new, rho)
+    return x_new, f_new, g_new, h_new, p_new
+
+
+def _full_sweep_kernel(body, d, exhaust_alpha, K,
+                       x_ref, p_ref, g_ref, h_ref, act_ref, rhs_ref,
+                       al_ref,
+                       xo_ref, fo_ref, go_ref, ho_ref, po_ref,
+                       ao_ref, ro_ref):
+    """Grid step: ONE lane, all four stages. Blocks: x/p/g (1, Dp),
+    H (1, Dp, Dp), act (1,) int32, rhs (K, 1) barriered thresholds,
+    al (K,) the host ladder constants (an input because pallas kernels
+    can't close over array constants — values still host-computed by
+    linesearch.ladder_alphas)."""
+    x = x_ref[0]
+    p = p_ref[0]
+    act = act_ref[0] != 0
+
+    # stages 1–2: the K-rung trial fan and its values, one VMEM pass
+    al = al_ref[...]  # (K,) ladder constants
+    trials = _seam(x[None, :] + al[:, None] * p[None, :])  # (K, Dp)
+    F = _seam(body(trials)[0])  # (K,)
+
+    # stage 3: first accepted rung. rung = min over accepted rung indices
+    # (== the staged argmax-of-first-True when any accept, K when none —
+    # exactly the staged exhaustion encoding).
+    ok = F <= rhs_ref[:, 0]
+    kio = jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)[:, 0]
+    rung = jnp.min(jnp.where(ok, kio, K)).astype(jnp.int32)
+    # α by one-hot sum: the single selected ladder constant survives, every
+    # other term is literally 0.0 — a selection, not an arithmetic blend.
+    alpha_acc = jnp.sum(jnp.where(kio == rung, al, 0.0))
+    alpha = jnp.where(rung < K, alpha_acc, jnp.asarray(exhaust_alpha))
+
+    # stage 4: commit + guarded H-update + next direction
+    x_new, f_new, g_new, h_new, p_new = _commit_tail(
+        body, d, x, p, g_ref[0], h_ref[0], act, alpha)
+
+    xo_ref[0] = x_new.astype(xo_ref.dtype)
+    fo_ref[0] = f_new.astype(fo_ref.dtype)
+    go_ref[0] = g_new.astype(go_ref.dtype)
+    ho_ref[0] = h_new.astype(ho_ref.dtype)
+    po_ref[0] = p_new.astype(po_ref.dtype)
+    ao_ref[0] = alpha.astype(ao_ref.dtype)
+    ro_ref[0] = rung
+
+
+def _commit_kernel(body, d,
+                   x_ref, p_ref, g_ref, h_ref, act_ref, alpha_ref,
+                   xo_ref, fo_ref, go_ref, ho_ref, po_ref):
+    """Short-ladder commit: stage 4 only, α decided by the staged adaptive
+    ladder (launch #1). One lane per grid step, same blocks as above."""
+    x_new, f_new, g_new, h_new, p_new = _commit_tail(
+        body, d, x_ref[0], p_ref[0], g_ref[0], h_ref[0],
+        act_ref[0] != 0, alpha_ref[0])
+    xo_ref[0] = x_new.astype(xo_ref.dtype)
+    fo_ref[0] = f_new.astype(fo_ref.dtype)
+    go_ref[0] = g_new.astype(go_ref.dtype)
+    ho_ref[0] = h_new.astype(ho_ref.dtype)
+    po_ref[0] = p_new.astype(po_ref.dtype)
+
+
+def _lane_specs(B, D, K=None):
+    """(in_specs head, out_specs head) shared by both kernels."""
+    vec = pl.BlockSpec((1, D), lambda b: (b, 0))
+    mat = pl.BlockSpec((1, D, D), lambda b: (b, 0, 0))
+    scl = pl.BlockSpec((1,), lambda b: (b,))
+    return vec, mat, scl
+
+
+def sweep_megakernel_full_pallas(name, X, P, G, H, active, rhs, alphas_np,
+                                 *, dim=None, shrink=0.5, interpret=False):
+    """The full-ladder megakernel: ONE launch for ladder+accept+commit.
+
+    X/P/G (B, Dp), H (B, Dp, Dp), active (B,) bool, rhs (K, B) barriered
+    Armijo thresholds, alphas_np the (K,) host ladder. `dim` is the true
+    (unpadded) lane dim. Returns (x', f', g', H', p', α, rung) — padded
+    shapes; callers slice."""
+    B, D = X.shape
+    d = dim if dim is not None else D
+    K = int(alphas_np.shape[0])
+    body = objective_body(name, d)
+    npdt = alphas_np.dtype.type
+    exhaust_alpha = npdt(alphas_np[-1] * npdt(shrink))  # staged alphas[-1]·shrink
+    vec, mat, scl = _lane_specs(B, D)
+    kernel = functools.partial(
+        _full_sweep_kernel, body, d, exhaust_alpha, K)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[vec, vec, vec, mat, scl,
+                  pl.BlockSpec((K, 1), lambda b: (0, b)),
+                  pl.BlockSpec((K,), lambda b: (0,))],
+        out_specs=[vec, scl, vec, mat, vec, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+            jax.ShapeDtypeStruct((B,), X.dtype),
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+            jax.ShapeDtypeStruct((B, D, D), H.dtype),
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+            jax.ShapeDtypeStruct((B,), X.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(X, P, G, H, active.astype(jnp.int32), rhs, jnp.asarray(alphas_np))
+
+
+def sweep_megakernel_commit_pallas(name, X, P, G, H, active, alpha,
+                                   *, dim=None, interpret=False):
+    """The commit megakernel: ONE launch for step+value_grad+guard+H'+p',
+    with α already accepted by the staged adaptive ladder. Shapes as in
+    sweep_megakernel_full_pallas, α (B,). Returns (x', f', g', H', p')."""
+    B, D = X.shape
+    d = dim if dim is not None else D
+    body = objective_body(name, d)
+    vec, mat, scl = _lane_specs(B, D)
+    kernel = functools.partial(_commit_kernel, body, d)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[vec, vec, vec, mat, scl, scl],
+        out_specs=[vec, scl, vec, mat, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+            jax.ShapeDtypeStruct((B,), X.dtype),
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+            jax.ShapeDtypeStruct((B, D, D), H.dtype),
+            jax.ShapeDtypeStruct((B, D), X.dtype),
+        ],
+        interpret=interpret,
+    )(X, P, G, H, active.astype(jnp.int32), alpha)

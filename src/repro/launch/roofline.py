@@ -151,6 +151,47 @@ def derive_terms(
     )
 
 
+def roofline_fraction(flops: float, hbm_bytes: float) -> float:
+    """Achieved-fraction-of-roofline for one program: the share of peak
+    FLOP/s attainable at its arithmetic intensity (1.0 = compute-bound at
+    peak; below that, memory traffic is the binding term). This is the
+    headline number benchmarks/zeus_roofline.py reports per sweep impl —
+    the megakernel raises it purely by shrinking hbm_bytes (inter-stage
+    tensors stay VMEM-resident), the FLOPs are identical by exactness."""
+    t = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+    return (flops / PEAK_FLOPS) / t if t > 0 else 0.0
+
+
+def megakernel_sweep_hbm_bytes(n_lanes: int, d: int, k: int,
+                               itemsize: int = 4) -> float:
+    """Per-device HBM bytes for ONE fused megakernel sweep (ISSUE 6): each
+    lane streams its operands exactly once — x, g, p in; the (d, d) H tile
+    in and H' out; x', f', g', p', α, rung out; the K-rung threshold
+    column in. Everything the staged path materializes between launches
+    (the (K, d) trial block, ladder values, the commit iterate and its
+    gradient) stays VMEM-resident, which is precisely the memory-term gap
+    between the staged and fused rows in zeus_roofline.json."""
+    per_lane = (2 * d * d  # H in + H' out
+                + 6 * d    # x, g, p in; x', g', p' out
+                + k + 4)   # ladder thresholds in; f', α, rung, active
+    return float(n_lanes) * per_lane * itemsize
+
+
+def staged_sweep_seam_bytes(n_lanes: int, d: int, k: int,
+                            itemsize: int = 4) -> float:
+    """Per-device HBM bytes the STAGED batched sweep adds on top of
+    megakernel_sweep_hbm_bytes: the inter-launch materializations, each
+    written by one kernel and re-read by the next — the (K, d) trial
+    block (written by the ladder fan-out, read by the value kernel), the
+    K ladder values (read by the select), the accepted iterate x' and its
+    fused value+grad outputs (read by the update kernel), and the scaled
+    (δx, δg, ρ) triple feeding the guarded update."""
+    per_lane = (2 * (k * d + k)    # trials + ladder values, write + read
+                + 2 * (3 * d + 2)  # x', g', δx pairs + f', ρ round-trips
+                )
+    return float(n_lanes) * per_lane * itemsize
+
+
 def model_flops_global(cfg, shape, n_params_active: int) -> float:
     """6·N·D for training, 2·N·D for prefill, 2·N·B for one decode step."""
     if shape.kind == "train":
