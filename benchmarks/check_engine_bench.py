@@ -36,7 +36,15 @@ when a perf floor regresses:
     is expected; the structural win lives in `launches_per_sweep`, which
     must stay <= 2 for both megakernel shapes while staged records 3);
     `exact_match` (staged vs megakernel results array-identical) must be
-    true.
+    true;
+  * `checkpoint_overhead_ratio` (host-segmented solve snapshotting the full
+    carry every 25 sweeps / the once-jitted in-device loop) must stay <=
+    BENCH_CHECKPOINT_CEIL (default 1.05 — the DESIGN.md §15 criterion:
+    durability costs percent-level wall, because the segment jits are
+    cached across solves, the raw-byte shard write runs on a background
+    thread, and each cadence pays only one host gather on the critical
+    path); the ckpt cell's `exact_match` (segmented vs plain results
+    array-identical) must be true.
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
@@ -70,7 +78,7 @@ MEGA_LAUNCH_CEIL = 2.0  # structural: full ladder = 1, short ladder = 2
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
           trip_ceil: float, ladder_ceil: float, auto_slack: float,
-          mega_ceil: float) -> list:
+          mega_ceil: float, ckpt_ceil: float) -> list:
     errors = []
 
     def need(cond, msg):
@@ -78,16 +86,18 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             errors.append(msg)
 
     for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto",
-                "mega"):
+                "mega", "ckpt"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
     autos = payload.get("auto") or {}
     megas = payload.get("mega") or {}
+    ckpts = payload.get("ckpt") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
     need(len(autos) > 0, "no auto_vs_best_static cells measured")
     need(len(megas) > 0, "no megakernel cells measured")
+    need(len(ckpts) > 0, "no checkpoint-overhead cells measured")
 
     for name, cell in cells.items():
         for mode in ("per_lane", "batched", "compacted", "ladder"):
@@ -185,6 +195,28 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
         need(mega.get("exact_match") is True,
              f"mega.{name}: exact_match is not True — megakernel results "
              f"diverged from the staged batched path")
+
+    for name, ckpt in ckpts.items():
+        for mode in ("plain", "checkpointed"):
+            block = ckpt.get(mode)
+            need(isinstance(block, dict), f"ckpt.{name}: missing {mode!r}")
+            if isinstance(block, dict):
+                need(block.get("wall_s", 0) > 0,
+                     f"ckpt.{name}.{mode}: wall_s <= 0")
+        ck_block = ckpt.get("checkpointed")
+        if isinstance(ck_block, dict):
+            need(ck_block.get("n_snapshots", 0) >= 2,
+                 f"ckpt.{name}: fewer than 2 snapshot cadences measured")
+        ratio = ckpt.get("checkpoint_overhead_ratio")
+        need(
+            isinstance(ratio, (int, float)) and 0 < ratio <= ckpt_ceil,
+            f"ckpt.{name}: checkpoint_overhead_ratio {ratio!r} above "
+            f"ceiling {ckpt_ceil} — durable solves must cost percent-level "
+            f"wall over the in-device loop",
+        )
+        need(ckpt.get("exact_match") is True,
+             f"ckpt.{name}: exact_match is not True — the host-segmented "
+             f"driver diverged from the uninterrupted solve")
     return errors
 
 
@@ -213,6 +245,9 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--megakernel-ceil", type=float,
         default=float(os.environ.get("BENCH_MEGAKERNEL_CEIL", "1.1")))
+    ap.add_argument(
+        "--checkpoint-ceil", type=float,
+        default=float(os.environ.get("BENCH_CHECKPOINT_CEIL", "1.05")))
     args = ap.parse_args(argv)
 
     def gate(path, label):
@@ -220,7 +255,8 @@ def main(argv=None) -> int:
             payload = json.load(f)
         errs = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
                      args.tail_trip_ceil, args.ladder_rows_ceil,
-                     args.auto_slack, args.megakernel_ceil)
+                     args.auto_slack, args.megakernel_ceil,
+                     args.checkpoint_ceil)
         return payload, [f"{label}: {e}" for e in errs] if label else errs
 
     payload, errors = gate(args.path, "")
@@ -241,6 +277,8 @@ def main(argv=None) -> int:
     mega_w = [m["megakernel_wall_ratio"] for m in payload["mega"].values()]
     mega_l = [m["megakernel"]["launches_per_sweep"]
               for m in payload["mega"].values()]
+    ckpt_r = [c["checkpoint_overhead_ratio"]
+              for c in payload["ckpt"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
@@ -254,7 +292,9 @@ def main(argv=None) -> int:
         f"{max(auto_r):.3f} (slack {args.auto_slack}); "
         f"megakernel_wall_ratio max {max(mega_w):.3f} "
         f"(ceiling {args.megakernel_ceil}); megakernel launches/sweep "
-        f"{max(mega_l):.0f} (ceiling {MEGA_LAUNCH_CEIL:.0f})"
+        f"{max(mega_l):.0f} (ceiling {MEGA_LAUNCH_CEIL:.0f}); "
+        f"checkpoint_overhead_ratio max {max(ckpt_r):.3f} "
+        f"(ceiling {args.checkpoint_ceil})"
         + (f"; baseline {args.baseline} OK" if args.baseline else "")
     )
     return 0

@@ -2,9 +2,18 @@
 
 Layout (one directory per step):
     <root>/step_000000420/
-        shard_00000.npz     — this process's param/opt leaves (flat index keys)
+        shard_00000.bin     — this process's leaves, raw bytes concatenated
+                              in flat-tree order (offsets derive from the
+                              shapes/dtypes in meta.json)
         meta.json           — treedef + leaf shapes/dtypes + mesh signature
         COMMIT              — two-phase-commit marker (written LAST)
+
+The shard is a raw byte stream, not an npz: zipfile's per-member CRC32
+costs more CPU than the write itself at engine-carry sizes, and the
+fault-tolerant sweep driver's checkpoint-overhead gate (DESIGN.md §15)
+budgets percent-level wall per snapshot. Integrity comes from the
+two-phase commit (a torn stream never gains a COMMIT marker) plus a
+byte-length check against meta at restore.
 
 Fault-tolerance contract:
   * a checkpoint without COMMIT is ignored at restore (partial writes from a
@@ -42,14 +51,18 @@ def save(root: str, step: int, tree: Any, keep: int = 3, process_index: int = 0)
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
 
-    arrays = {f"leaf_{i:05d}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, f"shard_{process_index:05d}.npz"), **arrays)
+    # NB: not ascontiguousarray — it silently promotes 0-d leaves to 1-d,
+    # which would corrupt the shapes recorded below
+    arrays = [np.asarray(x) for x in leaves]
+    with open(os.path.join(tmp, f"shard_{process_index:05d}.bin"), "wb") as f:
+        for a in arrays:
+            f.write(a.data if a.flags.c_contiguous else a.tobytes())
     meta = {
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
-        "shapes": [list(np.shape(x)) for x in leaves],
-        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(a.shape) for a in arrays],
+        "dtypes": [str(a.dtype) for a in arrays],
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
@@ -84,6 +97,22 @@ def latest_step(root: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def snapshot_meta(root: str, step: Optional[int] = None) -> dict:
+    """Meta of a committed snapshot (n_leaves/shapes/dtypes/treedef str)
+    WITHOUT loading the arrays — lets a caller pick the right restore
+    target for a snapshot written under a different mesh shape before
+    committing to a full `restore`."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {root}")
+    d = _step_dir(root, step)
+    if not os.path.exists(os.path.join(d, _COMMIT)):
+        raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker")
+    with open(os.path.join(d, "meta.json")) as fh:
+        return json.load(fh)
+
+
 def restore(root: str, like: Any, step: Optional[int] = None,
             shardings: Any = None, process_index: int = 0) -> Any:
     """Restore into the structure of `like` (a pytree of arrays or
@@ -97,9 +126,29 @@ def restore(root: str, like: Any, step: Optional[int] = None,
     d = _step_dir(root, step)
     if not os.path.exists(os.path.join(d, _COMMIT)):
         raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker")
-    data = np.load(os.path.join(d, f"shard_{process_index:05d}.npz"))
+    with open(os.path.join(d, f"shard_{process_index:05d}.bin"), "rb") as fh:
+        blob = fh.read()
     leaves, treedef = jax.tree.flatten(like)
-    loaded = [data[f"leaf_{i:05d}"] for i in range(len(leaves))]
+    with open(os.path.join(d, "meta.json")) as fh:
+        meta = json.load(fh)
+    if meta.get("n_leaves") != len(leaves):
+        raise ValueError(
+            f"checkpoint {d} holds {meta.get('n_leaves')} leaves but the "
+            f"restore target has {len(leaves)} — the snapshot belongs to a "
+            "different carry structure (solver/schedule/options mismatch)")
+    loaded = []
+    off = 0
+    for shp, dt in zip(meta["shapes"], meta["dtypes"]):
+        dtype = np.dtype(dt)
+        n = int(np.prod(shp, dtype=np.int64)) if shp else 1
+        loaded.append(
+            np.frombuffer(blob, dtype=dtype, count=n, offset=off)
+            .reshape(shp))
+        off += n * dtype.itemsize
+    if off != len(blob):
+        raise ValueError(
+            f"checkpoint {d} shard holds {len(blob)} bytes but meta "
+            f"describes {off} — torn or foreign shard file")
     if shardings is not None:
         shard_leaves = treedef.flatten_up_to(shardings)
         loaded = [

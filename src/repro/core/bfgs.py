@@ -69,6 +69,16 @@ class BFGSOptions:
     # latches the dynamic (repack+compact) plan
     auto_ladders: Optional[tuple] = None
     auto_active_frac: float = 0.5
+    # fault tolerance (engine; DESIGN.md §15): quarantine/retry budget per
+    # lane, re-seed policy, sweep-carry checkpoint cadence, fault injection
+    retry_budget: int = 0
+    retry_mode: str = "perturb"  # "perturb" | "uniform"
+    retry_sigma: float = 0.1
+    retry_bounds: Optional[tuple] = None
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3
+    fault_plan: Optional[object] = None
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +203,14 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         schedule_plans=opts.schedule_plans,
         auto_ladders=opts.auto_ladders,
         auto_active_frac=opts.auto_active_frac,
+        retry_budget=opts.retry_budget,
+        retry_mode=opts.retry_mode,
+        retry_sigma=opts.retry_sigma,
+        retry_bounds=opts.retry_bounds,
+        checkpoint_every=opts.checkpoint_every,
+        checkpoint_dir=opts.checkpoint_dir,
+        checkpoint_keep=opts.checkpoint_keep,
+        fault_plan=opts.fault_plan,
     )
 
 
@@ -245,10 +263,13 @@ def batched_bfgs(
     x0: jnp.ndarray,  # (B, D) starting points (the post-PSO swarm)
     opts: BFGSOptions = BFGSOptions(),
     pcount: Optional[Callable] = None,  # cross-device converged-count reducer
+    retry_key=None,  # PRNG key for quarantine re-seeds (engine)
+    resume_from: Optional[str] = None,  # checkpoint root to restore from
 ) -> BFGSResult:
     """Run B independent BFGS solves until required_c of them converge."""
     strategy, eopts = make_bfgs_solver(opts)
-    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount)
+    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount,
+                            retry_key=retry_key, resume_from=resume_from)
 
 
 # ---------------------------------------------------------------------------

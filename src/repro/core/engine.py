@@ -161,6 +161,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
@@ -220,6 +221,14 @@ class BFGSResult(NamedTuple):
     # EngineOptions(schedule="replay", schedule_plans=...). Psum'd across
     # the mesh by the distributed driver (per-shard decisions differ).
     schedule_trace: Optional[jnp.ndarray] = None
+    # (B,) int32 — quarantine re-seeds consumed per lane (retry_budget > 0;
+    # zeros otherwise). Lane-sharded (not psum'd) in the distributed
+    # out_specs, like n_evals; sum it for the whole-mesh total.
+    n_restarts: Optional[jnp.ndarray] = None
+    # scalar int32 — lanes that ended failed (non-finite escape with any
+    # retry budget exhausted). Psum'd across the mesh by the distributed
+    # driver so callers can distinguish "converged" from "everything NaN'd".
+    n_failed: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,6 +297,36 @@ class EngineOptions:
     # Enable the dynamic (repack+compact) plan once the LOCAL active count
     # drops below this fraction of the shard's lanes; latched once on.
     auto_active_frac: float = 0.5
+    # ---- fault tolerance (DESIGN.md §15) -------------------------------
+    # Lane quarantine/retry: a lane that escapes to NaN/Inf (failed=True)
+    # is re-seeded in-carry up to retry_budget times instead of freezing
+    # forever (batched/megakernel sweeps only). retry_mode="perturb"
+    # restarts from the lane's last finite iterate plus retry_sigma·N(0, I)
+    # noise; "uniform" draws fresh from retry_bounds (required there, and
+    # used as the sanitize-center for "perturb" when set — zeus() threads
+    # its (lower, upper) automatically). Re-seeds consume a PRNG stream
+    # carried in the loop state (seeded by run_multistart's retry_key), so
+    # retries are deterministic and survive checkpoint resume exactly.
+    retry_budget: int = 0
+    retry_mode: str = "perturb"  # "perturb" | "uniform"
+    retry_sigma: float = 0.1
+    retry_bounds: Optional[Tuple[float, float]] = None
+    # Sweep-carry checkpointing: > 0 snapshots the FULL while-loop carry
+    # (lanes pytree incl. the dense-H stack, gather plans, controller
+    # state, PRNG key data, row/trip counters) to checkpoint_dir every
+    # checkpoint_every sweeps via checkpoint/manager.py's two-phase-commit
+    # path. Requires eager execution (the driver runs jitted SEGMENTS of
+    # checkpoint_every sweeps between host snapshots); resume via
+    # run_multistart(resume_from=...) is array-equal to the uninterrupted
+    # run. checkpoint_keep bounds the on-disk snapshot count (manager GC).
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3
+    # Deterministic fault-injection harness (debug/CI): a
+    # launch.faults.FaultPlan whose NaN/kill events fire in-body keyed on
+    # the carried sweep counter, and whose preempt_at_sweep makes the host
+    # driver raise launch.faults.Preempted at that sweep boundary.
+    fault_plan: Optional[Any] = None
 
 
 class DirectionStrategy(Protocol):
@@ -936,12 +975,80 @@ def schedule_trace_plans(trace) -> Tuple[int, ...]:
     return tuple(int(np.argmax(row)) if row.any() else 0 for row in t)
 
 
+class EngineCarry(NamedTuple):
+    """The sweep driver's full while-loop carry — ONE pytree holding every
+    bit of solve state, so a snapshot of it IS the solve (DESIGN.md §15).
+
+    Checkpoint/resume round-trips this structure through
+    checkpoint/manager.py; array-equal resume requires that nothing the
+    sweeps read lives outside it — which is why the retry PRNG stream is
+    carried as raw uint32 key data (np-serializable, unlike typed keys) and
+    the row/trip counters accumulate in-carry rather than post-hoc."""
+
+    k: jnp.ndarray  # scalar int32 — sweeps completed
+    lanes: Any  # BatchLanes / Lane stack (chunked: leading (n_chunks, C))
+    n_conv: jnp.ndarray  # scalar int32 — global converged count (pcount'd)
+    n_act: jnp.ndarray  # scalar int32 — global active count (pcount'd)
+    aux: Any  # gather plans: () | (perm, bidx) | (gperm, gcidx[, cperm, cbidx])
+    rows: jnp.ndarray  # scalar int32 — physical objective rows so far
+    trips: jnp.ndarray  # scalar int32 — chunk-step trips so far
+    astate: Any  # _AutoState (schedule="auto"/"replay") or ()
+    rkey: jnp.ndarray  # raw uint32 PRNG key data for quarantine re-seeds
+    n_restarts: jnp.ndarray  # (B_flat,) int32 — re-seeds consumed per lane
+    replan: jnp.ndarray  # scalar bool — force a gather-plan refresh next sweep
+
+
+class MultistartProgram(NamedTuple):
+    """run_multistart's solve, factored as (init, cond, body, finalize) over
+    an EngineCarry — the building blocks the segmented checkpoint driver and
+    the distributed fault-tolerant driver re-assemble around host control.
+    `body` advances exactly one sweep; `cond` is the stop protocol."""
+
+    make_carry0: Callable[[], "EngineCarry"]
+    cond: Callable[["EngineCarry"], jnp.ndarray]
+    body: Callable[["EngineCarry"], "EngineCarry"]
+    finalize: Callable[["EngineCarry"], BFGSResult]
+    opts: EngineOptions
+    required_c: int
+
+
+# hosted-driver jit cache (see run_multistart's segmented section): maps a
+# solve signature to its (init, segment, finalize) jits so repeated
+# checkpointed solves pay tracing/compilation once, like a user-jitted
+# un-checkpointed solve does
+_HOSTED_JIT_CACHE: Dict[Any, Tuple[Callable, Callable, Callable]] = {}
+
+
+def _hashable(obj):
+    """obj if it can key a dict, else its identity (same semantics as
+    jax.jit's function-identity caching: a fresh lambda misses)."""
+    try:
+        hash(obj)
+        return obj
+    except TypeError:
+        return id(obj)
+
+
+def _freeze_config(strategy) -> Tuple:
+    """Hashable snapshot of a strategy's instance config (e.g. LBFGS
+    memory). Non-primitive values degrade to identity, so exotic stateful
+    strategies safely miss the cache rather than alias each other."""
+    cfg = getattr(strategy, "__dict__", None) or {}
+    return tuple(
+        (k, v if isinstance(v, (int, float, str, bool, type(None)))
+         else id(v))
+        for k, v in sorted(cfg.items()))
+
+
 def run_multistart(
     f: Callable,
     x0: jnp.ndarray,  # (B, D) starting points (the post-PSO swarm)
     strategy: DirectionStrategy,
     opts: EngineOptions = EngineOptions(),
     pcount: Optional[Callable] = None,  # cross-device converged-count reducer
+    retry_key: Optional[jnp.ndarray] = None,  # PRNG key for quarantine re-seeds
+    resume_from: Optional[str] = None,  # checkpoint root to restore from
+    _as_program: bool = False,  # return the MultistartProgram instead
 ) -> BFGSResult:
     """Run B independent quasi-Newton solves until required_c converge.
 
@@ -1017,6 +1124,52 @@ def run_multistart(
             raise ValueError(
                 f"schedule_every must be >= 1 (got {opts.schedule_every})")
 
+    # --- fault-tolerance option validation (DESIGN.md §15) ---------------
+    from repro.launch.faults import (  # import-cycle-safe (launch is leaf)
+        Preempted,
+        injection_masks as faults_masks,
+        reseed_lost_lanes as faults_reseed,
+    )
+
+    if opts.retry_budget < 0:
+        raise ValueError(
+            f"retry_budget must be >= 0 (got {opts.retry_budget})")
+    retrying = opts.retry_budget > 0
+    if retrying and opts.sweep_mode not in _BATCHED_MODES:
+        raise ValueError(
+            "retry_budget > 0 re-seeds lanes through the batched init/eval "
+            "stack and requires sweep_mode='batched'/'megakernel' "
+            f"(got {opts.sweep_mode!r})")
+    if opts.retry_mode not in ("perturb", "uniform"):
+        raise ValueError(
+            f"unknown retry_mode {opts.retry_mode!r}; "
+            "expected 'perturb' or 'uniform'")
+    if retrying and opts.retry_mode == "uniform" and opts.retry_bounds is None:
+        raise ValueError(
+            "retry_mode='uniform' draws fresh points uniformly and needs "
+            "retry_bounds=(lower, upper)")
+    if opts.checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0 (got {opts.checkpoint_every})")
+    checkpointing = opts.checkpoint_every > 0
+    if checkpointing and not opts.checkpoint_dir:
+        raise ValueError(
+            "checkpoint_every > 0 needs checkpoint_dir to write snapshots to")
+    fault_plan = opts.fault_plan
+    injecting = fault_plan is not None and fault_plan.has_injections
+    preempt_at = None if fault_plan is None else fault_plan.preempt_at_sweep
+    # checkpointing / preemption / resume need the HOST in the sweep loop
+    # (segmented lax.while_loop with np snapshots in between) — impossible
+    # under an enclosing jit trace, so fail loudly instead of miscompiling
+    hosted = (checkpointing or resume_from is not None
+              or preempt_at is not None) and not _as_program
+    if hosted and isinstance(x0, jax.core.Tracer):
+        raise ValueError(
+            "checkpoint_every/fault_plan.preempt_at_sweep/resume_from drive "
+            "a host-segmented sweep loop and cannot run under an enclosing "
+            "jit trace; call run_multistart un-jitted (it jits its own "
+            "segments)")
+
     if opts.sweep_mode in _BATCHED_MODES:
         if opts.linesearch != "armijo":
             raise ValueError(
@@ -1065,26 +1218,37 @@ def run_multistart(
     if chunked:
         n_chunks = -(-B // C)
         pad = n_chunks * C - B
-        if pad:
-            x0 = jnp.concatenate([x0, jnp.broadcast_to(x0[:1], (pad, D))])
-        lanes = jax.lax.map(init_chunk, x0.reshape(n_chunks, C, D))
-        if pad:
-            # padding lanes are frozen-from-birth: never active, never counted
-            is_pad = (jnp.arange(n_chunks * C) >= B).reshape(n_chunks, C)
-            lanes = lanes._replace(
-                converged=jnp.logical_and(lanes.converged,
-                                          jnp.logical_not(is_pad)),
-                failed=jnp.logical_or(lanes.failed, is_pad),
-            )
+        B_flat = n_chunks * C
+
+        def init_lanes(X=None):
+            X = x0 if X is None else X
+            if pad:
+                X = jnp.concatenate([X, jnp.broadcast_to(X[:1], (pad, D))])
+            lanes = jax.lax.map(init_chunk, X.reshape(n_chunks, C, D))
+            if pad:
+                # padding lanes are frozen-from-birth: never active, never
+                # counted, never retried
+                is_pad = (jnp.arange(B_flat) >= B).reshape(n_chunks, C)
+                lanes = lanes._replace(
+                    converged=jnp.logical_and(lanes.converged,
+                                              jnp.logical_not(is_pad)),
+                    failed=jnp.logical_or(lanes.failed, is_pad),
+                )
+            return lanes
+
         def sweep(ls):
             new, rows, hist = jax.lax.map(step_chunk, ls)
             return new, jnp.sum(rows), jnp.sum(hist, axis=0)
 
         group, n_groups = C, n_chunks
     else:
-        lanes = init_chunk(x0)
+        B_flat = B
+        init_lanes = lambda X=None: init_chunk(x0 if X is None else X)
         sweep = step_chunk
         group, n_groups = B, 1
+    # flat-lane padding mask (all-False when unchunked/unpadded): the retry
+    # and injection passes address lanes on this flattened axis
+    is_pad_flat = jnp.arange(B_flat) >= B
 
     # physical objective-row accounting (batched path only): the step
     # functions report their own rows ((probes + 1) per lane actually
@@ -1130,13 +1294,15 @@ def run_multistart(
                 new, rows, hist = jax.lax.map(step_chunk, sub)
                 return new, jnp.sum(rows), jnp.sum(hist, axis=0)
 
-        def refresh_plans(k, lanes, aux):
+        def refresh_plans(k, lanes, aux, force=False):
             """Boundary-sweep plan refreshes, both skipped via lax.cond in
             between (the stored plans stay valid: frozen lanes never
             unfreeze, so the active set only shrinks). The per-chunk
             compaction plans are relative to the repacked layout, so a
-            repack refresh forces a compaction re-plan too."""
-            renew_g = (k % opts.repack_every) == 0
+            repack refresh forces a compaction re-plan too. `force` (a
+            quarantine re-admission or an elastic restore) breaks the
+            only-shrinks invariant and refreshes everything off-boundary."""
+            renew_g = jnp.logical_or((k % opts.repack_every) == 0, force)
             gperm, gcidx = jax.lax.cond(
                 renew_g,
                 lambda ls, a: gplan(_active_mask(ls).reshape(-1)),
@@ -1162,8 +1328,9 @@ def run_multistart(
                                               gperm, gcidx, inner_aux)
             return lanes, srows, cbuckets_arr[gcidx]
 
-        gp0 = gplan(_active_mask(lanes).reshape(-1))
-        aux0 = gp0 + fresh_inner_aux(lanes, gp0[0]) if compacting else gp0
+        def make_aux0(ls):
+            gp0 = gplan(_active_mask(ls).reshape(-1))
+            return gp0 + fresh_inner_aux(ls, gp0[0]) if compacting else gp0
     elif compacting:
         if chunked:
             plan_fn = jax.vmap(plan_one)  # each chunk compacts independently
@@ -1182,9 +1349,9 @@ def run_multistart(
                                                 perm, bidx)
                 return new, rows
 
-        aux0 = plan_fn(_active_mask(lanes))
+        make_aux0 = lambda ls: plan_fn(_active_mask(ls))
     else:
-        aux0 = ()
+        make_aux0 = lambda ls: ()
 
     # ------------------------------------------------------------------
     # Auto-scheduling controller (schedule="auto") / traced-plan replay
@@ -1356,7 +1523,9 @@ def run_multistart(
             )
 
         def sched_body(carry):
-            k, lanes, _, _, aux, rows, trips, astate = carry
+            k = carry.k
+            lanes, rkey, n_restarts, rrows, force = _prologue(carry)
+            astate, aux = carry.astate, carry.aux
             w = k // every
             boundary = (k % every) == 0
             if opts.schedule == "replay":
@@ -1374,17 +1543,24 @@ def run_multistart(
             # plan is dynamic — static executors never read aux, and
             # dynamic windows always refresh because the decision precedes
             # this refresh, so a static→dynamic switch sees a current
-            # layout; stored plans stay valid in between (the active set
-            # only shrinks)
+            # layout; stored plans stay valid in between ONLY while the
+            # active set shrinks, so a quarantine re-admission or an
+            # elastic restore (`force`) refreshes mid-window too
             aux = jax.lax.cond(
-                jnp.logical_and(boundary, astate.plan >= n_ladders),
+                jnp.logical_and(jnp.logical_or(boundary, force),
+                                astate.plan >= n_ladders),
                 fresh_aux, lambda ls: aux, lanes)
             lanes, srows, strips, shist = jax.lax.switch(
                 astate.plan, executors, (lanes, aux))
             astate = astate._replace(hist=astate.hist + shist, trace=trace)
-            n_conv, n_act = counts(lanes)
-            return (k + 1, lanes, n_conv, n_act, aux, rows + srows,
-                    trips + strips, astate)
+            if injecting:
+                lanes = apply_faults(k, lanes)
+            n_conv, n_act = counts(lanes, n_restarts)
+            return EngineCarry(
+                k=k + 1, lanes=lanes, n_conv=n_conv, n_act=n_act, aux=aux,
+                rows=carry.rows + rrows + srows,
+                trips=carry.trips + strips, astate=astate, rkey=rkey,
+                n_restarts=n_restarts, replan=jnp.zeros((), bool))
 
         astate0 = _AutoState(
             plan=jnp.asarray(n_ladders - 1, jnp.int32),  # full-ladder static
@@ -1396,35 +1572,152 @@ def run_multistart(
             hist=jnp.zeros((opts.ls_iters + 1,), jnp.int32),
             trace=jnp.zeros((n_windows, n_plans), jnp.int32),
         )
-        aux0 = fresh_aux(lanes)
+        make_aux0 = fresh_aux
+    else:
+        astate0 = ()
 
-    def counts(lanes):
+    # ------------------------------------------------------------------
+    # Quarantine/retry + deterministic fault injection (DESIGN.md §15).
+    # Both address lanes on the FLATTENED lane axis (0..B_flat-1).
+    # ------------------------------------------------------------------
+    def _flat(ls):
+        if chunked:
+            return jax.tree.map(
+                lambda a: a.reshape((B_flat,) + a.shape[2:]), ls)
+        return ls
+
+    def _unflat(ls):
+        if chunked:
+            return jax.tree.map(
+                lambda a: a.reshape((n_chunks, C) + a.shape[1:]), ls)
+        return ls
+
+    if retrying:
+        def retry_pass(lanes, rkey, n_restarts):
+            """Heal failed lanes with budget left: re-seed x, re-init the
+            lane through the same batched init as solve start (fresh
+            identity-H direction state, fresh converged/failed flags), and
+            charge the re-init's eval cost. Runs under lax.cond so sweeps
+            with nothing to heal skip the whole pass."""
+            flat = _flat(lanes)
+            eligible = jnp.logical_and(
+                flat.failed,
+                jnp.logical_and(jnp.logical_not(is_pad_flat),
+                                n_restarts < opts.retry_budget))
+            any_r = jnp.any(eligible)
+
+            def heal(flat, rkey, n_restarts):
+                key = jax.random.wrap_key_data(rkey)
+                key, sub = jax.random.split(key)
+                if opts.retry_mode == "uniform":
+                    lo, hi = opts.retry_bounds
+                    X = faults_reseed(sub, flat.x, eligible, lo, hi)
+                else:
+                    # perturb the lane's own iterate; a NaN-poisoned
+                    # iterate is re-centered (bounds midpoint, else 0)
+                    mid = (0.5 * (opts.retry_bounds[0]
+                                  + opts.retry_bounds[1])
+                           if opts.retry_bounds is not None else 0.0)
+                    base = jnp.where(jnp.isfinite(flat.x), flat.x, mid)
+                    noise = opts.retry_sigma * jax.random.normal(
+                        sub, flat.x.shape, flat.x.dtype)
+                    X = jnp.where(eligible[:, None], base + noise, flat.x)
+                fresh = batch_lanes_init(bobj, bstrategy, X, opts.theta)
+
+                def sel(n, o):
+                    e = eligible.reshape(
+                        eligible.shape + (1,) * (n.ndim - 1))
+                    return jnp.where(e, n, o)
+
+                merged = jax.tree.map(sel, fresh, flat)
+                # eval counters are cumulative across a lane's lives: the
+                # re-init's cost ADDS to the history instead of resetting
+                merged = merged._replace(
+                    n_evals=flat.n_evals
+                    + jnp.where(eligible, fresh.n_evals, 0))
+                return (merged, jax.random.key_data(key),
+                        n_restarts + eligible.astype(jnp.int32),
+                        jnp.asarray(B_flat, jnp.int32))
+
+            def skip(flat, rkey, n_restarts):
+                return flat, rkey, n_restarts, jnp.zeros((), jnp.int32)
+
+            flat, rkey, n_restarts, rrows = jax.lax.cond(
+                any_r, heal, skip, flat, rkey, n_restarts)
+            return _unflat(flat), rkey, n_restarts, rrows, any_r
+
+    if injecting:
+        def apply_faults(k, lanes):
+            """Post-sweep injections from the fault plan, keyed on the
+            carried sweep counter k (deterministic under jit and across
+            resume). NaN injection simulates a numeric escape (g <- NaN,
+            failed); kill freezes the lane as failed with state intact.
+            Padding lanes are never targeted."""
+            flat = _flat(lanes)
+            nan_m, kill_m = faults_masks(fault_plan, k, B_flat)
+            nan_m = jnp.logical_and(nan_m, jnp.logical_not(is_pad_flat))
+            kill_m = jnp.logical_and(kill_m, jnp.logical_not(is_pad_flat))
+            flat = flat._replace(
+                g=jnp.where(nan_m[:, None],
+                            jnp.full_like(flat.g, jnp.nan), flat.g),
+                failed=jnp.logical_or(flat.failed,
+                                      jnp.logical_or(nan_m, kill_m)),
+            )
+            return _unflat(flat)
+
+    def counts(lanes, n_restarts):
         """Global (converged, active) lane counts. The collective (when the
         distributed driver passes a psum) lives in the loop *body*, so the
-        while cond only reads replicated scalars from the carry."""
+        while cond only reads replicated scalars from the carry. A failed
+        lane with retry budget left counts as ACTIVE: the stop protocol
+        must not exit the loop with heals still pending."""
         n_conv = count(jnp.sum(lanes.converged.astype(jnp.int32)))
-        n_act = count(jnp.sum(_active_mask(lanes).astype(jnp.int32)))
+        act = _active_mask(lanes).reshape(-1)
+        if retrying:
+            act = jnp.logical_or(
+                act,
+                jnp.logical_and(
+                    lanes.failed.reshape(-1),
+                    jnp.logical_and(jnp.logical_not(is_pad_flat),
+                                    n_restarts < opts.retry_budget)))
+        n_act = count(jnp.sum(act.astype(jnp.int32)))
         return n_conv, n_act
 
+    def _prologue(carry):
+        """Start-of-sweep healing: quarantined lanes with budget left are
+        re-seeded BEFORE the sweep runs, so the sweep that follows already
+        steps the healed lane. Returns `force` = the gather plans must be
+        refreshed off-boundary (re-admission / elastic restore broke the
+        active-set-only-shrinks invariant the stored plans rely on)."""
+        lanes, rkey, n_restarts = carry.lanes, carry.rkey, carry.n_restarts
+        rrows = jnp.zeros((), jnp.int32)
+        force = carry.replan
+        if retrying:
+            lanes, rkey, n_restarts, rrows, retried = retry_pass(
+                lanes, rkey, n_restarts)
+            force = jnp.logical_or(force, retried)
+        return lanes, rkey, n_restarts, rrows, force
+
     def cond(carry):
-        # shared by the static (7-tuple) and scheduling (8-tuple) carries
         return jnp.logical_and(
-            carry[0] < opts.iter_max,
-            jnp.logical_and(carry[2] < required_c, carry[3] > 0),
+            carry.k < opts.iter_max,
+            jnp.logical_and(carry.n_conv < required_c, carry.n_act > 0),
         )
 
     def body(carry):
-        k, lanes, _, _, aux, rows, trips = carry
+        k = carry.k
+        lanes, rkey, n_restarts, rrows, force = _prologue(carry)
+        aux = carry.aux
         if repacking:
-            aux = refresh_plans(k, lanes, aux)
+            aux = refresh_plans(k, lanes, aux, force)
             lanes, srows, strips = repacked(lanes, aux)
         elif compacting:
             # refresh the partition/bucket on boundary sweeps only — under
             # lax.cond the plan (argsort + bucket search) is actually
             # skipped in between, which is what lets compact_every > 1
             # amortize it; the stored plan stays valid meanwhile (the
-            # active set only shrinks)
-            renew = (k % opts.compact_every) == 0
+            # active set only shrinks, except under `force`)
+            renew = jnp.logical_or((k % opts.compact_every) == 0, force)
             aux = jax.lax.cond(
                 renew,
                 lambda ls, a: plan_fn(_active_mask(ls)),
@@ -1437,51 +1730,174 @@ def run_multistart(
         else:
             lanes, srows, _ = sweep(lanes)
             strips = trips_static
-        n_conv, n_act = counts(lanes)
-        return (k + 1, lanes, n_conv, n_act, aux, rows + srows,
-                trips + strips)
+        if injecting:
+            lanes = apply_faults(k, lanes)
+        n_conv, n_act = counts(lanes, n_restarts)
+        return EngineCarry(
+            k=k + 1, lanes=lanes, n_conv=n_conv, n_act=n_act, aux=aux,
+            rows=carry.rows + rrows + srows, trips=carry.trips + strips,
+            astate=carry.astate, rkey=rkey, n_restarts=n_restarts,
+            replan=jnp.zeros((), bool))
 
-    n_conv0, n_act0 = counts(lanes)
-    if scheduling:
-        out = jax.lax.while_loop(
-            cond, sched_body,
-            (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0,
-             eval_rows0, jnp.zeros((), jnp.int32), astate0),
-        )
-        k, lanes, eval_rows, map_trips = out[0], out[1], out[5], out[6]
-        schedule_trace = out[7].trace
+    # raw uint32 key data, not a typed key: snapshots np.asarray it and
+    # shard_map moves it across the mesh boundary, neither of which typed
+    # PRNG key arrays support cleanly
+    if retry_key is None:
+        retry_key = jax.random.key(0)
+    if jnp.issubdtype(jnp.asarray(retry_key).dtype, jax.dtypes.prng_key):
+        rkey0 = jax.random.key_data(retry_key)
     else:
-        k, lanes, _, _, _, eval_rows, map_trips = jax.lax.while_loop(
-            cond, body,
-            (jnp.zeros((), jnp.int32), lanes, n_conv0, n_act0, aux0,
-             eval_rows0, jnp.zeros((), jnp.int32)),
-        )
-        schedule_trace = None
+        rkey0 = jnp.asarray(retry_key, jnp.uint32)
 
-    if chunked:
-        lanes = jax.tree.map(
-            lambda a: a.reshape((-1,) + a.shape[2:])[:B], lanes
+    def make_carry0(X=None, rk=None):
+        # the optional args exist for the hosted driver's cross-call jit
+        # cache (start values become traced inputs instead of baked
+        # constants); every in-graph caller uses the no-arg closure form
+        lanes = init_lanes(X)
+        n_restarts0 = jnp.zeros((B_flat,), jnp.int32)
+        n_conv0, n_act0 = counts(lanes, n_restarts0)
+        return EngineCarry(
+            k=jnp.zeros((), jnp.int32), lanes=lanes, n_conv=n_conv0,
+            n_act=n_act0, aux=make_aux0(lanes), rows=eval_rows0,
+            trips=jnp.zeros((), jnp.int32), astate=astate0,
+            rkey=rkey0 if rk is None else rk,
+            n_restarts=n_restarts0, replan=jnp.zeros((), bool))
+
+    def finalize(carry):
+        k, lanes = carry.k, carry.lanes
+        schedule_trace = carry.astate.trace if scheduling else None
+        if chunked:
+            lanes = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:])[:B], lanes
+            )
+        status = jnp.where(
+            lanes.converged,
+            CONVERGED,
+            jnp.where(
+                jnp.logical_or(lanes.failed, k >= opts.iter_max),
+                DIVERGED, STOPPED
+            ),
+        ).astype(jnp.int32)
+        return BFGSResult(
+            x=lanes.x,
+            fval=lanes.f,
+            grad_norm=jax.vmap(jnp.linalg.norm)(lanes.g),
+            status=status,
+            iterations=k,
+            n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
+            n_evals=lanes.n_evals,
+            eval_rows=carry.rows,
+            map_trips=carry.trips,
+            schedule_trace=schedule_trace,
+            n_restarts=carry.n_restarts[:B],
+            n_failed=jnp.sum(lanes.failed.astype(jnp.int32)),
         )
 
-    status = jnp.where(
-        lanes.converged,
-        CONVERGED,
-        jnp.where(
-            jnp.logical_or(lanes.failed, k >= opts.iter_max), DIVERGED, STOPPED
-        ),
-    ).astype(jnp.int32)
-    return BFGSResult(
-        x=lanes.x,
-        fval=lanes.f,
-        grad_norm=jax.vmap(jnp.linalg.norm)(lanes.g),
-        status=status,
-        iterations=k,
-        n_converged=jnp.sum(lanes.converged.astype(jnp.int32)),
-        n_evals=lanes.n_evals,
-        eval_rows=eval_rows,
-        map_trips=map_trips,
-        schedule_trace=schedule_trace,
-    )
+    step_body = sched_body if scheduling else body
+
+    if _as_program:
+        return MultistartProgram(make_carry0=make_carry0, cond=cond,
+                                 body=step_body, finalize=finalize,
+                                 opts=opts, required_c=required_c)
+
+    if not hosted:
+        return finalize(jax.lax.while_loop(cond, step_body, make_carry0()))
+
+    # ------------------------------------------------------------------
+    # Host-segmented driver (checkpoint / preempt / resume): run the SAME
+    # cond/body as segments of lax.while_loop bounded at the next host
+    # boundary (checkpoint cadence, preemption sweep), with np snapshots
+    # through checkpoint/manager.py in between. Resume is array-equal
+    # because the sweeps replayed from a snapshot read nothing outside
+    # the carry (DESIGN.md §15).
+    # ------------------------------------------------------------------
+    from repro.checkpoint import manager as ckpt_manager
+
+    # Cache the jitted init/segment/finalize across run_multistart calls:
+    # each call builds fresh closures, and without the cache every solve
+    # would re-trace + recompile them — the checkpoint-overhead gate
+    # (BENCH_CHECKPOINT_CEIL vs the once-jitted in-device loop) measures
+    # steady-state snapshot cost, not compile churn. Keyed on everything
+    # the traced computation can depend on; start values and retry keys
+    # are traced INPUTS of the cached init, never baked constants.
+    cache_key = ("hosted", _hashable(f), type(strategy),
+                 _freeze_config(strategy), opts, x0.shape, str(x0.dtype),
+                 None if pcount is None else _hashable(pcount))
+    cached = _HOSTED_JIT_CACHE.get(cache_key)
+    if cached is None:
+        cached = (
+            jax.jit(lambda X, rk: make_carry0(X, rk)),
+            jax.jit(lambda c, k_end: jax.lax.while_loop(
+                lambda cc: jnp.logical_and(cond(cc), cc.k < k_end),
+                step_body, c)),
+            jax.jit(finalize),
+            # the loop evaluates cond on the host between segments; eager
+            # op-by-op dispatch of its reductions costs more than the
+            # segment itself at small cells, so it is jitted too
+            jax.jit(cond),
+        )
+        _HOSTED_JIT_CACHE[cache_key] = cached
+    carry0_jit, seg, fin, cond_jit = cached
+
+    if resume_from is not None:
+        # eval_shape: restore needs only the carry's structure/dtypes, and
+        # skipping the real init skips its B objective evaluations
+        like = jax.eval_shape(make_carry0)
+        carry = ckpt_manager.restore(resume_from, like)
+    else:
+        carry = carry0_jit(x0, rkey0)
+
+    # Snapshot writes run on a single background thread: the npz write +
+    # COMMIT rename overlap the next segment's compute, leaving only the
+    # host gather on the critical path. At most one write is in flight —
+    # the writer is joined before the next save, before a Preempted raise,
+    # and before returning, so manager.latest_step is deterministic at
+    # every boundary a caller (or the resume parity suite) can observe.
+    pending: list = []
+
+    def _join_writer():
+        if pending:
+            t, err = pending.pop()
+            t.join()
+            if err:
+                raise err[0]
+
+    def _save_async(c):
+        _join_writer()
+        host = jax.device_get(c)
+        err: list = []
+
+        def _write():
+            try:
+                ckpt_manager.save(opts.checkpoint_dir, int(host.k), host,
+                                  keep=opts.checkpoint_keep)
+            except BaseException as e:  # surfaced at the next join
+                err.append(e)
+
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        pending.append((t, err))
+
+    every_ck = opts.checkpoint_every
+    while bool(cond_jit(carry)):
+        k_now = int(carry.k)
+        if preempt_at is not None and k_now >= preempt_at:
+            # adversarial death at a sweep boundary: NOTHING past the last
+            # cadence snapshot is saved (the resume parity suite relies on
+            # the lost tail being replayed exactly)
+            _join_writer()
+            raise Preempted(k_now, opts.checkpoint_dir)
+        k_end = opts.iter_max
+        if every_ck:
+            k_end = min(k_end, (k_now // every_ck + 1) * every_ck)
+        if preempt_at is not None:
+            k_end = min(k_end, preempt_at)
+        carry = seg(carry, jnp.asarray(k_end, jnp.int32))
+        if every_ck and (int(carry.k) % every_ck == 0
+                         or not bool(cond_jit(carry))):
+            _save_async(carry)
+    _join_writer()
+    return fin(carry)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,15 @@ class LBFGSOptions:
     schedule_plans: Optional[tuple] = None
     auto_ladders: Optional[tuple] = None
     auto_active_frac: float = 0.5
+    # fault tolerance (engine; DESIGN.md §15)
+    retry_budget: int = 0
+    retry_mode: str = "perturb"  # "perturb" | "uniform"
+    retry_sigma: float = 0.1
+    retry_bounds: Optional[tuple] = None
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3
+    fault_plan: Optional[object] = None
 
 
 class LBFGSMemory(NamedTuple):
@@ -164,6 +173,14 @@ def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
         schedule_plans=opts.schedule_plans,
         auto_ladders=opts.auto_ladders,
         auto_active_frac=opts.auto_active_frac,
+        retry_budget=opts.retry_budget,
+        retry_mode=opts.retry_mode,
+        retry_sigma=opts.retry_sigma,
+        retry_bounds=opts.retry_bounds,
+        checkpoint_every=opts.checkpoint_every,
+        checkpoint_dir=opts.checkpoint_dir,
+        checkpoint_keep=opts.checkpoint_keep,
+        fault_plan=opts.fault_plan,
     )
 
 
@@ -179,7 +196,10 @@ def batched_lbfgs(
     x0: jnp.ndarray,  # (B, D)
     opts: LBFGSOptions = LBFGSOptions(),
     pcount: Optional[Callable] = None,
+    retry_key=None,
+    resume_from: Optional[str] = None,
 ) -> BFGSResult:
     """Thin wrapper over engine.run_multistart with the LBFGS strategy."""
     strategy, eopts = make_lbfgs_solver(opts)
-    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount)
+    return E.run_multistart(f, x0, strategy, eopts, pcount=pcount,
+                            retry_key=retry_key, resume_from=resume_from)

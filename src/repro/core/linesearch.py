@@ -244,7 +244,12 @@ def armijo_backtracking_batch(
     state = (
         jnp.where(any_ok, alpha_acc, alphas[L - 1] * shrink),
         jnp.where(any_ok, f_acc, F[-1]),
-        any_ok,
+        # a NaN-poisoned lane (NaN F0 or NaN directional derivative — e.g.
+        # failed/quarantined, awaiting a retry re-seed) has NaN Armijo
+        # thresholds and can NEVER accept: start it `done` so it cannot
+        # force every remaining fallback rung to launch on every sweep
+        # (NaN only — a -inf threshold keeps the pre-existing behavior)
+        jnp.logical_or(any_ok, jnp.isnan(rhs[0])),
         jnp.asarray(L, jnp.int32),
         # still-searching lanes carry rung = K (exhausted) until a fallback
         # probe accepts, so exhaustion reports the same K as the full ladder

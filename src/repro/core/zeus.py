@@ -59,6 +59,23 @@ class ZeusOptions:
     schedule_every: Optional[int] = None
     # replay-forced plan indices (with schedule="replay")
     schedule_plans: Optional[tuple] = None
+    # overrides the solver opts' fault-tolerance knobs (engine; DESIGN.md
+    # §15): per-lane quarantine/retry budget + re-seed policy, sweep-carry
+    # checkpoint cadence/location, deterministic fault injection. The
+    # engine's retry_bounds default to this solve's (lower, upper).
+    retry_budget: Optional[int] = None
+    retry_mode: Optional[str] = None  # "perturb" | "uniform"
+    retry_sigma: Optional[float] = None
+    checkpoint_every: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: Optional[int] = None
+    fault_plan: Optional[object] = None  # launch.faults.FaultPlan
+
+
+# the quarantine re-seed stream is DERIVED from the solve key (fold_in, not
+# split): existing fixed-seed runs keep their exact PSO/starts bits, and
+# distributed shards fold their device index on top for per-shard streams
+_RETRY_FOLD = 0x7E05  # arbitrary domain-separation tag
 
 
 class ZeusResult(NamedTuple):
@@ -67,6 +84,8 @@ class ZeusResult(NamedTuple):
     raw: BFGSResult  # all lanes (for clustering / diagnostics)
     n_converged: jnp.ndarray
     pso_best_f: jnp.ndarray  # global best after phase 1 (inf if PSO skipped)
+    n_failed: Optional[jnp.ndarray] = None  # lanes failed at solve end
+    n_restarts: Optional[jnp.ndarray] = None  # (B,) quarantine re-seeds
 
 
 def _solver_name(opts: ZeusOptions) -> str:
@@ -107,6 +126,14 @@ def _phase2_setup(opts: ZeusOptions):
                 schedule_plans=b.schedule_plans,
                 auto_ladders=b.auto_ladders,
                 auto_active_frac=b.auto_active_frac,
+                retry_budget=b.retry_budget,
+                retry_mode=b.retry_mode,
+                retry_sigma=b.retry_sigma,
+                retry_bounds=b.retry_bounds,
+                checkpoint_every=b.checkpoint_every,
+                checkpoint_dir=b.checkpoint_dir,
+                checkpoint_keep=b.checkpoint_keep,
+                fault_plan=b.fault_plan,
             )
     elif name == "bfgs":
         solver_opts = opts.bfgs
@@ -127,13 +154,28 @@ def _phase2_setup(opts: ZeusOptions):
         eopts = dataclasses.replace(eopts, schedule_every=opts.schedule_every)
     if opts.schedule_plans is not None:
         eopts = dataclasses.replace(eopts, schedule_plans=opts.schedule_plans)
+    for field in ("retry_budget", "retry_mode", "retry_sigma",
+                  "checkpoint_every", "checkpoint_dir", "checkpoint_keep",
+                  "fault_plan"):
+        v = getattr(opts, field)
+        if v is not None:
+            eopts = dataclasses.replace(eopts, **{field: v})
     return strategy, eopts
 
 
-def solve_phase2(f, x0, opts: ZeusOptions, pcount=None) -> BFGSResult:
-    """Phase 2 through the engine: registry lookup -> run_multistart."""
+def solve_phase2(f, x0, opts: ZeusOptions, pcount=None, retry_key=None,
+                 bounds=None, resume_from=None) -> BFGSResult:
+    """Phase 2 through the engine: registry lookup -> run_multistart.
+
+    `bounds=(lower, upper)` backstops the engine's retry_bounds (quarantine
+    re-seed box) when the solver opts leave them unset — the zeus driver
+    passes its own search box so retry_mode="uniform" works untouched."""
     strategy, eopts = _phase2_setup(opts)
-    return run_multistart(f, x0, strategy, eopts, pcount=pcount)
+    if bounds is not None and eopts.retry_bounds is None:
+        eopts = dataclasses.replace(
+            eopts, retry_bounds=(float(bounds[0]), float(bounds[1])))
+    return run_multistart(f, x0, strategy, eopts, pcount=pcount,
+                          retry_key=retry_key, resume_from=resume_from)
 
 
 def uniform_starts(key, n: int, dim: int, lower: float, upper: float, dtype):
@@ -161,8 +203,15 @@ def zeus(
     lower: float,
     upper: float,
     opts: ZeusOptions = ZeusOptions(),
+    resume: Optional[str] = None,  # checkpoint root to restore phase 2 from
 ) -> ZeusResult:
-    """Single-host ZEUS (Alg. 7). jit-able end to end."""
+    """Single-host ZEUS (Alg. 7). jit-able end to end (checkpointing /
+    fault preemption / `resume` excepted: those segment the phase-2 sweep
+    loop on the host and must run un-jitted; the segments jit themselves).
+
+    `resume` replays phase 1 (same key => bit-same swarm, cheap relative to
+    phase 2) and restores the phase-2 carry from the newest COMMITted
+    snapshot under `resume` — array-equal to the uninterrupted solve."""
     dtype = jnp.dtype(opts.dtype)
     if opts.use_pso:
         # iter_pso=0 still initialises the swarm — pure random multistart.
@@ -173,15 +222,41 @@ def zeus(
         # no PSO phase at all — no wasted objective evaluations
         starts, pso_best_f = uniform_starts(
             key, opts.pso.n_particles, dim, lower, upper, dtype)
-    res = solve_phase2(f, starts, opts)
+    res = solve_phase2(f, starts, opts,
+                       retry_key=jax.random.fold_in(key, _RETRY_FOLD),
+                       bounds=(lower, upper), resume_from=resume)
     best_x, best_f = _select_best(res)
+    _warn_if_all_lanes_failed(res, starts.shape[0])
     return ZeusResult(
         best_x=best_x,
         best_f=best_f,
         raw=res,
         n_converged=res.n_converged,
         pso_best_f=pso_best_f,
+        n_failed=res.n_failed,
+        n_restarts=res.n_restarts,
     )
+
+
+def _warn_if_all_lanes_failed(res: BFGSResult, n_lanes: int):
+    """RuntimeWarning when the solve ends with EVERY lane failed — the
+    caller would otherwise read a NaN/garbage best_x with no signal that
+    the retry budget (if any) was exhausted on all of them. Host-side
+    only: under jit the counters are tracers and the check is skipped."""
+    nf = res.n_failed
+    if nf is None or isinstance(nf, jax.core.Tracer):
+        return
+    if int(nf) >= n_lanes:
+        import warnings
+
+        budget = (int(jnp.max(res.n_restarts))
+                  if res.n_restarts is not None else 0)
+        warnings.warn(
+            f"all {n_lanes} lanes ended failed (non-finite escape); "
+            f"quarantine retries used per lane: up to {budget}. best_x is "
+            "the least-bad failed iterate — consider retry_budget/"
+            "retry_mode='uniform' or a different search box",
+            RuntimeWarning, stacklevel=3)
 
 
 def zeus_jit(f, dim, lower, upper, opts: ZeusOptions = ZeusOptions()):

@@ -1,40 +1,56 @@
-"""Fault-tolerance & straggler policy for pod-scale runs.
+"""Fault tolerance for solves: fault plans, preemption, lane re-seeding.
 
-What failure looks like at 1000+ nodes and what this framework does:
+This module is the engine's fault-handling toolbox — everything here is
+wired into `core/engine.py`'s sweep driver (it used to be aspirational;
+DESIGN.md §15 documents the machinery that now exists):
 
-  * **Host/chip failure mid-run** — the job scheduler restarts the process
-    group; `launch/train.py --resume` restores the newest COMMITted
-    checkpoint (two-phase commit means torn writes are never resumed
-    into) and the index-based data pipeline replays from the restored
-    step — no data-order drift. ZEUS optimizer runs are even cheaper: the
-    swarm is a pure function of (seed, lane), so lost lanes are re-seeded,
-    and `required_c` semantics mean the answer tolerates lane loss.
+  * **Preemption / crash mid-solve** — `EngineOptions(checkpoint_every=n,
+    checkpoint_dir=...)` snapshots the full while-loop carry through
+    `checkpoint/manager.py`'s two-phase-commit path every n sweeps;
+    `run_multistart(resume_from=...)` / `zeus(resume=...)` restore the
+    newest COMMITted snapshot and the resumed solve is ARRAY-EQUAL to the
+    uninterrupted one (PRNG keys and every counter live in the carry).
+    `Preempted` is what the driver raises when a `FaultPlan` asks it to die
+    at a sweep boundary — the CI harness for that contract.
 
-  * **Stragglers** — `StepGuard` wraps each step with a deadline. Policy
-    ladder: log a warning (default) → snapshot + skip the step's data
-    shard (`on_breach="skip"`) → abort for reschedule
+  * **Numeric blow-ups (NaN/Inf escapes)** — `EngineOptions(retry_budget=k)`
+    quarantines a failed lane and re-seeds it inside the carry (perturbed
+    restart from its last finite iterate, or a fresh uniform draw via
+    `reseed_lost_lanes`) up to k times per lane, counted in
+    `BFGSResult.n_restarts`. The lane re-enters the active set — the first
+    real lane re-admission event the solve-service direction needs.
+
+  * **Deterministic fault injection** — `FaultPlan` is a seeded, hashable
+    schedule of {inject-NaN-into-lane-g, kill-lane, preempt-at-sweep}
+    events threaded through the engine behind `EngineOptions(fault_plan=)`.
+    Same plan + same solve => same faults at the same sweeps, under jit and
+    across resume (injections key off the sweep counter k, which is in the
+    carry), so CI can prove quarantine and preempt-resume end to end.
+
+  * **Stragglers** — `StepGuard` wraps host-level steps with a deadline.
+    Policy ladder: log a warning (default) → skip the next step's work
+    (`on_breach="skip"`, one skip per breach) → abort for reschedule
     (`on_breach="abort"`). The paper's own early-stop (`required_c`) is
     the optimizer-level analogue: nobody waits for the slowest lane.
-
-  * **Elastic re-scale** — checkpoints are mesh-agnostic (restore takes
-    the *current* shardings; see checkpoint/manager.py), so a job can come
-    back on 192 chips after losing a rack, or expand to 512. ZEUS swarms
-    re-shard by re-slicing the lane axis.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass
 class StepGuard:
     deadline_s: float = 0.0  # 0 = disabled
     on_breach: str = "warn"  # warn | skip | abort
-    breaches: int = 0
+    breaches: int = 0  # cumulative breach count (log/telemetry; never reset)
     last_duration: float = 0.0
+    # one-shot flag: armed by a breach, consumed by should_skip_next() —
+    # a single slow step skips at most ONE subsequent step, instead of the
+    # pre-fix behavior where any breach skipped every step forever
+    pending_skip: bool = False
 
     @contextlib.contextmanager
     def step(self, step_idx: int):
@@ -45,6 +61,7 @@ class StepGuard:
             self.last_duration = time.perf_counter() - t0
             if self.deadline_s and self.last_duration > self.deadline_s:
                 self.breaches += 1
+                self.pending_skip = True
                 msg = (f"[faults] step {step_idx} took "
                        f"{self.last_duration:.2f}s > deadline "
                        f"{self.deadline_s:.2f}s (breach #{self.breaches})")
@@ -53,14 +70,118 @@ class StepGuard:
                 print(msg, flush=True)
 
     def should_skip_next(self) -> bool:
-        return self.on_breach == "skip" and self.breaches > 0
+        """Consume the pending skip: True at most once per breach."""
+        if self.on_breach == "skip" and self.pending_skip:
+            self.pending_skip = False
+            return True
+        return False
+
+
+class Preempted(RuntimeError):
+    """A FaultPlan preempted the solve at a sweep boundary.
+
+    The newest COMMITted checkpoint (if checkpointing was on) survives;
+    resume with run_multistart(resume_from=...) / zeus(resume=...)."""
+
+    def __init__(self, sweep: int, checkpoint_dir: Optional[str] = None):
+        self.sweep = int(sweep)
+        self.checkpoint_dir = checkpoint_dir
+        where = (f"; resume from checkpoints under {checkpoint_dir!r}"
+                 if checkpoint_dir else " (no checkpointing configured)")
+        super().__init__(f"solve preempted at sweep boundary {sweep}{where}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic schedule of injected faults, keyed on the sweep counter.
+
+    Hashable (tuples of ints only) so it can live inside the frozen
+    EngineOptions. Events fire when the engine's carried sweep counter k
+    equals the event's sweep — a plan therefore replays identically under
+    jit, across runs, and across checkpoint resume (k is in the carry).
+
+      nan_grads:  ((sweep, lane), ...) — overwrite lane's gradient with NaN
+                  after sweep `sweep` executes, marking it failed: the
+                  numeric-blow-up injection the quarantine/retry path heals.
+      kill_lanes: ((sweep, lane), ...) — hard-freeze the lane as failed
+                  (state left intact): a lost-lane event.
+      preempt_at_sweep: die (raise Preempted) when the host driver reaches
+                  this sweep boundary, WITHOUT saving post-boundary state —
+                  the adversarial preemption the resume parity suite uses.
+
+    Lane indices address the engine's flattened local lane axis (0..B-1;
+    under distributed_zeus each shard applies the plan to its own local
+    lanes — injection plans are a single-host debug harness first).
+    """
+
+    nan_grads: Tuple[Tuple[int, int], ...] = ()
+    kill_lanes: Tuple[Tuple[int, int], ...] = ()
+    preempt_at_sweep: Optional[int] = None
+
+    def __post_init__(self):
+        for field in ("nan_grads", "kill_lanes"):
+            events = tuple(
+                (int(s), int(l)) for s, l in getattr(self, field))
+            for s, l in events:
+                if s < 0 or l < 0:
+                    raise ValueError(
+                        f"{field} entries must be (sweep >= 0, lane >= 0) "
+                        f"pairs (got ({s}, {l}))")
+            object.__setattr__(self, field, events)
+        if self.preempt_at_sweep is not None:
+            if int(self.preempt_at_sweep) < 0:
+                raise ValueError(
+                    f"preempt_at_sweep must be >= 0 "
+                    f"(got {self.preempt_at_sweep})")
+            object.__setattr__(
+                self, "preempt_at_sweep", int(self.preempt_at_sweep))
+
+    @property
+    def has_injections(self) -> bool:
+        return bool(self.nan_grads or self.kill_lanes)
+
+    @staticmethod
+    def random(seed: int, n_sweeps: int, n_lanes: int, n_nan: int = 0,
+               n_kill: int = 0,
+               preempt_at_sweep: Optional[int] = None) -> "FaultPlan":
+        """Seeded plan generator: same (seed, shape) args => same plan."""
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+
+        def draw(n):
+            return tuple(
+                (int(rng.integers(0, max(1, n_sweeps))),
+                 int(rng.integers(0, max(1, n_lanes))))
+                for _ in range(n))
+
+        return FaultPlan(nan_grads=draw(n_nan), kill_lanes=draw(n_kill),
+                         preempt_at_sweep=preempt_at_sweep)
+
+
+def injection_masks(plan: FaultPlan, k, n_lanes: int):
+    """(nan_mask, kill_mask): (n_lanes,) bool masks of the plan's events
+    firing at (traced) sweep counter k. The event tables are host constants,
+    so this is jit-safe and adds no work when the plan is empty."""
+    import jax.numpy as jnp
+
+    def mask(events):
+        if not events:
+            return jnp.zeros((n_lanes,), bool)
+        sweeps = jnp.asarray([s for s, _ in events], jnp.int32)
+        lanes = jnp.asarray([l for _, l in events], jnp.int32)
+        hit = (sweeps == k).astype(jnp.int32)
+        return jnp.zeros((n_lanes,), jnp.int32).at[lanes].add(hit) > 0
+
+    return mask(plan.nan_grads), mask(plan.kill_lanes)
 
 
 def reseed_lost_lanes(key, swarm_x, lost_mask, lower: float, upper: float):
-    """Replace particles owned by a failed host with fresh uniform draws.
+    """Replace lost/quarantined lanes with fresh uniform draws.
 
-    Multistart tolerates lane loss by construction; this keeps the swarm
-    at full strength after an elastic restart."""
+    Multistart tolerates lane loss by construction; this keeps the swarm at
+    full strength after an elastic restart, and is the `retry_mode="uniform"`
+    re-seeder for the engine's quarantine/retry path."""
     import jax
     import jax.numpy as jnp
 

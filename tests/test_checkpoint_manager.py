@@ -1,0 +1,127 @@
+"""checkpoint/manager.py contract tests: two-phase commit, keep-N GC,
+torn writes, structure mismatch, ShapeDtypeStruct restore targets.
+
+These are the properties the fault-tolerant engine driver (DESIGN.md §15)
+leans on: a crash can never leave a snapshot that restore() would trust,
+and resume targets built from jax.eval_shape round-trip exactly.
+"""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager
+
+
+def _tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "x": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+        "k": jnp.asarray(seed, jnp.int32),
+        "nested": (jnp.asarray(rng.integers(0, 9, size=(2,)), jnp.int32),),
+    }
+
+
+def _assert_tree_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestRoundTrip:
+    def test_save_restore_array_equal(self, tmp_path):
+        t = _tree(1)
+        manager.save(str(tmp_path), 7, t)
+        _assert_tree_equal(manager.restore(str(tmp_path), t), t)
+
+    def test_restore_into_shape_dtype_structs(self, tmp_path):
+        """The resume path restores into jax.eval_shape output — structs,
+        not arrays — using only the structure and dtypes."""
+        t = _tree(2)
+        manager.save(str(tmp_path), 3, t)
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+        _assert_tree_equal(manager.restore(str(tmp_path), like), t)
+
+    def test_restore_picks_latest_committed(self, tmp_path):
+        a, b = _tree(1), _tree(2)
+        manager.save(str(tmp_path), 5, a)
+        manager.save(str(tmp_path), 10, b)
+        _assert_tree_equal(manager.restore(str(tmp_path), a), b)
+        # explicit step still reaches the older snapshot
+        _assert_tree_equal(manager.restore(str(tmp_path), a, step=5), a)
+
+
+class TestKeepN:
+    def test_gc_keeps_newest_n(self, tmp_path):
+        for s in (1, 2, 3, 4, 5):
+            manager.save(str(tmp_path), s, _tree(s), keep=3)
+        assert manager.committed_steps(str(tmp_path)) == [3, 4, 5]
+        assert not os.path.exists(os.path.join(str(tmp_path), "step_000000001"))
+
+    def test_keep_zero_disables_gc(self, tmp_path):
+        for s in (1, 2, 3):
+            manager.save(str(tmp_path), s, _tree(s), keep=0)
+        assert manager.committed_steps(str(tmp_path)) == [1, 2, 3]
+
+
+class TestCrashSafety:
+    def test_missing_commit_ignored(self, tmp_path):
+        """A snapshot whose COMMIT marker never landed (host died between
+        the leaf write and the marker) must be invisible to restore."""
+        t = _tree(1)
+        manager.save(str(tmp_path), 5, t)
+        newer = manager.save(str(tmp_path), 9, _tree(2))
+        os.remove(os.path.join(newer, "COMMIT"))
+        assert manager.committed_steps(str(tmp_path)) == [5]
+        _assert_tree_equal(manager.restore(str(tmp_path), t), t)
+
+    def test_torn_tmp_dir_ignored(self, tmp_path):
+        """A .tmp staging dir from a crash mid-save is never listed nor
+        restored, even if it contains a fully-written npz."""
+        t = _tree(1)
+        manager.save(str(tmp_path), 5, t)
+        done = os.path.join(str(tmp_path), "step_000000009")
+        torn = done + ".tmp"
+        shutil.copytree(os.path.join(str(tmp_path), "step_000000005"), torn)
+        assert manager.committed_steps(str(tmp_path)) == [5]
+        assert manager.latest_step(str(tmp_path)) == 5
+
+    def test_explicit_step_without_commit_raises(self, tmp_path):
+        manager.save(str(tmp_path), 5, _tree(1))
+        os.remove(os.path.join(str(tmp_path), "step_000000005", "COMMIT"))
+        with pytest.raises(FileNotFoundError):
+            manager.restore(str(tmp_path), _tree(1), step=5)
+
+    def test_empty_root_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            manager.restore(str(tmp_path / "nope"), _tree(1))
+
+    def test_save_overwrites_same_step(self, tmp_path):
+        manager.save(str(tmp_path), 5, _tree(1))
+        manager.save(str(tmp_path), 5, _tree(2))
+        _assert_tree_equal(manager.restore(str(tmp_path), _tree(2)), _tree(2))
+
+
+class TestStructureMismatch:
+    def test_wrong_leaf_count_raises(self, tmp_path):
+        """Resuming a snapshot into a differently-configured solve (other
+        schedule, other strategy) must fail loudly, not mis-assign leaves."""
+        manager.save(str(tmp_path), 5, _tree(1))
+        wrong = {"a": jnp.zeros((2,)), "b": jnp.zeros((2,)),
+                 "c": jnp.zeros((2,)), "d": jnp.zeros((2,))}
+        with pytest.raises(ValueError, match="different carry structure"):
+            manager.restore(str(tmp_path), wrong)
+
+    def test_meta_records_leaf_count(self, tmp_path):
+        d = manager.save(str(tmp_path), 5, _tree(1))
+        with open(os.path.join(d, "meta.json")) as fh:
+            meta = json.load(fh)
+        assert meta["n_leaves"] == len(jax.tree.leaves(_tree(1)))
+        assert meta["step"] == 5

@@ -183,10 +183,10 @@ class TestSolverRegistry:
         captured = {}
         orig = zeus_mod.run_multistart
 
-        def spy(f, x0, strategy, eopts, pcount=None):
+        def spy(f, x0, strategy, eopts, pcount=None, **kw):
             captured["eopts"] = eopts
             captured["strategy"] = strategy
-            return orig(f, x0, strategy, eopts, pcount=pcount)
+            return orig(f, x0, strategy, eopts, pcount=pcount, **kw)
 
         try:
             zeus_mod.run_multistart = spy
