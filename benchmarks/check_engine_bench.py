@@ -44,7 +44,14 @@ when a perf floor regresses:
     cached across solves, the raw-byte shard write runs on a background
     thread, and each cadence pays only one host gather on the critical
     path); the ckpt cell's `exact_match` (segmented vs plain results
-    array-identical) must be true.
+    array-identical) must be true;
+  * `serve_throughput_ratio` (drain-then-refill batch-restart sweeps over
+    continuous-batching sweeps for the same deterministic heterogeneous
+    request stream) must stay >= BENCH_SERVE_FLOOR (default 1.3 — the
+    PR-8 solve-service criterion; the count is structural — theta=1e-30
+    means every lane retires at exactly its deadline, so the expected
+    value ~1.7 only moves on an admission-policy regression); both
+    policies' `all_done` must be true (every submitted request drained).
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
@@ -74,11 +81,20 @@ TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep", "map_trips"}
 AUTO_MODE_KEYS = {"wall_s", "eval_rows", "map_trips"}
 MEGA_MODE_KEYS = {"wall_s", "eval_rows", "map_trips", "launches_per_sweep"}
 MEGA_LAUNCH_CEIL = 2.0  # structural: full ladder = 1, short ladder = 2
+SERVE_MODE_KEYS = {
+    "wall_s",
+    "sweeps",
+    "solves",
+    "solves_per_sec",
+    "admit_latency_sweeps_p50",
+    "admit_latency_sweeps_p95",
+    "all_done",
+}
 
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
           trip_ceil: float, ladder_ceil: float, auto_slack: float,
-          mega_ceil: float, ckpt_ceil: float) -> list:
+          mega_ceil: float, ckpt_ceil: float, serve_floor: float) -> list:
     errors = []
 
     def need(cond, msg):
@@ -86,18 +102,20 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             errors.append(msg)
 
     for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto",
-                "mega", "ckpt"):
+                "mega", "ckpt", "serve"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
     autos = payload.get("auto") or {}
     megas = payload.get("mega") or {}
     ckpts = payload.get("ckpt") or {}
+    serves = payload.get("serve") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
     need(len(autos) > 0, "no auto_vs_best_static cells measured")
     need(len(megas) > 0, "no megakernel cells measured")
     need(len(ckpts) > 0, "no checkpoint-overhead cells measured")
+    need(len(serves) > 0, "no solve-service cells measured")
 
     for name, cell in cells.items():
         for mode in ("per_lane", "batched", "compacted", "ladder"):
@@ -217,6 +235,28 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
         need(ckpt.get("exact_match") is True,
              f"ckpt.{name}: exact_match is not True — the host-segmented "
              f"driver diverged from the uninterrupted solve")
+
+    for name, serve in serves.items():
+        for mode in ("continuous", "drain_then_refill"):
+            block = serve.get(mode)
+            need(isinstance(block, dict), f"serve.{name}: missing {mode!r}")
+            if not isinstance(block, dict):
+                continue
+            missing = SERVE_MODE_KEYS - set(block)
+            need(not missing,
+                 f"serve.{name}.{mode}: missing keys {sorted(missing)}")
+            need(block.get("wall_s", 0) > 0,
+                 f"serve.{name}.{mode}: wall_s <= 0")
+            need(block.get("all_done") is True,
+                 f"serve.{name}.{mode}: all_done is not True — the "
+                 f"service dropped submitted requests")
+        ratio = serve.get("serve_throughput_ratio")
+        need(
+            isinstance(ratio, (int, float)) and ratio >= serve_floor,
+            f"serve.{name}: serve_throughput_ratio {ratio!r} below floor "
+            f"{serve_floor} — continuous batching regressed toward the "
+            f"drain-then-refill baseline",
+        )
     return errors
 
 
@@ -248,6 +288,9 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--checkpoint-ceil", type=float,
         default=float(os.environ.get("BENCH_CHECKPOINT_CEIL", "1.05")))
+    ap.add_argument(
+        "--serve-floor", type=float,
+        default=float(os.environ.get("BENCH_SERVE_FLOOR", "1.3")))
     args = ap.parse_args(argv)
 
     def gate(path, label):
@@ -256,7 +299,7 @@ def main(argv=None) -> int:
         errs = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
                      args.tail_trip_ceil, args.ladder_rows_ceil,
                      args.auto_slack, args.megakernel_ceil,
-                     args.checkpoint_ceil)
+                     args.checkpoint_ceil, args.serve_floor)
         return payload, [f"{label}: {e}" for e in errs] if label else errs
 
     payload, errors = gate(args.path, "")
@@ -279,6 +322,8 @@ def main(argv=None) -> int:
               for m in payload["mega"].values()]
     ckpt_r = [c["checkpoint_overhead_ratio"]
               for c in payload["ckpt"].values()]
+    serve_r = [s["serve_throughput_ratio"]
+               for s in payload["serve"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
@@ -294,7 +339,9 @@ def main(argv=None) -> int:
         f"(ceiling {args.megakernel_ceil}); megakernel launches/sweep "
         f"{max(mega_l):.0f} (ceiling {MEGA_LAUNCH_CEIL:.0f}); "
         f"checkpoint_overhead_ratio max {max(ckpt_r):.3f} "
-        f"(ceiling {args.checkpoint_ceil})"
+        f"(ceiling {args.checkpoint_ceil}); "
+        f"serve_throughput_ratio min {min(serve_r):.3f} "
+        f"(floor {args.serve_floor})"
         + (f"; baseline {args.baseline} OK" if args.baseline else "")
     )
     return 0

@@ -83,6 +83,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -125,6 +126,25 @@ CKPT_SWEEPS = 100
 CKPT_EVERY = 25
 CKPT_OBJECTIVE = "ackley"
 AUTO_WINDOW = 1
+# serve cell (DESIGN.md §16): request-level throughput of the continuous-
+# batching SolveService against the drain-then-refill batch-restart
+# baseline (same machinery, admission policy only). A heterogeneous budget
+# mix is where continuous batching pays: alternating (2, 32)-sweep
+# requests mean the baseline's waves are pinned to the 32-sweep stragglers
+# (requests/slots waves x 32 sweeps) while continuous admission back-fills
+# the short lanes' slots mid-wave (~ total_lane_sweeps / slots + ramp
+# tail). theta=1e-30 so no lane converges early: every lane retires at
+# exactly its deadline and both sweep counts are deterministic, which is
+# what lets check_engine_bench gate the structural ratio
+# serve_throughput_ratio = drain.sweeps / continuous.sweeps (floor
+# BENCH_SERVE_FLOOR, default 1.3; expected ~1.7). All requests arrive at
+# sweep 0 — a fixed deterministic (Poisson-free) schedule, so the ratio
+# isolates admission policy, not arrival luck.
+SERVE_OBJECTIVE = "rastrigin"
+SERVE_D = 16
+SERVE_SLOTS, SERVE_REQUESTS = 32, 96
+SERVE_SMALL_SLOTS, SERVE_SMALL_REQUESTS = 8, 24
+SERVE_BUDGETS = (2, 32)  # alternating per-request iter_max
 # the static ladder grid below as candidates, plus 16: deep-backtracking
 # phases sit at p90 rung 13..17, and without a candidate between 8 and the
 # full ladder the controller is forced to pay the full K rows there
@@ -381,6 +401,66 @@ def _ckpt_cell(obj, B, D):
     }
 
 
+def _serve_cell():
+    """Solve-service throughput criterion cell (see SERVE_* constants):
+    the same deterministic request stream drained by continuous batching
+    and by the drain-then-refill baseline. Sweep counts are deterministic
+    (theta=1e-30, deadline retirement); wall clock and admit latency are
+    the observability columns."""
+    from repro.core.zeus import ZeusOptions
+    from repro.serve.service import (
+        ProblemRegistry,
+        SolveRequest,
+        SolveService,
+    )
+
+    small = os.environ.get("BENCH_ENGINE_SMALL") == "1"
+    slots = SERVE_SMALL_SLOTS if small else SERVE_SLOTS
+    n_req = SERVE_SMALL_REQUESTS if small else SERVE_REQUESTS
+    opts = ZeusOptions(bfgs=BFGSOptions(
+        iter_bfgs=max(SERVE_BUDGETS), theta=1e-30, ad_mode="reverse",
+        ls_iters=LS_ITERS, sweep_mode="batched"))
+
+    def run(drain_then_refill):
+        reg = ProblemRegistry()
+        reg.register("serve", SERVE_OBJECTIVE, SERVE_D, opts=opts)
+        svc = SolveService(reg, slots=slots, max_queue=n_req,
+                           drain_then_refill=drain_then_refill)
+        for i in range(n_req):
+            svc.submit(SolveRequest(
+                "serve", seed=i, n_starts=1,
+                iter_max=SERVE_BUDGETS[i % len(SERVE_BUDGETS)]))
+        t0 = time.perf_counter()
+        results = svc.drain()
+        wall = time.perf_counter() - t0
+        st = svc.stats()
+        return {
+            "wall_s": wall,
+            "sweeps": int(st["pool_sweeps"]["serve"]),
+            "solves": len(results),
+            "solves_per_sec": len(results) / wall,
+            "admit_latency_s_p50": st["admit_latency_s_p50"],
+            "admit_latency_s_p95": st["admit_latency_s_p95"],
+            "admit_latency_sweeps_p50": st["admit_latency_sweeps_p50"],
+            "admit_latency_sweeps_p95": st["admit_latency_sweeps_p95"],
+            "all_done": len(results) == n_req,
+        }
+
+    run(False)  # warm the hosted jit cache (shared across both policies)
+    cell = {
+        "continuous": run(False),
+        "drain_then_refill": run(True),
+        "objective": SERVE_OBJECTIVE,
+        "dim": SERVE_D,
+        "slots": slots,
+        "requests": n_req,
+        "budgets": list(SERVE_BUDGETS),
+    }
+    cell["serve_throughput_ratio"] = (
+        cell["drain_then_refill"]["sweeps"] / cell["continuous"]["sweeps"])
+    return cell
+
+
 def engine_sweep(out_path: str = "BENCH_engine.json"):
     """Batched vs per_lane vs compacted sweep execution over (B, D) cells."""
     with kernel_ops.reference_kernels_off_tpu():  # see module docstring
@@ -465,6 +545,18 @@ def _engine_sweep(out_path: str):
         f"checkpoint_overhead_ratio={ckpt['checkpoint_overhead_ratio']:.3f};"
         f"every={CKPT_EVERY};exact_match={ckpt['exact_match']}",
     )
+    # solve-service criterion: continuous batching vs drain-then-refill on
+    # a deterministic heterogeneous request stream (see SERVE_* constants)
+    serve = _serve_cell()
+    emit(
+        f"engine_serve_s{serve['slots']}_r{serve['requests']}",
+        serve["continuous"]["wall_s"] * 1e6,
+        f"serve_throughput_ratio={serve['serve_throughput_ratio']:.3f};"
+        f"sweeps={serve['continuous']['sweeps']}"
+        f"(drain={serve['drain_then_refill']['sweeps']});"
+        f"admit_p95={serve['continuous']['admit_latency_sweeps_p95']:.0f}sw;"
+        f"{serve['continuous']['solves_per_sec']:.2f}solves/s",
+    )
     payload = {
         "objective": obj.name,
         "sweeps": SWEEPS,
@@ -494,12 +586,18 @@ def _engine_sweep(out_path: str):
                  "CKPT_OBJECTIVE cell at CKPT_B x CKPT_D; "
                  "checkpoint_overhead_ratio gated <= BENCH_CHECKPOINT_CEIL "
                  "(default 1.05), exact_match records the segmented solve "
-                 "is array-identical"),
+                 "is array-identical. serve: the continuous-batching "
+                 "SolveService vs drain-then-refill on a deterministic "
+                 "alternating-(2,32)-budget request stream at theta=1e-30; "
+                 "serve_throughput_ratio = drain.sweeps / continuous.sweeps "
+                 "(structural — every lane retires at its deadline), gated "
+                 ">= BENCH_SERVE_FLOOR (default 1.3)"),
         "cells": results,
         "tail": tails,
         "auto": {f"b{B}_d{D}": auto},
         "mega": {f"b{B}_d{D}": mega},
         "ckpt": {f"b{CKPT_B}_d{CKPT_D}": ckpt},
+        "serve": {f"s{serve['slots']}_r{serve['requests']}": serve},
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

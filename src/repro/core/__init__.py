@@ -21,10 +21,12 @@ from repro.core.engine import (
     BFGSResult,
     DirectionStrategy,
     EngineOptions,
+    HostedSolve,
     VmappedStrategy,
     as_batched_strategy,
     auto_plan_lattice,
     get_solver,
+    open_multistart,
     register_solver,
     run_multistart,
     schedule_trace_plans,
@@ -44,6 +46,7 @@ from repro.core.zeus import (
     SequentialZeusResult,
     ZeusOptions,
     ZeusResult,
+    phase2_setup,
     sequential_zeus,
     solve_phase2,
     zeus,
@@ -84,6 +87,9 @@ __all__ = [
     "objective_name_of",
     "register_batched_vg",
     "register_solver",
+    "HostedSolve",
+    "open_multistart",
+    "phase2_setup",
     "run_multistart",
     "run_pso",
     "run_until_confident",

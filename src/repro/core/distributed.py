@@ -264,7 +264,7 @@ def distributed_zeus(
             n_act=leaf(P()), aux=sh(carry_like.aux), rows=leaf(lane_spec),
             trips=leaf(lane_spec), astate=sh(carry_like.astate),
             rkey=leaf(lane_spec), n_restarts=leaf(lane_spec),
-            replan=leaf(P()))
+            replan=leaf(P()), deadline=leaf(lane_spec))
 
     def init_shard(key):
         pmin = make_pmin(axis_names)
@@ -398,7 +398,8 @@ def distributed_zeus(
         return pc._replace(
             lanes=lane(pc.lanes), aux=wrap(pc.aux), rows=wrap(pc.rows),
             trips=wrap(pc.trips), astate=wrap(pc.astate),
-            rkey=wrap(pc.rkey), n_restarts=lane(pc.n_restarts))
+            rkey=wrap(pc.rkey), n_restarts=lane(pc.n_restarts),
+            deadline=lane(pc.deadline))
 
     def _run_segmented(key, resume_from):
         from repro.checkpoint import manager as ckpt_manager

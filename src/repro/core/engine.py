@@ -327,6 +327,19 @@ class EngineOptions:
     # the carried sweep counter, and whose preempt_at_sweep makes the host
     # driver raise launch.faults.Preempted at that sweep boundary.
     fault_plan: Optional[Any] = None
+    # ---- solve-service hooks (serve/service.py, DESIGN.md §16) ---------
+    # Per-lane sweep deadlines: True adds a (B_flat,) int32 `deadline` to
+    # the carry which the sweep prologue enforces — a lane whose nonzero
+    # deadline is <= the sweep counter freezes as failed BEFORE stepping,
+    # i.e. a lane admitted at sweep k0 with deadline k0+m runs exactly m
+    # sweeps. This is how the solve service bounds each admitted request's
+    # iteration budget inside a shared, indefinitely-running carry while
+    # keeping per-lane trajectories array-equal to a solo solve (the solo
+    # run's own iter_max stop and the deadline freeze produce the same
+    # iterates and the same DIVERGED status). Deadlines are assigned by
+    # HostedSolve.admit; 0 means none. Incompatible with retry_budget > 0
+    # (a retry would resurrect an expired lane past its budget).
+    lane_deadlines: bool = False
 
 
 class DirectionStrategy(Protocol):
@@ -996,6 +1009,7 @@ class EngineCarry(NamedTuple):
     rkey: jnp.ndarray  # raw uint32 PRNG key data for quarantine re-seeds
     n_restarts: jnp.ndarray  # (B_flat,) int32 — re-seeds consumed per lane
     replan: jnp.ndarray  # scalar bool — force a gather-plan refresh next sweep
+    deadline: jnp.ndarray  # (B_flat,) int32 — per-lane sweep deadline (0=none)
 
 
 class MultistartProgram(NamedTuple):
@@ -1012,11 +1026,84 @@ class MultistartProgram(NamedTuple):
     required_c: int
 
 
+@dataclasses.dataclass
+class HostedSolve:
+    """A multistart solve held OPEN under host control (DESIGN.md §16).
+
+    Where `run_multistart` drives a carry from init to finalize itself,
+    a HostedSolve hands the segmented loop's jitted pieces to the caller:
+    `segment()` advances the sweep while-loop to the next host boundary,
+    `lane_view()` reads per-slot results there (the harvest), `admit()`
+    seeds fresh lanes into chosen slots mid-flight, and `empty_carry()`
+    starts a pool with every slot vacant. This is the engine half of the
+    continuous-batching solve service (serve/service.py): lanes are slots
+    of a persistent pool, requests are admitted into freed slots at
+    segment boundaries, and per-lane trajectories stay array-equal to a
+    solo solve because admission touches nothing outside the admitted
+    rows. All callables are jitted and shared through the hosted jit
+    cache, so opening the same solve signature twice compiles once."""
+
+    _carry0: Callable  # (X, rkey_data) -> EngineCarry
+    _seg: Callable  # (carry, k_end) -> carry advanced to a boundary
+    _fin: Callable  # carry -> BFGSResult
+    _cond: Callable  # carry -> bool: any sweep work left?
+    _admit: Callable  # (carry, mask, X, deadlines) -> carry
+    _vacate: Callable  # carry -> carry with every slot frozen vacant
+    _view: Callable  # carry -> flat per-slot harvest dict
+    opts: EngineOptions
+    B: int  # admittable slots (flat indices >= B are chunk padding)
+    B_flat: int  # flat lane axis incl. padding (mask/deadline length)
+    dim: int
+    required_c: int
+    _x0: jnp.ndarray  # (B, dim) placeholder starts for empty_carry
+    _rkey0: jnp.ndarray
+
+    def init_carry(self, X0=None, retry_key=None) -> "EngineCarry":
+        rk = self._rkey0
+        if retry_key is not None:
+            rk = (jax.random.key_data(retry_key)
+                  if jnp.issubdtype(jnp.asarray(retry_key).dtype,
+                                    jax.dtypes.prng_key)
+                  else jnp.asarray(retry_key, jnp.uint32))
+        X0 = self._x0 if X0 is None else jnp.asarray(X0)
+        return self._carry0(X0, rk)
+
+    def empty_carry(self, retry_key=None) -> "EngineCarry":
+        """A pool with every slot vacant (frozen, harvestable-as-nothing);
+        the service's starting state."""
+        return self._vacate(self.init_carry(retry_key=retry_key))
+
+    def segment(self, carry, k_end) -> "EngineCarry":
+        """Advance the sweep loop until k reaches k_end, every lane is
+        frozen, or required_c lanes converged — whichever comes first."""
+        return self._seg(carry, jnp.asarray(k_end, jnp.int32))
+
+    def running(self, carry) -> bool:
+        return bool(self._cond(carry))
+
+    def admit(self, carry, mask, X, deadlines) -> "EngineCarry":
+        """Seed fresh lanes into the mask'd flat slots of a live carry.
+        X is (B, dim) start points (only mask'd rows are read); deadlines
+        is (B_flat,) int32 absolute sweep deadlines (0 = none)."""
+        return self._admit(carry, jnp.asarray(mask), jnp.asarray(X),
+                           jnp.asarray(deadlines, jnp.int32))
+
+    def lane_view(self, carry) -> dict:
+        """Host copy of the flat per-slot harvest view: k, x, f,
+        grad_norm, converged, failed, n_evals, deadline (np arrays)."""
+        return {k: np.asarray(v)
+                for k, v in jax.device_get(self._view(carry)).items()}
+
+    def finalize(self, carry) -> BFGSResult:
+        return self._fin(carry)
+
+
 # hosted-driver jit cache (see run_multistart's segmented section): maps a
-# solve signature to its (init, segment, finalize) jits so repeated
-# checkpointed solves pay tracing/compilation once, like a user-jitted
-# un-checkpointed solve does
-_HOSTED_JIT_CACHE: Dict[Any, Tuple[Callable, Callable, Callable]] = {}
+# solve signature to its (init, segment, finalize, cond, admit, vacate,
+# view) jits so repeated checkpointed solves — and every HostedSolve the
+# service opens for the same signature — pay tracing/compilation once,
+# like a user-jitted un-checkpointed solve does
+_HOSTED_JIT_CACHE: Dict[Any, Tuple[Callable, ...]] = {}
 
 
 def _hashable(obj):
@@ -1049,6 +1136,7 @@ def run_multistart(
     retry_key: Optional[jnp.ndarray] = None,  # PRNG key for quarantine re-seeds
     resume_from: Optional[str] = None,  # checkpoint root to restore from
     _as_program: bool = False,  # return the MultistartProgram instead
+    _as_host: bool = False,  # return a HostedSolve (open_multistart)
 ) -> BFGSResult:
     """Run B independent quasi-Newton solves until required_c converge.
 
@@ -1148,6 +1236,12 @@ def run_multistart(
         raise ValueError(
             "retry_mode='uniform' draws fresh points uniformly and needs "
             "retry_bounds=(lower, upper)")
+    deadlining = opts.lane_deadlines
+    if deadlining and retrying:
+        raise ValueError(
+            "lane_deadlines=True is incompatible with retry_budget > 0: a "
+            "quarantine retry would resurrect a deadline-expired lane past "
+            "its per-request budget")
     if opts.checkpoint_every < 0:
         raise ValueError(
             f"checkpoint_every must be >= 0 (got {opts.checkpoint_every})")
@@ -1163,7 +1257,7 @@ def run_multistart(
     # under an enclosing jit trace, so fail loudly instead of miscompiling
     hosted = (checkpointing or resume_from is not None
               or preempt_at is not None) and not _as_program
-    if hosted and isinstance(x0, jax.core.Tracer):
+    if (hosted or _as_host) and isinstance(x0, jax.core.Tracer):
         raise ValueError(
             "checkpoint_every/fault_plan.preempt_at_sweep/resume_from drive "
             "a host-segmented sweep loop and cannot run under an enclosing "
@@ -1560,7 +1654,8 @@ def run_multistart(
                 k=k + 1, lanes=lanes, n_conv=n_conv, n_act=n_act, aux=aux,
                 rows=carry.rows + rrows + srows,
                 trips=carry.trips + strips, astate=astate, rkey=rkey,
-                n_restarts=n_restarts, replan=jnp.zeros((), bool))
+                n_restarts=n_restarts, replan=jnp.zeros((), bool),
+                deadline=carry.deadline)
 
         astate0 = _AutoState(
             plan=jnp.asarray(n_ladders - 1, jnp.int32),  # full-ladder static
@@ -1692,6 +1787,20 @@ def run_multistart(
         lanes, rkey, n_restarts = carry.lanes, carry.rkey, carry.n_restarts
         rrows = jnp.zeros((), jnp.int32)
         force = carry.replan
+        if deadlining:
+            # deadline expiry: a lane whose budget is spent freezes as
+            # failed before this sweep steps it, so an admit(deadline=k0+m)
+            # lane runs exactly m sweeps — the solo-solve iterate count.
+            # No plan force needed: expiry only SHRINKS the active set,
+            # which is the invariant stored gather plans rely on.
+            flatl = _flat(lanes)
+            expired = jnp.logical_and(
+                jnp.logical_and(carry.deadline > 0,
+                                carry.k >= carry.deadline),
+                jnp.logical_not(jnp.logical_or(flatl.converged,
+                                               flatl.failed)))
+            lanes = _unflat(flatl._replace(
+                failed=jnp.logical_or(flatl.failed, expired)))
         if retrying:
             lanes, rkey, n_restarts, rrows, retried = retry_pass(
                 lanes, rkey, n_restarts)
@@ -1737,7 +1846,7 @@ def run_multistart(
             k=k + 1, lanes=lanes, n_conv=n_conv, n_act=n_act, aux=aux,
             rows=carry.rows + rrows + srows, trips=carry.trips + strips,
             astate=carry.astate, rkey=rkey, n_restarts=n_restarts,
-            replan=jnp.zeros((), bool))
+            replan=jnp.zeros((), bool), deadline=carry.deadline)
 
     # raw uint32 key data, not a typed key: snapshots np.asarray it and
     # shard_map moves it across the mesh boundary, neither of which typed
@@ -1761,7 +1870,8 @@ def run_multistart(
             n_act=n_act0, aux=make_aux0(lanes), rows=eval_rows0,
             trips=jnp.zeros((), jnp.int32), astate=astate0,
             rkey=rkey0 if rk is None else rk,
-            n_restarts=n_restarts0, replan=jnp.zeros((), bool))
+            n_restarts=n_restarts0, replan=jnp.zeros((), bool),
+            deadline=jnp.zeros((B_flat,), jnp.int32))
 
     def finalize(carry):
         k, lanes = carry.k, carry.lanes
@@ -1793,6 +1903,73 @@ def run_multistart(
             n_failed=jnp.sum(lanes.failed.astype(jnp.int32)),
         )
 
+    # ------------------------------------------------------------------
+    # Lane admission/retirement as first-class carry events (DESIGN.md
+    # §16). These are the solve service's hooks: `admit_lanes` seeds fresh
+    # lanes into chosen flat slots of a LIVE carry (generalizing the
+    # quarantine heal in retry_pass — same full-batch re-init through
+    # init_lanes, same per-leaf where-merge, same replan forcing so the
+    # repack/compact/auto-schedule machinery sees an admission exactly
+    # like a retry), `vacate_lanes` turns a fresh carry into an empty
+    # pool, and `lane_view` is the per-slot harvest read at a segment
+    # boundary.
+    # ------------------------------------------------------------------
+    def admit_lanes(carry, mask, X, deadlines):
+        """Seed fresh lanes at X rows into the mask'd flat slots.
+
+        mask: (B_flat,) bool — slots to (re)start; padding is never
+        admitted. X: (B, D) start points (only mask'd rows are read).
+        deadlines: (B_flat,) int32 absolute sweep deadlines (0 = none).
+        Fresh lanes get reset n_evals/n_restarts — each admission is a new
+        solve, not a new life of an old one — so harvested counters match
+        a solo run's exactly."""
+        mask = jnp.logical_and(mask, jnp.logical_not(is_pad_flat))
+        fresh = _flat(init_lanes(X))
+        flat = _flat(carry.lanes)
+
+        def sel(n, o):
+            m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+            return jnp.where(m, n, o)
+
+        lanes = _unflat(jax.tree.map(sel, fresh, flat))
+        n_restarts = jnp.where(mask, 0, carry.n_restarts).astype(jnp.int32)
+        deadline = jnp.where(mask, deadlines,
+                             carry.deadline).astype(jnp.int32)
+        n_conv, n_act = counts(lanes, n_restarts)
+        any_m = jnp.any(mask)
+        return carry._replace(
+            lanes=lanes, n_conv=n_conv, n_act=n_act,
+            rows=carry.rows + jnp.where(any_m, eval_rows0, 0),
+            n_restarts=n_restarts, deadline=deadline,
+            replan=jnp.logical_or(carry.replan, any_m))
+
+    def vacate_lanes(carry):
+        """Freeze every slot (failed, not converged): the service's empty
+        initial pool. Admissions then light slots back up one by one."""
+        flat = _flat(carry.lanes)
+        flat = flat._replace(
+            converged=jnp.zeros_like(flat.converged),
+            failed=jnp.ones_like(flat.failed))
+        lanes = _unflat(flat)
+        n_conv, n_act = counts(lanes, carry.n_restarts)
+        return carry._replace(lanes=lanes, n_conv=n_conv, n_act=n_act)
+
+    def lane_view(carry):
+        """Flat per-slot harvest view. grad_norm is computed on-device the
+        same way finalize's is, so a harvested result is array-equal to
+        the solo solve's BFGSResult fields."""
+        flat = _flat(carry.lanes)
+        return {
+            "k": carry.k,
+            "x": flat.x,
+            "f": flat.f,
+            "grad_norm": jax.vmap(jnp.linalg.norm)(flat.g),
+            "converged": flat.converged,
+            "failed": flat.failed,
+            "n_evals": flat.n_evals,
+            "deadline": carry.deadline,
+        }
+
     step_body = sched_body if scheduling else body
 
     if _as_program:
@@ -1800,7 +1977,7 @@ def run_multistart(
                                  body=step_body, finalize=finalize,
                                  opts=opts, required_c=required_c)
 
-    if not hosted:
+    if not hosted and not _as_host:
         return finalize(jax.lax.while_loop(cond, step_body, make_carry0()))
 
     # ------------------------------------------------------------------
@@ -1835,9 +2012,21 @@ def run_multistart(
             # op-by-op dispatch of its reductions costs more than the
             # segment itself at small cells, so it is jitted too
             jax.jit(cond),
+            # solve-service hooks: mid-flight admission, empty-pool
+            # vacate, and the boundary harvest view (DESIGN.md §16)
+            jax.jit(admit_lanes),
+            jax.jit(vacate_lanes),
+            jax.jit(lane_view),
         )
         _HOSTED_JIT_CACHE[cache_key] = cached
-    carry0_jit, seg, fin, cond_jit = cached
+    carry0_jit, seg, fin, cond_jit, admit_jit, vacate_jit, view_jit = cached
+
+    if _as_host:
+        return HostedSolve(
+            _carry0=carry0_jit, _seg=seg, _fin=fin, _cond=cond_jit,
+            _admit=admit_jit, _vacate=vacate_jit, _view=view_jit,
+            opts=opts, B=B, B_flat=B_flat, dim=D, required_c=required_c,
+            _x0=jnp.asarray(x0), _rkey0=rkey0)
 
     if resume_from is not None:
         # eval_shape: restore needs only the carry's structure/dtypes, and
@@ -1898,6 +2087,26 @@ def run_multistart(
             _save_async(carry)
     _join_writer()
     return fin(carry)
+
+
+def open_multistart(
+    f: Callable,
+    x0: jnp.ndarray,  # (B, D): defines the pool width; values are the
+    # placeholder starts empty_carry initializes vacant slots from
+    strategy: DirectionStrategy,
+    opts: EngineOptions = EngineOptions(),
+    pcount: Optional[Callable] = None,
+    retry_key: Optional[jnp.ndarray] = None,
+) -> HostedSolve:
+    """Open a multistart solve under host control instead of running it.
+
+    Returns a HostedSolve whose segment/admit/lane_view hooks let a caller
+    (the continuous-batching solve service, serve/service.py) drive the
+    SAME cond/body the closed-loop solve runs, harvesting retired lanes
+    and seeding queued work into freed slots at segment boundaries.
+    Same validation, same jit cache, same carry as run_multistart."""
+    return run_multistart(f, x0, strategy, opts, pcount=pcount,
+                          retry_key=retry_key, _as_host=True)
 
 
 # ---------------------------------------------------------------------------

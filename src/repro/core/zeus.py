@@ -95,11 +95,13 @@ def _solver_name(opts: ZeusOptions) -> str:
     return opts.solver
 
 
-def _phase2_setup(opts: ZeusOptions):
+def phase2_setup(opts: ZeusOptions):
     """Resolve the phase-2 (strategy, EngineOptions) pair: registry lookup
-    plus the ZeusOptions-level overrides. Shared by solve_phase2 and the
+    plus the ZeusOptions-level overrides. Shared by solve_phase2, the
     distributed driver (which needs the effective EngineOptions to shape
-    its out-specs — e.g. whether a ScheduleTrace will be produced)."""
+    its out-specs — e.g. whether a ScheduleTrace will be produced), and the
+    solve service (which opens a HostedSolve pool from the same effective
+    config a solo solve would run, the root of its parity contract)."""
     name = _solver_name(opts)
     factory = get_solver(name)
     if name == "lbfgs":
@@ -163,6 +165,10 @@ def _phase2_setup(opts: ZeusOptions):
     return strategy, eopts
 
 
+# back-compat alias (pre-service name; the distributed driver still uses it)
+_phase2_setup = phase2_setup
+
+
 def solve_phase2(f, x0, opts: ZeusOptions, pcount=None, retry_key=None,
                  bounds=None, resume_from=None) -> BFGSResult:
     """Phase 2 through the engine: registry lookup -> run_multistart.
@@ -170,7 +176,7 @@ def solve_phase2(f, x0, opts: ZeusOptions, pcount=None, retry_key=None,
     `bounds=(lower, upper)` backstops the engine's retry_bounds (quarantine
     re-seed box) when the solver opts leave them unset — the zeus driver
     passes its own search box so retry_mode="uniform" works untouched."""
-    strategy, eopts = _phase2_setup(opts)
+    strategy, eopts = phase2_setup(opts)
     if bounds is not None and eopts.retry_bounds is None:
         eopts = dataclasses.replace(
             eopts, retry_bounds=(float(bounds[0]), float(bounds[1])))

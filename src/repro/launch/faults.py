@@ -176,6 +176,18 @@ def injection_masks(plan: FaultPlan, k, n_lanes: int):
     return mask(plan.nan_grads), mask(plan.kill_lanes)
 
 
+def seed_lanes(swarm_x, mask, fresh):
+    """Merge `fresh` start points into the mask'd rows of `swarm_x`.
+
+    The one primitive under every way a lane slot gets a new life: the
+    quarantine re-seeder below draws `fresh` uniformly, the solve service's
+    admission path (serve/service.py) fills `fresh` with per-request start
+    points before handing the merged matrix to HostedSolve.admit."""
+    import jax.numpy as jnp
+
+    return jnp.where(jnp.asarray(mask)[:, None], fresh, swarm_x)
+
+
 def reseed_lost_lanes(key, swarm_x, lost_mask, lower: float, upper: float):
     """Replace lost/quarantined lanes with fresh uniform draws.
 
@@ -183,10 +195,9 @@ def reseed_lost_lanes(key, swarm_x, lost_mask, lower: float, upper: float):
     full strength after an elastic restart, and is the `retry_mode="uniform"`
     re-seeder for the engine's quarantine/retry path."""
     import jax
-    import jax.numpy as jnp
 
     fresh = jax.random.uniform(
         key, swarm_x.shape, swarm_x.dtype,
         minval=lower, maxval=upper,
     )
-    return jnp.where(lost_mask[:, None], fresh, swarm_x)
+    return seed_lanes(swarm_x, lost_mask, fresh)

@@ -1,0 +1,583 @@
+"""Multi-tenant solve service: continuous lane batching for multistart
+optimization (DESIGN.md §16).
+
+The engine's phase-2 is a batch of independent quasi-Newton lanes sharing
+one device — exactly the shape of a request stream. This module turns the
+lane-slot machinery (compaction/repack freed slots, in-carry re-seeding,
+host-segmented sweeps) into a persistent *service*:
+
+- A `ProblemRegistry` of named problems (objective + bounds + solver
+  config, reusing the core/objectives.py identity lookup so named
+  objectives keep their fused kernels).
+- A `SolveService` that keeps one always-running `HostedSolve` pool per
+  problem and admits queued `SolveRequest`s into freed lane slots at
+  segment boundaries, mid-flight — continuous batching transplanted from
+  LLM serving to multistart optimization.
+
+Event model (the LLM-serving vocabulary, one sweep = one "token step"):
+
+    submit --> [queue] --admit--> running --retire--> done
+       |
+       +-> reject (QueueFull) when the wait queue is at max_queue
+
+Admission and retirement both happen at segment boundaries (every
+`admit_every` sweeps): retired lanes (converged / failed / past their
+per-request deadline) are harvested into per-request results and freed;
+waiting lanes are seeded into the freed slots through
+`HostedSolve.admit`, which generalizes the quarantine heal
+(`launch.faults.seed_lanes` + the engine's init/where-merge) and forces
+the same gather-plan refresh — the repack/compact/auto-schedule
+controller sees an admission exactly like a retry.
+
+Why per-request parity holds (tests/test_service.py enforces it
+array-equal): a lane's sweep math reads only its own row — the batched
+evaluators are row-independent, gather-plan changes are bit-identical by
+the PR3-5 parity contracts, and admission writes only the admitted rows.
+So a request's trajectory in a busy pool equals its trajectory alone in a
+fresh batch with the same seed, and the per-lane `deadline` freeze
+produces the same iterates and DIVERGED status as a solo run's own
+iter_max stop. schedule="auto" is the one exception: the controller
+picks its (dynamic, ladder) plan from POOL-WIDE accepted-rung
+statistics, so a busy pool runs different fused launch shapes than a
+solo run — and XLA CPU rounds objective rows differently per launch
+shape (the §15 caveat; the engine's plan-parity contract is conditional
+on identically-rounding objectives). Under auto the solo contract is
+tolerance-level (ULP-order drift, traffic-dependent eval counts); the
+bit-exact statement is determinism — the identical arrival pattern
+reproduces every lane array-equal, eval counts included.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfgs import BFGSResult
+from repro.core.engine import (
+    CONVERGED,
+    DIVERGED,
+    HostedSolve,
+    open_multistart,
+    run_multistart,
+)
+from repro.core.objectives import Objective, get_objective
+from repro.core.zeus import ZeusOptions, phase2_setup
+from repro.launch.faults import seed_lanes
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the problem's wait queue is at max_queue; the caller
+    should retry later (or against another replica)."""
+
+
+class PoolHorizonExhausted(RuntimeError):
+    """The pool's sweep counter cannot fit another request's budget before
+    opts.iter_max (the pool horizon); open a fresh service."""
+
+
+# ---------------------------------------------------------------------------
+# Problem registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A named solve target: objective + dimension + solver config.
+
+    `opts` is the same ZeusOptions a solo `zeus()` call would take — the
+    service resolves it through `phase2_setup`, so a problem's pool runs
+    the exact solver configuration its solo solves do (the root of the
+    parity contract). `horizon` is the pool's total sweep budget
+    (engine iter_max): effectively the service lifetime, not a per-request
+    knob — requests carry their own iteration budgets."""
+
+    name: str
+    objective: Objective
+    dim: int
+    opts: ZeusOptions = ZeusOptions()
+    horizon: int = 100_000
+
+    @property
+    def default_iter_max(self) -> int:
+        return self.opts.bfgs.iter_bfgs
+
+
+class ProblemRegistry:
+    """Named problems the service accepts requests against."""
+
+    def __init__(self):
+        self._problems: Dict[str, Problem] = {}
+
+    def register(self, name: str, objective, dim: int,
+                 opts: Optional[ZeusOptions] = None,
+                 horizon: int = 100_000) -> Problem:
+        """`objective` is a registry name (str — resolved through
+        core.objectives.get_objective, keeping the identity-based fused
+        kernel lookup) or an Objective instance."""
+        if name in self._problems:
+            raise ValueError(f"problem {name!r} already registered")
+        obj = get_objective(objective) if isinstance(objective, str) \
+            else objective
+        if dim <= 0:
+            raise ValueError(f"dim must be >= 1 (got {dim})")
+        if obj.minimizer is not None:
+            star = np.asarray(obj.minimizer(dim))
+            if star.shape != (dim,):
+                raise ValueError(
+                    f"objective {obj.name!r} is fixed-dimensional "
+                    f"(minimizer is {star.shape[0]}D); got dim={dim}")
+        p = Problem(name=name, objective=obj, dim=dim,
+                    opts=opts if opts is not None else ZeusOptions(),
+                    horizon=horizon)
+        self._problems[name] = p
+        return p
+
+    def get(self, name: str) -> Problem:
+        if name not in self._problems:
+            raise KeyError(
+                f"unknown problem {name!r}; registered: "
+                f"{', '.join(sorted(self._problems)) or '(none)'}")
+        return self._problems[name]
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._problems))
+
+    def __contains__(self, name) -> bool:
+        return name in self._problems
+
+    def __len__(self) -> int:
+        return len(self._problems)
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One solve against a registered problem.
+
+    `seed` deterministically draws `n_starts` uniform start points inside
+    the problem's box (or pass explicit `x0` rows); `iter_max` is the
+    per-lane sweep budget (None = the problem's solver default). Every
+    start runs as its own lane; the result aggregates the best."""
+
+    problem: str
+    seed: int = 0
+    n_starts: int = 1
+    iter_max: Optional[int] = None
+    x0: Optional[Any] = None  # (n_starts, dim) explicit start points
+
+
+def request_starts(problem: Problem, req: SolveRequest) -> np.ndarray:
+    """The request's deterministic (n_starts, dim) start matrix — the SAME
+    function for service admission and solo reference, so parity is by
+    construction."""
+    if req.x0 is not None:
+        X = np.asarray(req.x0, np.float32)
+        if X.shape != (req.n_starts, problem.dim):
+            raise ValueError(
+                f"x0 shape {X.shape} != (n_starts, dim) = "
+                f"({req.n_starts}, {problem.dim})")
+        return X
+    obj = problem.objective
+    return np.asarray(jax.random.uniform(
+        jax.random.key(req.seed), (req.n_starts, problem.dim),
+        jnp.float32, minval=obj.lower, maxval=obj.upper))
+
+
+@dataclasses.dataclass
+class LaneOutcome:
+    """One start (= one lane life) of a request, as harvested."""
+
+    x: np.ndarray
+    fval: float
+    grad_norm: float
+    status: int  # core CONVERGED / DIVERGED
+    n_evals: int
+    slot: int  # flat lane slot the life ran in (diagnostic)
+    admit_sweep: int  # pool sweep counter at admission
+    retire_sweep: int  # pool sweep counter at harvest
+    t_submit: float
+    t_admit: float
+    t_retire: float
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """A drained request: best lane + all lane outcomes + latency."""
+
+    rid: int
+    problem: str
+    best_x: np.ndarray
+    best_f: float
+    status: int  # CONVERGED if any lane converged, else DIVERGED
+    n_converged: int
+    lanes: List[LaneOutcome]
+
+    @property
+    def admit_latency_s(self) -> float:
+        return min(l.t_admit for l in self.lanes) - self.lanes[0].t_submit
+
+    @property
+    def total_latency_s(self) -> float:
+        return max(l.t_retire for l in self.lanes) - self.lanes[0].t_submit
+
+
+@dataclasses.dataclass
+class _Ticket:
+    request: SolveRequest
+    state: str  # "queued" | "running" | "done"
+    budget: int
+    starts: np.ndarray  # (n_starts, dim)
+    t_submit: float
+    submit_sweep: int
+    pending: int  # lanes not yet retired
+    lanes: Dict[int, LaneOutcome] = dataclasses.field(default_factory=dict)
+    result: Optional[SolveResult] = None
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class _Pool:
+    """One problem's always-running lane pool: a HostedSolve + host-side
+    slot bookkeeping. Slots are flat lane indices < slots (chunk padding
+    lanes are never admittable)."""
+
+    def __init__(self, problem: Problem, slots: int, retry_seed: int):
+        strategy, eopts = phase2_setup(problem.opts)
+        if eopts.schedule == "replay":
+            raise ValueError(
+                "schedule='replay' pins a finite plan sequence and cannot "
+                "drive a service pool; use 'static' or 'auto'")
+        # the pool IS the solo config, with the driver-owned knobs
+        # re-pointed at service semantics: the pool runs to its horizon
+        # (not a per-solve budget), stop only when every slot froze
+        # (required_c=B), per-request budgets via lane deadlines, and no
+        # retries (a retry would resurrect a lane past its budget and
+        # consume PRNG draws that depend on pool traffic).
+        eopts = dataclasses.replace(
+            eopts, iter_max=problem.horizon, required_c=None,
+            lane_deadlines=True, retry_budget=0,
+            checkpoint_every=0, checkpoint_dir=None, fault_plan=None)
+        obj = problem.objective
+        self.problem = problem
+        self.base_X = np.full((slots, problem.dim),
+                              0.5 * (obj.lower + obj.upper), np.float32)
+        self.host: HostedSolve = open_multistart(
+            obj.fn, jnp.asarray(self.base_X), strategy, eopts,
+            retry_key=jax.random.key(retry_seed))
+        self.carry = self.host.empty_carry()
+        self.slots = slots
+        self.free: List[int] = list(range(slots))  # ascending = FIFO slots
+        self.occupied: Dict[int, Tuple[int, int]] = {}  # slot -> (rid, lane)
+        self.queue: deque = deque()  # (rid, lane_idx) waiting for a slot
+        self.k_now = 0
+
+    def has_work(self) -> bool:
+        return bool(self.occupied or self.queue)
+
+
+class SolveService:
+    """Continuous-batching solve service over a ProblemRegistry.
+
+    submit() -> rid enqueues a request (or raises QueueFull); pump()
+    advances every pool by one segment boundary (harvest retirements,
+    admit from the queue, sweep `admit_every` sweeps); drain() pumps until
+    every submitted request is done and returns {rid: SolveResult}.
+
+    `drain_then_refill=True` degrades admission to the batch-restart
+    baseline (only admit when the pool is completely empty) — identical
+    machinery, admission policy only, which is what the serve bench cell
+    measures continuous batching against."""
+
+    def __init__(self, registry: ProblemRegistry, slots: int = 8,
+                 max_queue: int = 64, admit_every: int = 1,
+                 drain_then_refill: bool = False, retry_seed: int = 0):
+        if slots <= 0:
+            raise ValueError(f"slots must be >= 1 (got {slots})")
+        if admit_every <= 0:
+            raise ValueError(f"admit_every must be >= 1 (got {admit_every})")
+        self.registry = registry
+        self.slots = slots
+        self.max_queue = max_queue
+        self.admit_every = admit_every
+        self.drain_then_refill = drain_then_refill
+        self._retry_seed = retry_seed
+        self._pools: Dict[str, _Pool] = {}
+        self._tickets: Dict[int, _Ticket] = {}
+        self._next_rid = 0
+        self.ledger: List[dict] = []  # submit/reject/admit/retire/done events
+
+    # -- bookkeeping -------------------------------------------------------
+
+    def _event(self, event: str, **fields):
+        self.ledger.append({"event": event, "t": time.perf_counter(),
+                            **fields})
+
+    def _pool(self, name: str) -> _Pool:
+        if name not in self._pools:
+            self._pools[name] = _Pool(self.registry.get(name), self.slots,
+                                      self._retry_seed)
+        return self._pools[name]
+
+    def state(self, rid: int) -> str:
+        return self._tickets[rid].state
+
+    def request(self, rid: int) -> SolveRequest:
+        return self._tickets[rid].request
+
+    def result(self, rid: int) -> SolveResult:
+        t = self._tickets[rid]
+        if t.result is None:
+            raise KeyError(f"request {rid} not done (state={t.state!r})")
+        return t.result
+
+    def results(self) -> Dict[int, SolveResult]:
+        return {rid: t.result for rid, t in self._tickets.items()
+                if t.result is not None}
+
+    # -- the request path --------------------------------------------------
+
+    def submit(self, req: SolveRequest) -> int:
+        problem = self.registry.get(req.problem)
+        if req.n_starts <= 0:
+            raise ValueError(f"n_starts must be >= 1 (got {req.n_starts})")
+        budget = (req.iter_max if req.iter_max is not None
+                  else problem.default_iter_max)
+        if budget <= 0:
+            raise ValueError(f"iter_max must be >= 1 (got {budget})")
+        if budget > problem.horizon:
+            raise ValueError(
+                f"iter_max={budget} exceeds the pool horizon "
+                f"{problem.horizon}")
+        pool = self._pool(req.problem)
+        waiting = sum(1 for t in self._tickets.values()
+                      if t.state == "queued"
+                      and t.request.problem == req.problem)
+        if waiting >= self.max_queue:
+            self._event("reject", problem=req.problem, queued=waiting)
+            raise QueueFull(
+                f"problem {req.problem!r} wait queue at max_queue="
+                f"{self.max_queue}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._tickets[rid] = _Ticket(
+            request=req, state="queued", budget=budget,
+            starts=request_starts(problem, req),
+            t_submit=time.perf_counter(), submit_sweep=pool.k_now,
+            pending=req.n_starts)
+        for lane in range(req.n_starts):
+            pool.queue.append((rid, lane))
+        self._event("submit", rid=rid, problem=req.problem,
+                    n_starts=req.n_starts, iter_max=budget,
+                    sweep=pool.k_now, queued=waiting + 1)
+        return rid
+
+    # -- segment boundaries ------------------------------------------------
+
+    def _harvest(self, pool: _Pool, view: dict):
+        k = int(view["k"])
+        pool.k_now = k
+        retired = []
+        for slot, (rid, lane) in list(pool.occupied.items()):
+            dl = int(view["deadline"][slot])
+            done = (bool(view["converged"][slot])
+                    or bool(view["failed"][slot])
+                    or (dl > 0 and k >= dl))
+            if not done:
+                continue
+            t = self._tickets[rid]
+            out = t.lanes[lane]
+            out.x = view["x"][slot].copy()
+            out.fval = float(view["f"][slot])
+            out.grad_norm = float(view["grad_norm"][slot])
+            out.n_evals = int(view["n_evals"][slot])
+            # a lane past its deadline without converging is the solo
+            # run's k >= iter_max stop: DIVERGED either way
+            out.status = CONVERGED if bool(view["converged"][slot]) \
+                else DIVERGED
+            out.retire_sweep = k
+            out.t_retire = time.perf_counter()
+            del pool.occupied[slot]
+            pool.free.append(slot)
+            t.pending -= 1
+            retired.append((rid, lane, slot))
+            self._event("retire", rid=rid, lane=lane, slot=slot, sweep=k,
+                        status=out.status)
+            if t.pending == 0:
+                self._finish(rid, t)
+        if retired:
+            pool.free.sort()
+        return retired
+
+    def _finish(self, rid: int, t: _Ticket):
+        lanes = [t.lanes[i] for i in sorted(t.lanes)]
+        fv = np.asarray([l.fval for l in lanes])
+        conv = np.asarray([l.status == CONVERGED for l in lanes])
+        # best lane prefers converged (zeus._select_best's rule): among
+        # converged lanes take the lowest f, else lowest finite f overall
+        fsel = np.where(conv, fv, np.inf) if conv.any() else \
+            np.where(np.isfinite(fv), fv, np.inf)
+        best = int(np.argmin(fsel))
+        t.result = SolveResult(
+            rid=rid, problem=t.request.problem, best_x=lanes[best].x,
+            best_f=lanes[best].fval,
+            status=CONVERGED if conv.any() else DIVERGED,
+            n_converged=int(conv.sum()), lanes=lanes)
+        t.state = "done"
+        self._event("done", rid=rid, problem=t.request.problem,
+                    status=t.result.status,
+                    sweep=max(l.retire_sweep for l in lanes))
+
+    def _admit(self, pool: _Pool, k: int):
+        if not pool.queue or not pool.free:
+            return
+        if self.drain_then_refill and pool.occupied:
+            return  # batch-restart baseline: wait for a full drain
+        B, B_flat = pool.host.B, pool.host.B_flat
+        mask = np.zeros(B_flat, bool)
+        deadlines = np.zeros(B_flat, np.int32)
+        fresh = pool.base_X.copy()
+        admitted = []
+        while pool.queue and pool.free:
+            rid, lane = pool.queue[0]
+            t = self._tickets[rid]
+            if k + t.budget > pool.problem.horizon:
+                raise PoolHorizonExhausted(
+                    f"pool {pool.problem.name!r} at sweep {k} cannot fit "
+                    f"iter_max={t.budget} before horizon "
+                    f"{pool.problem.horizon}")
+            pool.queue.popleft()
+            slot = pool.free.pop(0)
+            mask[slot] = True
+            deadlines[slot] = k + t.budget
+            fresh[slot] = t.starts[lane]
+            pool.occupied[slot] = (rid, lane)
+            now = time.perf_counter()
+            t.lanes[lane] = LaneOutcome(
+                x=None, fval=np.nan, grad_norm=np.nan, status=-1,
+                n_evals=0, slot=slot, admit_sweep=k, retire_sweep=-1,
+                t_submit=t.t_submit, t_admit=now, t_retire=np.nan)
+            if t.state == "queued":
+                t.state = "running"
+            admitted.append((rid, lane, slot))
+            self._event("admit", rid=rid, lane=lane, slot=slot, sweep=k,
+                        wait_sweeps=k - t.submit_sweep)
+        if admitted:
+            # the admission start matrix is the quarantine re-seeder's
+            # merge with request starts in place of uniform draws
+            X = seed_lanes(jnp.asarray(pool.base_X), mask[:B],
+                           jnp.asarray(fresh))
+            pool.carry = pool.host.admit(pool.carry, mask, X, deadlines)
+
+    def pump(self) -> bool:
+        """One segment boundary on every pool with work: harvest retired
+        lanes, admit from the queue, sweep admit_every sweeps. Returns
+        True while any request is not done."""
+        for pool in self._pools.values():
+            if not pool.has_work():
+                continue
+            view = pool.host.lane_view(pool.carry)
+            self._harvest(pool, view)
+            self._admit(pool, pool.k_now)
+            if pool.occupied:
+                pool.carry = pool.host.segment(
+                    pool.carry, pool.k_now + self.admit_every)
+                pool.k_now = int(jax.device_get(pool.carry.k))
+        return any(p.has_work() for p in self._pools.values())
+
+    def drain(self) -> Dict[int, SolveResult]:
+        while self.pump():
+            pass
+        return self.results()
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Request-level latency/throughput summary (done requests)."""
+        done = [t for t in self._tickets.values() if t.result is not None]
+        out = {
+            "n_done": len(done),
+            "n_queued": sum(t.state == "queued"
+                            for t in self._tickets.values()),
+            "n_running": sum(t.state == "running"
+                             for t in self._tickets.values()),
+            "pool_sweeps": {name: p.k_now
+                            for name, p in self._pools.items()},
+        }
+        if done:
+            adm_s = np.asarray([t.result.admit_latency_s for t in done])
+            tot_s = np.asarray([t.result.total_latency_s for t in done])
+            adm_k = np.asarray(
+                [min(l.admit_sweep for l in t.result.lanes)
+                 - t.submit_sweep for t in done])
+            t0 = min(t.t_submit for t in done)
+            t1 = max(l.t_retire for t in done for l in t.result.lanes)
+            out.update(
+                admit_latency_s_p50=float(np.percentile(adm_s, 50)),
+                admit_latency_s_p95=float(np.percentile(adm_s, 95)),
+                admit_latency_sweeps_p50=float(np.percentile(adm_k, 50)),
+                admit_latency_sweeps_p95=float(np.percentile(adm_k, 95)),
+                total_latency_s_p50=float(np.percentile(tot_s, 50)),
+                total_latency_s_p95=float(np.percentile(tot_s, 95)),
+                solves_per_sec=(len(done) / (t1 - t0) if t1 > t0
+                                else float("inf")),
+            )
+        return out
+
+    def dump_ledger(self, path: str):
+        """JSON request ledger (CI uploads this as an artifact on
+        service-smoke failures)."""
+        with open(path, "w") as fh:
+            json.dump(self.ledger, fh, indent=1)
+
+
+def solo_reference(problem: Problem, req: SolveRequest,
+                   slots: Optional[int] = None) -> BFGSResult:
+    """The request run ALONE in a fresh batch with the same seed — the
+    parity oracle for tests/bench, independent of the service machinery
+    (no deadlines, no admission: a plain run_multistart whose iter_max is
+    the request budget).
+
+    `slots` pads the batch to the pool's width with box-midpoint rows —
+    rows [:n_starts] are the request. The width matters: XLA's codegen
+    (reductions in the dense-H einsums, vmap layouts) rounds differently
+    per batch WIDTH, so bit-equality is only defined against a fresh batch
+    of the same width — which is also exactly the continuous-batching
+    contract: at fixed width, a lane's trajectory is independent of what
+    the other rows hold (busy pool == alone in the pool), enforced by
+    tests/test_service.py. Scheduling/layout plans may differ between the
+    busy pool and this run; the PR3-5 contracts make those bit-identical
+    per lane.
+
+    The reference runs under jax.jit: the pool's segments are jitted
+    programs, and XLA fuses eager f32 code differently in low-order bits
+    — the §15 execution-mode caveat (an un-jitted solve is not a valid
+    bit-exact reference for any jitted path)."""
+    strategy, eopts = phase2_setup(problem.opts)
+    budget = req.iter_max if req.iter_max is not None \
+        else problem.default_iter_max
+    eopts = dataclasses.replace(
+        eopts, iter_max=budget, required_c=None, lane_deadlines=False,
+        retry_budget=0, checkpoint_every=0, checkpoint_dir=None,
+        fault_plan=None)
+    starts = request_starts(problem, req)
+    width = max(slots or req.n_starts, req.n_starts)
+    obj = problem.objective
+    X = np.full((width, problem.dim), 0.5 * (obj.lower + obj.upper),
+                np.float32)
+    X[:req.n_starts] = starts
+    return jax.jit(
+        lambda x: run_multistart(obj.fn, x, strategy, eopts)
+    )(jnp.asarray(X))

@@ -1,0 +1,426 @@
+"""Solve-service suite (DESIGN.md §16): continuous lane batching.
+
+The load-bearing contract is the continuous-batching analogue of the
+repack parity contract, and it is ARRAY-EQUALITY, not tolerance: every
+request admitted into a busy pool — whatever the traffic around it, the
+slot it lands in, the lane_chunk layout, or the schedule driving the
+sweeps — produces the trajectory, status, and counters of running it
+ALONE in a fresh batch with the same seed. That holds because a lane's
+sweep math reads only its own row, admission writes only the admitted
+rows, and the per-lane deadline freeze reproduces a solo run's iter_max
+stop exactly (same iterates, same DIVERGED status, same eval counters).
+
+schedule="auto" is the one exception, and it is the controller's, not
+the service's: the auto controller picks its (dynamic, ladder) plan from
+POOL-WIDE accepted-rung statistics, so a busy pool runs different fused
+launch shapes than the solo run — and XLA CPU rounds objective rows
+differently per launch shape (the §15 batch-shape caveat; the engine's
+plan-parity contract is explicitly conditional on identically-rounding
+objectives). The auto legs therefore check the solo oracle at tolerance
+level and take their ARRAY-EQUAL guarantee from determinism instead: the
+identical arrival pattern replayed into a fresh service reproduces every
+lane bit-exactly, n_evals included (see _assert_request_parity and
+test_busy_pool_matches_solo).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CONVERGED, DIVERGED, BFGSOptions, ZeusOptions
+from repro.serve.service import (
+    PoolHorizonExhausted,
+    ProblemRegistry,
+    QueueFull,
+    SolveRequest,
+    SolveService,
+    request_starts,
+    solo_reference,
+)
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+def _zopts(sweep_mode="batched", chunk=None, schedule="static",
+           iter_bfgs=40, theta=1e-4):
+    return ZeusOptions(
+        bfgs=BFGSOptions(iter_bfgs=iter_bfgs, theta=theta,
+                         ad_mode="reverse", ls_iters=12,
+                         sweep_mode=sweep_mode, lane_chunk=chunk,
+                         schedule=schedule, schedule_every=2))
+
+
+def _registry(name="ras", objective="rastrigin", dim=3, **kw):
+    reg = ProblemRegistry()
+    reg.register(name, objective, dim, opts=_zopts(**kw))
+    return reg
+
+
+def _assert_request_parity(svc, reg, rid, exact=True):
+    """Every lane of a drained request matches the solo solve (the request
+    alone in a fresh jitted batch of the pool's width).
+
+    exact=True (static schedules): ARRAY-EQUAL trajectory, counters and
+    all. exact=False (schedule="auto"): the controller picks its plan
+    from POOL-WIDE accepted-rung statistics, so a busy pool runs
+    different fused launch shapes than the solo run, and XLA CPU rounds
+    objective rows differently per launch shape (§15) — the trajectory
+    can drift at ULP order and the eval count is traffic-dependent. The
+    auto legs assert status equality plus tight-tolerance trajectory
+    agreement here; their bit-exact guarantee is the same-traffic
+    determinism check (_assert_results_identical)."""
+    res = svc.result(rid)
+    ref = solo_reference(reg.get(res.problem), svc.request(rid),
+                         slots=svc.slots)
+    for i, lane in enumerate(res.lanes):
+        assert lane.status == int(np.asarray(ref.status)[i]), \
+            f"rid={rid} lane={i} status"
+        if exact:
+            np.testing.assert_array_equal(lane.x, np.asarray(ref.x)[i],
+                                          err_msg=f"rid={rid} lane={i} x")
+            np.testing.assert_array_equal(
+                lane.fval, np.asarray(ref.fval)[i],
+                err_msg=f"rid={rid} lane={i} fval")
+            np.testing.assert_array_equal(
+                lane.grad_norm, np.asarray(ref.grad_norm)[i],
+                err_msg=f"rid={rid} lane={i} grad_norm")
+            assert lane.n_evals == int(np.asarray(ref.n_evals)[i]), \
+                f"rid={rid} lane={i} n_evals"
+        else:
+            np.testing.assert_allclose(
+                lane.x, np.asarray(ref.x)[i], rtol=1e-3, atol=1e-3,
+                err_msg=f"rid={rid} lane={i} x")
+            np.testing.assert_allclose(
+                lane.fval, np.asarray(ref.fval)[i], rtol=1e-3, atol=1e-5,
+                err_msg=f"rid={rid} lane={i} fval")
+
+
+def _assert_results_identical(res_a, res_b):
+    """The bit-exact leg for schedule="auto": two services fed the
+    identical arrival pattern harvest identical lanes — same trajectory,
+    same statuses, same eval counts, same admit/retire sweeps."""
+    assert len(res_a.lanes) == len(res_b.lanes)
+    for i, (la, lb) in enumerate(zip(res_a.lanes, res_b.lanes)):
+        np.testing.assert_array_equal(la.x, lb.x, err_msg=f"lane={i} x")
+        assert la.fval == lb.fval, f"lane={i} fval"
+        assert la.grad_norm == lb.grad_norm, f"lane={i} grad_norm"
+        assert la.status == lb.status, f"lane={i} status"
+        assert la.n_evals == lb.n_evals, f"lane={i} n_evals"
+        assert la.admit_sweep == lb.admit_sweep, f"lane={i} admit_sweep"
+        assert la.retire_sweep == lb.retire_sweep, f"lane={i} retire_sweep"
+
+
+# ---------------------------------------------------------------------------
+# Problem registry
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_register_and_lookup(self):
+        reg = ProblemRegistry()
+        p = reg.register("ras4", "rastrigin", 4)
+        assert reg.get("ras4") is p
+        assert p.objective.name == "rastrigin"
+        assert reg.names() == ("ras4",)
+        assert "ras4" in reg and len(reg) == 1
+
+    def test_duplicate_name_rejected(self):
+        reg = _registry()
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("ras", "ackley", 2)
+
+    def test_unknown_problem(self):
+        with pytest.raises(KeyError, match="unknown problem"):
+            ProblemRegistry().get("nope")
+
+    def test_fixed_dim_objective_checked(self):
+        reg = ProblemRegistry()
+        with pytest.raises(ValueError, match="fixed-dimensional"):
+            reg.register("gp", "goldstein_price", 5)
+        reg.register("gp", "goldstein_price", 2)
+
+    def test_named_objective_keeps_identity(self):
+        # str registration goes through get_objective, so the pool's
+        # batched path finds the fused kernels by function identity
+        from repro.core.objectives import get_objective
+        reg = _registry()
+        assert reg.get("ras").objective.fn is get_objective("rastrigin").fn
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + request lifecycle
+# ---------------------------------------------------------------------------
+class TestBackpressure:
+    def test_queue_full_rejects(self):
+        svc = SolveService(_registry(), slots=2, max_queue=2)
+        svc.submit(SolveRequest("ras", seed=0))
+        svc.submit(SolveRequest("ras", seed=1))
+        with pytest.raises(QueueFull):
+            svc.submit(SolveRequest("ras", seed=2))
+        assert svc.ledger[-1]["event"] == "reject"
+        svc.drain()  # the accepted two still complete
+
+    def test_states_progress(self):
+        svc = SolveService(_registry(), slots=2)
+        rid = svc.submit(SolveRequest("ras", seed=0, iter_max=10))
+        assert svc.state(rid) == "queued"
+        svc.pump()
+        assert svc.state(rid) == "running"
+        svc.drain()
+        assert svc.state(rid) == "done"
+        assert svc.result(rid).rid == rid
+
+    def test_result_before_done_raises(self):
+        svc = SolveService(_registry(), slots=2)
+        rid = svc.submit(SolveRequest("ras", seed=0))
+        with pytest.raises(KeyError, match="not done"):
+            svc.result(rid)
+
+    def test_budget_validation(self):
+        svc = SolveService(_registry(), slots=2)
+        with pytest.raises(ValueError, match="n_starts"):
+            svc.submit(SolveRequest("ras", n_starts=0))
+        with pytest.raises(ValueError, match="exceeds the pool horizon"):
+            svc.submit(SolveRequest("ras", iter_max=10**9))
+
+    def test_horizon_exhaustion_raises(self):
+        reg = ProblemRegistry()
+        reg.register("ras", "rastrigin", 3,
+                     opts=_zopts(theta=1e-30), horizon=25)
+        svc = SolveService(reg, slots=1)
+        svc.submit(SolveRequest("ras", seed=0, iter_max=20))
+        svc.submit(SolveRequest("ras", seed=1, iter_max=20))
+        with pytest.raises(PoolHorizonExhausted):
+            svc.drain()
+
+
+# ---------------------------------------------------------------------------
+# Slot harvest/seed bookkeeping
+# ---------------------------------------------------------------------------
+class TestSlotBookkeeping:
+    def test_slots_recycle_and_ledger_balances(self):
+        svc = SolveService(_registry(theta=1e-30), slots=2)
+        rids = [svc.submit(SolveRequest("ras", seed=s, iter_max=6))
+                for s in range(5)]
+        svc.drain()
+        pool = svc._pools["ras"]
+        assert not pool.occupied and not pool.queue
+        assert sorted(pool.free) == [0, 1]
+        events = [e["event"] for e in svc.ledger]
+        assert events.count("submit") == 5
+        assert events.count("admit") == 5
+        assert events.count("retire") == 5
+        assert events.count("done") == 5
+        # 5 single-lane requests through 2 slots: reuse was required
+        slots_used = {e["slot"] for e in svc.ledger
+                      if e["event"] == "admit"}
+        assert slots_used == {0, 1}
+        for rid in rids:
+            assert svc.state(rid) == "done"
+
+    def test_deadline_budget_is_exact(self):
+        # theta=1e-30 never converges: every lane must retire DIVERGED
+        # after EXACTLY its budget of sweeps, whenever it was admitted
+        svc = SolveService(_registry(theta=1e-30), slots=2)
+        rids = [svc.submit(SolveRequest("ras", seed=s, iter_max=4 + s))
+                for s in range(4)]
+        svc.drain()
+        for rid in rids:
+            res = svc.result(rid)
+            assert res.status == DIVERGED
+            (lane,) = res.lanes
+            assert lane.retire_sweep - lane.admit_sweep == 4 + rid
+
+    def test_mid_flight_admission_happens(self):
+        # with staggered budgets the second wave must be admitted while
+        # the first is still sweeping (continuous batching, not drain)
+        svc = SolveService(_registry(theta=1e-30), slots=2)
+        svc.submit(SolveRequest("ras", seed=0, iter_max=20))
+        svc.submit(SolveRequest("ras", seed=1, iter_max=4))
+        svc.submit(SolveRequest("ras", seed=2, iter_max=4))
+        svc.drain()
+        admits = {e["rid"]: e["sweep"] for e in svc.ledger
+                  if e["event"] == "admit"}
+        # request 2 was admitted into request 1's freed slot before
+        # request 0 retired
+        assert 0 < admits[2] < 20
+
+    def test_drain_then_refill_mode_waits(self):
+        svc = SolveService(_registry(theta=1e-30), slots=2,
+                           drain_then_refill=True)
+        for s in range(4):
+            svc.submit(SolveRequest("ras", seed=s, iter_max=6))
+        svc.drain()
+        admits = sorted(e["sweep"] for e in svc.ledger
+                        if e["event"] == "admit")
+        # two waves: both second-wave admissions wait for the full drain
+        # (the first wave's 6-sweep budgets retire exactly at sweep 6)
+        assert admits[0] == admits[1] == 0
+        assert admits[2] == admits[3] == 6
+
+    def test_n_starts_aggregation(self):
+        reg = _registry(iter_bfgs=60)
+        svc = SolveService(reg, slots=4)
+        rid = svc.submit(SolveRequest("ras", seed=3, n_starts=4))
+        svc.drain()
+        res = svc.result(rid)
+        assert len(res.lanes) == 4
+        conv = [l for l in res.lanes if l.status == CONVERGED]
+        assert res.n_converged == len(conv)
+        if conv:
+            assert res.status == CONVERGED
+            best = min(conv, key=lambda l: l.fval)
+            assert res.best_f == best.fval
+            np.testing.assert_array_equal(res.best_x, best.x)
+
+    def test_request_starts_deterministic(self):
+        reg = _registry()
+        p = reg.get("ras")
+        a = request_starts(p, SolveRequest("ras", seed=9, n_starts=3))
+        b = request_starts(p, SolveRequest("ras", seed=9, n_starts=3))
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (3, 3)
+        assert (a >= p.objective.lower).all() and \
+            (a <= p.objective.upper).all()
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching parity: busy pool == solo solve, array-equal
+# ---------------------------------------------------------------------------
+PARITY_GRID = [
+    ("batched", None, "static"),
+    ("batched", 2, "static"),
+    ("batched", None, "auto"),
+    ("batched", 2, "auto"),
+    ("per_lane", None, "static"),
+    ("per_lane", 2, "static"),  # schedule="auto" requires batched sweeps
+]
+
+
+def _run_mixed_scenario(reg):
+    """Staggered mixed traffic: different seeds, budgets and lane counts,
+    second wave submitted mid-flight. Deterministic: same registry opts
+    => same arrival pattern => same pool history."""
+    svc = SolveService(reg, slots=4)
+    rids = [
+        svc.submit(SolveRequest("ras", seed=0, n_starts=2, iter_max=18)),
+        svc.submit(SolveRequest("ras", seed=1, n_starts=1, iter_max=6)),
+    ]
+    svc.pump()
+    svc.pump()
+    rids += [
+        svc.submit(SolveRequest("ras", seed=2, n_starts=3, iter_max=12)),
+        svc.submit(SolveRequest("ras", seed=3, n_starts=1, iter_max=18)),
+    ]
+    svc.drain()
+    return svc, rids
+
+
+class TestContinuousBatchingParity:
+    @pytest.mark.parametrize("sweep_mode,chunk,schedule", PARITY_GRID)
+    def test_busy_pool_matches_solo(self, sweep_mode, chunk, schedule):
+        reg = _registry(sweep_mode=sweep_mode, chunk=chunk,
+                        schedule=schedule, iter_bfgs=24, theta=1e-3)
+        svc, rids = _run_mixed_scenario(reg)
+        for rid in rids:
+            _assert_request_parity(svc, reg, rid,
+                                   exact=(schedule != "auto"))
+        if schedule == "auto":
+            # the auto legs' ARRAY-EQUAL guarantee: the identical arrival
+            # pattern into a fresh service reproduces every lane
+            # bit-exactly (n_evals included) — the pool machinery adds no
+            # nondeterminism on top of the controller's traffic adaptivity
+            svc2, rids2 = _run_mixed_scenario(reg)
+            for rid, rid2 in zip(rids, rids2):
+                _assert_results_identical(svc.result(rid),
+                                          svc2.result(rid2))
+
+    def test_busy_pool_equals_fresh_service(self):
+        # content independence through the full service path: the same
+        # request in a busy pool and alone in a fresh service (same
+        # width) harvests identical lanes
+        req = SolveRequest("ras", seed=5, n_starts=2, iter_max=10)
+        reg = _registry(iter_bfgs=24, theta=1e-3)
+        busy = SolveService(reg, slots=4)
+        busy.submit(SolveRequest("ras", seed=0, n_starts=2, iter_max=20))
+        rid_busy = busy.submit(req)
+        busy.drain()
+        alone = SolveService(reg, slots=4)
+        rid_alone = alone.submit(req)
+        alone.drain()
+        for lb, la in zip(busy.result(rid_busy).lanes,
+                          alone.result(rid_alone).lanes):
+            np.testing.assert_array_equal(lb.x, la.x)
+            assert lb.fval == la.fval
+            assert lb.grad_norm == la.grad_norm
+            assert lb.status == la.status and lb.n_evals == la.n_evals
+
+    def test_megakernel_pool_matches_solo(self):
+        reg = _registry(sweep_mode="megakernel", iter_bfgs=20, theta=1e-3)
+        svc = SolveService(reg, slots=4)
+        rids = [svc.submit(SolveRequest("ras", seed=s, iter_max=8 + 4 * s))
+                for s in range(3)]
+        svc.drain()
+        for rid in rids:
+            _assert_request_parity(svc, reg, rid)
+
+    def test_mixed_problem_pools_are_independent(self):
+        # the service-smoke stream: three objectives at different D,
+        # interleaved submissions, every request solo-parity checked and
+        # the ledger dumped the way the CI job uploads it on failure
+        reg = ProblemRegistry()
+        reg.register("ras4", "rastrigin", 4, opts=_zopts(iter_bfgs=30))
+        reg.register("ack2", "ackley", 2, opts=_zopts(iter_bfgs=30))
+        reg.register("ros3", "rosenbrock", 3,
+                     opts=_zopts(iter_bfgs=40, chunk=2))
+        svc = SolveService(reg, slots=4)
+        rids = []
+        for s in range(6):
+            rids.append(svc.submit(SolveRequest(
+                ["ras4", "ack2", "ros3"][s % 3], seed=s, n_starts=2,
+                iter_max=20 + 5 * (s % 2))))
+            svc.pump()
+        try:
+            svc.drain()
+        finally:
+            ledger_dir = os.environ.get("REPRO_SERVICE_LEDGER_DIR")
+            if ledger_dir:
+                os.makedirs(ledger_dir, exist_ok=True)
+                svc.dump_ledger(
+                    os.path.join(ledger_dir, "service_smoke_ledger.json"))
+        assert len(svc.results()) == 6
+        for rid in rids:
+            assert svc.state(rid) == "done"
+            _assert_request_parity(svc, reg, rid)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: random arrival patterns x lane_chunk x schedule
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES",
+                                          "10")),
+          deadline=None)
+@given(
+    arrivals=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=7),  # seed
+                  st.sampled_from([5, 9]),  # iter budget
+                  st.integers(min_value=0, max_value=2)),  # pumps before
+        min_size=1, max_size=5),
+    chunk=st.sampled_from([None, 2]),
+    schedule=st.sampled_from(["static", "auto"]),
+)
+def test_property_arrival_pattern_parity(arrivals, chunk, schedule):
+    """Any arrival pattern into any pool layout: every request's harvested
+    lanes are array-equal to the solo solve with the same seed."""
+    reg = _registry(chunk=chunk, schedule=schedule, iter_bfgs=16,
+                    theta=1e-3)
+    svc = SolveService(reg, slots=4, max_queue=16)
+    rids = []
+    for seed, budget, pumps in arrivals:
+        for _ in range(pumps):
+            svc.pump()
+        rids.append(svc.submit(
+            SolveRequest("ras", seed=seed, iter_max=budget)))
+    svc.drain()
+    for rid in rids:
+        _assert_request_parity(svc, reg, rid,
+                               exact=(schedule != "auto"))

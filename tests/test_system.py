@@ -109,8 +109,13 @@ class TestLauncherIntegration:
         ])
         assert np.isfinite(final)
 
-    def test_serve_generates(self):
+    def test_serve_drains_request_stream(self):
+        from repro.core import CONVERGED
         from repro.launch import serve as S
-        out = S.main(["--arch", "gemma2-2b", "--reduced", "--batch", "2",
-                      "--prompt-len", "4", "--new-tokens", "4"])
-        assert out.shape == (2, 4)
+        results = S.main([
+            "--problems", "rastrigin:3,ackley:2", "--requests", "4",
+            "--n-starts", "2", "--iter-max", "30", "--slots", "4",
+        ])
+        assert len(results) == 4
+        assert all(r.status == CONVERGED for r in results.values())
+        assert all(len(r.lanes) == 2 for r in results.values())
