@@ -29,6 +29,18 @@ when a perf floor regresses:
     cell) must stay <= BENCH_AUTO_SLACK (default 1.1 — the ISSUE-5
     criterion: the controller, burn-in windows included, can never
     silently regress below what a user could configure by hand);
+  * `auto_cost_ratio` (auto_cost_model=True wall — host-boundary plan
+    decisions scored in measured seconds with the EMA-fitted c_row and
+    c_launch — over the wall-time-best hand-tuned static schedule) must
+    stay <= BENCH_AUTO_COST_SLACK (default 1.15 — the DESIGN.md §17
+    criterion: the measured cost model, its host boundaries and fit
+    burn-in included, must land within slack of the best hand tune);
+  * `telemetry_overhead_ratio` (the same cost-model run over a HOSTED
+    replay of its own recorded plans — the same segmented driver at the
+    same window boundaries, so the per-segment dispatch cost cancels and
+    only the recorder + fit + lattice scoring remain) must stay <=
+    BENCH_TELEMETRY_OVERHEAD_CEIL (default 1.05 — measuring must cost
+    percent-level wall);
   * `megakernel_wall_ratio` (sweep_mode="megakernel" / staged batched wall
     on the megakernel-supported cell) must stay <= BENCH_MEGAKERNEL_CEIL
     (default 1.1 — the ISSUE-6 criterion as a parity ceiling: on the CPU
@@ -79,6 +91,11 @@ MODE_KEYS = {
 }
 TAIL_MODE_KEYS = {"wall_s", "eval_rows", "rows_per_sweep", "map_trips"}
 AUTO_MODE_KEYS = {"wall_s", "eval_rows", "map_trips"}
+TELEM_COST_KEYS = {"wall_s", "eval_rows", "map_trips", "plans", "telemetry"}
+# the JSON-safe telemetry_summary keys (energy keys are optional by
+# design — the probe is a capability, not a dependency)
+TELEM_SUMMARY_KEYS = {"n_windows", "wall_s_total", "rows_total",
+                      "launches_total", "c_row", "c_launch"}
 MEGA_MODE_KEYS = {"wall_s", "eval_rows", "map_trips", "launches_per_sweep"}
 MEGA_LAUNCH_CEIL = 2.0  # structural: full ladder = 1, short ladder = 2
 SERVE_MODE_KEYS = {
@@ -94,7 +111,8 @@ SERVE_MODE_KEYS = {
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
           trip_ceil: float, ladder_ceil: float, auto_slack: float,
-          mega_ceil: float, ckpt_ceil: float, serve_floor: float) -> list:
+          auto_cost_slack: float, telem_ceil: float, mega_ceil: float,
+          ckpt_ceil: float, serve_floor: float) -> list:
     errors = []
 
     def need(cond, msg):
@@ -102,17 +120,19 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             errors.append(msg)
 
     for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto",
-                "mega", "ckpt", "serve"):
+                "telemetry", "mega", "ckpt", "serve"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
     autos = payload.get("auto") or {}
+    telems = payload.get("telemetry") or {}
     megas = payload.get("mega") or {}
     ckpts = payload.get("ckpt") or {}
     serves = payload.get("serve") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
     need(len(autos) > 0, "no auto_vs_best_static cells measured")
+    need(len(telems) > 0, "no telemetry cost-model cells measured")
     need(len(megas) > 0, "no megakernel cells measured")
     need(len(ckpts) > 0, "no checkpoint-overhead cells measured")
     need(len(serves) > 0, "no solve-service cells measured")
@@ -185,6 +205,46 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
                 f"{auto_slack} — the controller regressed below the best "
                 f"hand-tuned static schedule",
             )
+
+    for name, telem in telems.items():
+        block = telem.get("auto_cost")
+        need(isinstance(block, dict),
+             f"telemetry.{name}: missing 'auto_cost' block")
+        if isinstance(block, dict):
+            missing = TELEM_COST_KEYS - set(block)
+            need(not missing,
+                 f"telemetry.{name}.auto_cost: missing keys "
+                 f"{sorted(missing)}")
+            need(block.get("wall_s", 0) > 0,
+                 f"telemetry.{name}.auto_cost: wall_s <= 0")
+            summary = block.get("telemetry")
+            need(isinstance(summary, dict),
+                 f"telemetry.{name}.auto_cost: missing recorder summary")
+            if isinstance(summary, dict):
+                missing = TELEM_SUMMARY_KEYS - set(summary)
+                need(not missing,
+                     f"telemetry.{name}.auto_cost.telemetry: missing keys "
+                     f"{sorted(missing)}")
+                need(summary.get("n_windows", 0) > 0,
+                     f"telemetry.{name}: recorder saw no windows — the "
+                     f"cost model ran without measurements")
+        replay = telem.get("replay")
+        need(isinstance(replay, dict) and replay.get("wall_s", 0) > 0,
+             f"telemetry.{name}: missing replay block with positive wall_s")
+        ratio = telem.get("auto_cost_ratio")
+        need(
+            isinstance(ratio, (int, float)) and 0 < ratio <= auto_cost_slack,
+            f"telemetry.{name}: auto_cost_ratio {ratio!r} above slack "
+            f"{auto_cost_slack} — the measured cost model regressed below "
+            f"the wall-time-best hand-tuned static schedule",
+        )
+        oratio = telem.get("telemetry_overhead_ratio")
+        need(
+            isinstance(oratio, (int, float)) and 0 < oratio <= telem_ceil,
+            f"telemetry.{name}: telemetry_overhead_ratio {oratio!r} above "
+            f"ceiling {telem_ceil} — recording windows must cost "
+            f"percent-level wall over the hosted replay",
+        )
 
     for name, mega in megas.items():
         for mode in ("staged", "megakernel", "megakernel_ladder"):
@@ -283,6 +343,13 @@ def main(argv=None) -> int:
         "--auto-slack", type=float,
         default=float(os.environ.get("BENCH_AUTO_SLACK", "1.1")))
     ap.add_argument(
+        "--auto-cost-slack", type=float,
+        default=float(os.environ.get("BENCH_AUTO_COST_SLACK", "1.15")))
+    ap.add_argument(
+        "--telemetry-overhead-ceil", type=float,
+        default=float(os.environ.get("BENCH_TELEMETRY_OVERHEAD_CEIL",
+                                     "1.05")))
+    ap.add_argument(
         "--megakernel-ceil", type=float,
         default=float(os.environ.get("BENCH_MEGAKERNEL_CEIL", "1.1")))
     ap.add_argument(
@@ -298,7 +365,8 @@ def main(argv=None) -> int:
             payload = json.load(f)
         errs = check(payload, args.launch_ratio_floor, args.tail_work_ceil,
                      args.tail_trip_ceil, args.ladder_rows_ceil,
-                     args.auto_slack, args.megakernel_ceil,
+                     args.auto_slack, args.auto_cost_slack,
+                     args.telemetry_overhead_ceil, args.megakernel_ceil,
                      args.checkpoint_ceil, args.serve_floor)
         return payload, [f"{label}: {e}" for e in errs] if label else errs
 
@@ -317,6 +385,9 @@ def main(argv=None) -> int:
     trips = [t["tail_trip_ratio"] for t in payload["tail"].values()]
     auto_t = [a["auto_trip_ratio"] for a in payload["auto"].values()]
     auto_r = [a["auto_rows_ratio"] for a in payload["auto"].values()]
+    cost_r = [t["auto_cost_ratio"] for t in payload["telemetry"].values()]
+    telem_o = [t["telemetry_overhead_ratio"]
+               for t in payload["telemetry"].values()]
     mega_w = [m["megakernel_wall_ratio"] for m in payload["mega"].values()]
     mega_l = [m["megakernel"]["launches_per_sweep"]
               for m in payload["mega"].values()]
@@ -335,6 +406,10 @@ def main(argv=None) -> int:
         f"(ceiling {args.ladder_rows_ceil}); "
         f"auto_trip_ratio max {max(auto_t):.3f} / auto_rows_ratio max "
         f"{max(auto_r):.3f} (slack {args.auto_slack}); "
+        f"auto_cost_ratio max {max(cost_r):.3f} "
+        f"(slack {args.auto_cost_slack}); "
+        f"telemetry_overhead_ratio max {max(telem_o):.3f} "
+        f"(ceiling {args.telemetry_overhead_ceil}); "
         f"megakernel_wall_ratio max {max(mega_w):.3f} "
         f"(ceiling {args.megakernel_ceil}); megakernel launches/sweep "
         f"{max(mega_l):.0f} (ceiling {MEGA_LAUNCH_CEIL:.0f}); "

@@ -69,6 +69,12 @@ class BFGSOptions:
     # latches the dynamic (repack+compact) plan
     auto_ladders: Optional[tuple] = None
     auto_active_frac: float = 0.5
+    # telemetry-aware cost model (engine; DESIGN.md §17): score the auto
+    # controller's plan lattice in measured seconds at host boundaries;
+    # telemetry_costs=(c_row, c_launch) fixes the costs (deterministic)
+    auto_cost_model: bool = False
+    telemetry_costs: Optional[tuple] = None
+    telemetry_ema: float = 0.5
     # fault tolerance (engine; DESIGN.md §15): quarantine/retry budget per
     # lane, re-seed policy, sweep-carry checkpoint cadence, fault injection
     retry_budget: int = 0
@@ -203,6 +209,9 @@ def _engine_opts(opts: BFGSOptions, lane_chunk: Optional[int] = None
         schedule_plans=opts.schedule_plans,
         auto_ladders=opts.auto_ladders,
         auto_active_frac=opts.auto_active_frac,
+        auto_cost_model=opts.auto_cost_model,
+        telemetry_costs=opts.telemetry_costs,
+        telemetry_ema=opts.telemetry_ema,
         retry_budget=opts.retry_budget,
         retry_mode=opts.retry_mode,
         retry_sigma=opts.retry_sigma,

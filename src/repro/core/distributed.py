@@ -208,6 +208,10 @@ def distributed_zeus(
         schedule_trace=P() if traced_schedule else None,
         n_restarts=lane_spec,  # per-lane re-seed counts stay sharded
         n_failed=P(),  # psum'd total
+        # the telemetry cost model is host-in-the-loop and unavailable
+        # through the program driver (engine validation), so no shard
+        # ever emits one — an empty leaf, like schedule_trace off
+        telemetry=None,
     )
     out_specs = (P(), P(), res_specs, P())  # best_x, best_f, res, pso gf
 
@@ -264,7 +268,8 @@ def distributed_zeus(
             n_act=leaf(P()), aux=sh(carry_like.aux), rows=leaf(lane_spec),
             trips=leaf(lane_spec), astate=sh(carry_like.astate),
             rkey=leaf(lane_spec), n_restarts=leaf(lane_spec),
-            replan=leaf(P()), deadline=leaf(lane_spec))
+            replan=leaf(P()), deadline=leaf(lane_spec),
+            telem=sh(carry_like.telem))
 
     def init_shard(key):
         pmin = make_pmin(axis_names)

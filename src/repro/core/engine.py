@@ -162,6 +162,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
@@ -229,6 +230,12 @@ class BFGSResult(NamedTuple):
     # retry budget exhausted). Psum'd across the mesh by the distributed
     # driver so callers can distinguish "converged" from "everything NaN'd".
     n_failed: Optional[jnp.ndarray] = None
+    # launch.telemetry.TelemetryCarry — per-window host wall/rows/launch
+    # deltas + the fitted c_row/c_launch cost estimates, recorded by the
+    # cost-model hosted driver (auto_cost_model=True only, else None).
+    # Like schedule_trace this documents what THIS run did; unlike it,
+    # wall_s/energy_j are host measurements, not replayable quantities.
+    telemetry: Optional[Any] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -297,6 +304,30 @@ class EngineOptions:
     # Enable the dynamic (repack+compact) plan once the LOCAL active count
     # drops below this fraction of the shard's lanes; latched once on.
     auto_active_frac: float = 0.5
+    # ---- telemetry-aware cost model (DESIGN.md §17) ---------------------
+    # schedule="auto" only: True moves the boundary plan decision to the
+    # HOST — the solve runs the checkpoint driver's segmented loop with
+    # segments clamped to schedule_every boundaries — and scores every
+    # lattice candidate in measured seconds,
+    #     score(L) = (L + E[fb])·active·c_row + E[fb]·c_launch,
+    # with E[fb] from the window's rung-histogram tail mass
+    # (linesearch.rung_tail_fallback_launches) and c_row/c_launch fitted
+    # online (EMA over windows) from per-window wall clock
+    # (launch/telemetry.py). Every executed plan is still a lattice
+    # member decided at the same boundary, so schedule="replay" of the
+    # recorded trace stays array-equal. Needs eager execution (host in
+    # the loop — same constraint as checkpoint_every); incompatible with
+    # lane_deadlines (a HostedSolve's segments are driven by the service,
+    # which owns its own telemetry) and with the distributed program
+    # driver.
+    auto_cost_model: bool = False
+    # (c_row, c_launch) constants fed to the cost model instead of the
+    # EMA fit: decisions become a pure function of the carry — the
+    # deterministic seam the exact-reproducibility tests pin
+    # (tests/test_telemetry.py).
+    telemetry_costs: Optional[Tuple[float, float]] = None
+    # EMA smoothing weight of each new window's cost observation.
+    telemetry_ema: float = 0.5
     # ---- fault tolerance (DESIGN.md §15) -------------------------------
     # Lane quarantine/retry: a lane that escapes to NaN/Inf (failed=True)
     # is re-seeded in-carry up to retry_budget times instead of freezing
@@ -1010,6 +1041,7 @@ class EngineCarry(NamedTuple):
     n_restarts: jnp.ndarray  # (B_flat,) int32 — re-seeds consumed per lane
     replan: jnp.ndarray  # scalar bool — force a gather-plan refresh next sweep
     deadline: jnp.ndarray  # (B_flat,) int32 — per-lane sweep deadline (0=none)
+    telem: Any  # launch.telemetry.TelemetryCarry (auto_cost_model) or ()
 
 
 class MultistartProgram(NamedTuple):
@@ -1212,6 +1244,33 @@ def run_multistart(
             raise ValueError(
                 f"schedule_every must be >= 1 (got {opts.schedule_every})")
 
+    # --- telemetry cost-model validation (DESIGN.md §17) -----------------
+    cost_model = opts.auto_cost_model
+    if cost_model and opts.schedule != "auto":
+        raise ValueError(
+            "auto_cost_model=True re-scores the schedule='auto' plan "
+            f"lattice and requires schedule='auto' (got {opts.schedule!r})")
+    if opts.telemetry_costs is not None:
+        if not cost_model:
+            raise ValueError(
+                "telemetry_costs feeds the cost model fixed (c_row, "
+                "c_launch) constants and requires auto_cost_model=True")
+        if len(opts.telemetry_costs) != 2:
+            raise ValueError(
+                "telemetry_costs must be (c_row, c_launch) "
+                f"(got {opts.telemetry_costs!r})")
+    if cost_model and opts.lane_deadlines:
+        raise ValueError(
+            "auto_cost_model=True drives its own host-segmented loop and "
+            "is incompatible with lane_deadlines=True (the solve service "
+            "drives segments itself; it records pool telemetry instead)")
+    if cost_model and (_as_program or _as_host):
+        raise ValueError(
+            "auto_cost_model=True needs the host in the sweep loop (the "
+            "boundary plan decision reads measured window costs) and is "
+            "unavailable through the program/hosted-pool drivers "
+            "(distributed_zeus, open_multistart)")
+
     # --- fault-tolerance option validation (DESIGN.md §15) ---------------
     from repro.launch.faults import (  # import-cycle-safe (launch is leaf)
         Preempted,
@@ -1256,13 +1315,13 @@ def run_multistart(
     # (segmented lax.while_loop with np snapshots in between) — impossible
     # under an enclosing jit trace, so fail loudly instead of miscompiling
     hosted = (checkpointing or resume_from is not None
-              or preempt_at is not None) and not _as_program
+              or preempt_at is not None or cost_model) and not _as_program
     if (hosted or _as_host) and isinstance(x0, jax.core.Tracer):
         raise ValueError(
-            "checkpoint_every/fault_plan.preempt_at_sweep/resume_from drive "
-            "a host-segmented sweep loop and cannot run under an enclosing "
-            "jit trace; call run_multistart un-jitted (it jits its own "
-            "segments)")
+            "checkpoint_every/fault_plan.preempt_at_sweep/resume_from/"
+            "auto_cost_model drive a host-segmented sweep loop and cannot "
+            "run under an enclosing jit trace; call run_multistart "
+            "un-jitted (it jits its own segments)")
 
     if opts.sweep_mode in _BATCHED_MODES:
         if opts.linesearch != "armijo":
@@ -1625,6 +1684,15 @@ def run_multistart(
             if opts.schedule == "replay":
                 decided = astate._replace(
                     plan=plans_arr[w], hist=jnp.zeros_like(astate.hist))
+            elif cost_model:
+                # the HOST already wrote this window's plan/dyn_on/
+                # prev_lidx into the carry at the segment boundary (the
+                # cost-model driver below); in-graph the boundary only
+                # resets the window histogram — structurally the replay
+                # branch with the plan coming from the carry instead of
+                # plans_arr, which is what keeps a cost-model run
+                # replayable array-equal from its recorded trace
+                decided = astate._replace(hist=jnp.zeros_like(astate.hist))
             else:
                 decided = controller(astate, lanes)
             # the decision (and the window-histogram reset) lands only on
@@ -1655,7 +1723,7 @@ def run_multistart(
                 rows=carry.rows + rrows + srows,
                 trips=carry.trips + strips, astate=astate, rkey=rkey,
                 n_restarts=n_restarts, replan=jnp.zeros((), bool),
-                deadline=carry.deadline)
+                deadline=carry.deadline, telem=carry.telem)
 
         astate0 = _AutoState(
             plan=jnp.asarray(n_ladders - 1, jnp.int32),  # full-ladder static
@@ -1668,8 +1736,15 @@ def run_multistart(
             trace=jnp.zeros((n_windows, n_plans), jnp.int32),
         )
         make_aux0 = fresh_aux
+        if cost_model:
+            from repro.launch import telemetry as _telemetry
+            telem0 = _telemetry.telemetry_init(n_windows,
+                                               opts.telemetry_costs)
+        else:
+            telem0 = ()
     else:
         astate0 = ()
+        telem0 = ()
 
     # ------------------------------------------------------------------
     # Quarantine/retry + deterministic fault injection (DESIGN.md §15).
@@ -1846,7 +1921,8 @@ def run_multistart(
             k=k + 1, lanes=lanes, n_conv=n_conv, n_act=n_act, aux=aux,
             rows=carry.rows + rrows + srows, trips=carry.trips + strips,
             astate=carry.astate, rkey=rkey, n_restarts=n_restarts,
-            replan=jnp.zeros((), bool), deadline=carry.deadline)
+            replan=jnp.zeros((), bool), deadline=carry.deadline,
+            telem=carry.telem)
 
     # raw uint32 key data, not a typed key: snapshots np.asarray it and
     # shard_map moves it across the mesh boundary, neither of which typed
@@ -1871,7 +1947,7 @@ def run_multistart(
             trips=jnp.zeros((), jnp.int32), astate=astate0,
             rkey=rkey0 if rk is None else rk,
             n_restarts=n_restarts0, replan=jnp.zeros((), bool),
-            deadline=jnp.zeros((B_flat,), jnp.int32))
+            deadline=jnp.zeros((B_flat,), jnp.int32), telem=telem0)
 
     def finalize(carry):
         k, lanes = carry.k, carry.lanes
@@ -1901,6 +1977,7 @@ def run_multistart(
             schedule_trace=schedule_trace,
             n_restarts=carry.n_restarts[:B],
             n_failed=jnp.sum(lanes.failed.astype(jnp.int32)),
+            telemetry=carry.telem if cost_model else None,
         )
 
     # ------------------------------------------------------------------
@@ -2017,9 +2094,15 @@ def run_multistart(
             jax.jit(admit_lanes),
             jax.jit(vacate_lanes),
             jax.jit(lane_view),
+            # cost-model boundary signal: the same LOCAL active count the
+            # in-graph controller latches dyn_on from (traced lazily, so
+            # non-scheduling solves never touch it)
+            jax.jit(lambda c: jnp.sum(
+                _active_mask(c.lanes).astype(jnp.int32))),
         )
         _HOSTED_JIT_CACHE[cache_key] = cached
-    carry0_jit, seg, fin, cond_jit, admit_jit, vacate_jit, view_jit = cached
+    (carry0_jit, seg, fin, cond_jit, admit_jit, vacate_jit, view_jit,
+     act_jit) = cached
 
     if _as_host:
         return HostedSolve(
@@ -2068,6 +2151,17 @@ def run_multistart(
         pending.append((t, err))
 
     every_ck = opts.checkpoint_every
+    if cost_model:
+        # host side of the cost-model controller (DESIGN.md §17): at each
+        # schedule_every boundary, score the plan lattice in measured
+        # seconds and write the decision into the carry BEFORE the
+        # boundary segment runs — sched_body's cost-model branch then
+        # executes (and traces) the written plan exactly like replay
+        # executes plans_arr. Segments are clamped to window boundaries
+        # so each wall measurement covers whole windows of one plan.
+        eff_lens = [L if L > 0 else opts.ls_iters for L in ladders]
+        fixed_costs = opts.telemetry_costs is not None
+        eprobe = _telemetry.probe_energy()
     while bool(cond_jit(carry)):
         k_now = int(carry.k)
         if preempt_at is not None and k_now >= preempt_at:
@@ -2076,12 +2170,46 @@ def run_multistart(
             # the lost tail being replayed exactly)
             _join_writer()
             raise Preempted(k_now, opts.checkpoint_dir)
+        if cost_model and k_now % every == 0:
+            astate = carry.astate
+            plan, prev_lidx, dyn_on = _telemetry.cost_model_decision(
+                jax.device_get(astate.hist), int(act_jit(carry)), eff_lens,
+                int(astate.plan), int(astate.prev_lidx),
+                bool(astate.dyn_on), act_thresh=act_thresh,
+                c_row=float(np.asarray(carry.telem.c_row)),
+                c_launch=float(np.asarray(carry.telem.c_launch)))
+            carry = carry._replace(astate=astate._replace(
+                plan=jnp.asarray(plan, jnp.int32),
+                prev_lidx=jnp.asarray(prev_lidx, jnp.int32),
+                dyn_on=jnp.asarray(dyn_on, bool)))
         k_end = opts.iter_max
         if every_ck:
             k_end = min(k_end, (k_now // every_ck + 1) * every_ck)
+        if cost_model:
+            k_end = min(k_end, (k_now // every + 1) * every)
         if preempt_at is not None:
             k_end = min(k_end, preempt_at)
-        carry = seg(carry, jnp.asarray(k_end, jnp.int32))
+        if cost_model:
+            rows0, trips0 = int(carry.rows), int(carry.trips)
+            e0 = eprobe.read_j()
+            t0 = time.perf_counter()
+            carry = jax.block_until_ready(
+                seg(carry, jnp.asarray(k_end, jnp.int32)))
+            wall = time.perf_counter() - t0
+            e1 = eprobe.read_j()
+            de = e1 - e0 if e0 is not None and e1 is not None else None
+            # the window is complete when the segment reached its
+            # boundary OR the solve just stopped (early-converged final
+            # partial windows still feed the fit — their plan ran for
+            # every sweep that executed)
+            done = (int(carry.k) % every == 0) or not bool(cond_jit(carry))
+            carry = carry._replace(telem=_telemetry.record_window(
+                carry.telem, k_now // every, wall,
+                int(carry.rows) - rows0, int(carry.trips) - trips0,
+                energy_j=de, ema=opts.telemetry_ema, fixed=fixed_costs,
+                refit=done))
+        else:
+            carry = seg(carry, jnp.asarray(k_end, jnp.int32))
         if every_ck and (int(carry.k) % every_ck == 0
                          or not bool(cond_jit(carry))):
             _save_async(carry)

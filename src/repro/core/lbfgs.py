@@ -58,6 +58,10 @@ class LBFGSOptions:
     schedule_plans: Optional[tuple] = None
     auto_ladders: Optional[tuple] = None
     auto_active_frac: float = 0.5
+    # telemetry-aware cost model (engine; DESIGN.md §17)
+    auto_cost_model: bool = False
+    telemetry_costs: Optional[tuple] = None
+    telemetry_ema: float = 0.5
     # fault tolerance (engine; DESIGN.md §15)
     retry_budget: int = 0
     retry_mode: str = "perturb"  # "perturb" | "uniform"
@@ -173,6 +177,9 @@ def _engine_opts(opts: LBFGSOptions, lane_chunk: Optional[int] = None
         schedule_plans=opts.schedule_plans,
         auto_ladders=opts.auto_ladders,
         auto_active_frac=opts.auto_active_frac,
+        auto_cost_model=opts.auto_cost_model,
+        telemetry_costs=opts.telemetry_costs,
+        telemetry_ema=opts.telemetry_ema,
         retry_budget=opts.retry_budget,
         retry_mode=opts.retry_mode,
         retry_sigma=opts.retry_sigma,

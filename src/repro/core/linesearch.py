@@ -114,6 +114,30 @@ class BatchLineSearchResult(NamedTuple):
     rung: jnp.ndarray
 
 
+def rung_tail_fallback_launches(hist, ladder_len: int) -> int:
+    """Expected masked-fallback launches an L-rung ladder implies for an
+    accepted-rung histogram — the launch term of the auto controller's
+    two-term cost model (launch/telemetry.py, DESIGN.md §17).
+
+    `hist` is the window's (K+1,) accepted-rung histogram (bins 0..K-1 =
+    accepted rung, bin K = exhausted). Under `ladder_len = L`, fallback
+    rung j ∈ [L, K) executes as ONE whole-batch launch iff any lane
+    needs it, i.e. iff the tail mass Σ_{r≥j} hist[r] is nonzero (the
+    masked sequential phase short-circuits once every lane accepted) —
+    so the expected launch count is the number of nonzero tails:
+    max(max_accepted_rung − L + 1, 0), and all K−L fallback rungs when
+    any lane exhausted. L ≥ K (or L = 0, the full-ladder spelling used
+    by the schedule lattice's effective lengths) pays no fallbacks.
+    """
+    h = np.asarray(hist)
+    K = h.shape[0] - 1
+    L = int(ladder_len)
+    if L <= 0 or L >= K:
+        return 0
+    tails = np.cumsum(h[::-1])[::-1]  # tails[j] = Σ_{r≥j} h[r]
+    return int(np.count_nonzero(tails[L:K] > 0))
+
+
 def armijo_backtracking_batch(
     value_batch: Callable,
     X: jnp.ndarray,  # (B, D) current iterates

@@ -59,6 +59,12 @@ class ZeusOptions:
     schedule_every: Optional[int] = None
     # replay-forced plan indices (with schedule="replay")
     schedule_plans: Optional[tuple] = None
+    # overrides the solver opts' telemetry cost-model knobs (engine;
+    # DESIGN.md §17): score schedule="auto" plans in measured seconds at
+    # host boundaries; telemetry_costs=(c_row, c_launch) fixes the costs
+    auto_cost_model: Optional[bool] = None
+    telemetry_costs: Optional[tuple] = None
+    telemetry_ema: Optional[float] = None
     # overrides the solver opts' fault-tolerance knobs (engine; DESIGN.md
     # §15): per-lane quarantine/retry budget + re-seed policy, sweep-carry
     # checkpoint cadence/location, deterministic fault injection. The
@@ -128,6 +134,9 @@ def phase2_setup(opts: ZeusOptions):
                 schedule_plans=b.schedule_plans,
                 auto_ladders=b.auto_ladders,
                 auto_active_frac=b.auto_active_frac,
+                auto_cost_model=b.auto_cost_model,
+                telemetry_costs=b.telemetry_costs,
+                telemetry_ema=b.telemetry_ema,
                 retry_budget=b.retry_budget,
                 retry_mode=b.retry_mode,
                 retry_sigma=b.retry_sigma,
@@ -156,7 +165,8 @@ def phase2_setup(opts: ZeusOptions):
         eopts = dataclasses.replace(eopts, schedule_every=opts.schedule_every)
     if opts.schedule_plans is not None:
         eopts = dataclasses.replace(eopts, schedule_plans=opts.schedule_plans)
-    for field in ("retry_budget", "retry_mode", "retry_sigma",
+    for field in ("auto_cost_model", "telemetry_costs", "telemetry_ema",
+                  "retry_budget", "retry_mode", "retry_sigma",
                   "checkpoint_every", "checkpoint_dir", "checkpoint_keep",
                   "fault_plan"):
         v = getattr(opts, field)

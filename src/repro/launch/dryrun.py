@@ -133,14 +133,14 @@ def analyze_cell(arch: str, shape_name: str, mesh_kind: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh_device_count(mesh)
     shape = SHAPES[shape_name]
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: NTP steps can't corrupt compile_s
     from repro.models.registry import build_model as _bm
     from repro.configs import get_config as _gc
     with _bm(_gc(arch)).rules_context():
         with mesh:
             lowered, compiled, model, meta = lower_cell(arch, shape_name, mesh,
                                                         tcfg=tcfg)
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -87,7 +87,7 @@ def main(argv=None):
         guard = StepGuard(deadline_s=args.step_deadline_s)
 
         host, n_hosts = jax.process_index(), jax.process_count()
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: clock jumps can't skew s/step
         for step in range(start_step, args.steps):
             batch_np = make_batch(dcfg, cfg, args.batch, args.seq, step)
             batch_np = host_slice(batch_np, host, n_hosts)
@@ -99,7 +99,8 @@ def main(argv=None):
                     f"[train] step {step} loss {float(metrics['loss']):.4f} "
                     f"gnorm {float(metrics['grad_norm']):.3f} "
                     f"lr {float(metrics['lr']):.2e} "
-                    f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)",
+                    f"({(time.perf_counter()-t0)/(step-start_step+1):.2f}"
+                    f"s/step)",
                     flush=True,
                 )
             if args.ckpt_every and args.ckpt_dir and (step + 1) % args.ckpt_every == 0:

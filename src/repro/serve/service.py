@@ -69,6 +69,7 @@ from repro.core.engine import (
 from repro.core.objectives import Objective, get_objective
 from repro.core.zeus import ZeusOptions, phase2_setup
 from repro.launch.faults import seed_lanes
+from repro.launch.telemetry import WindowTelemetry
 
 
 class QueueFull(RuntimeError):
@@ -265,10 +266,14 @@ class _Pool:
         # (not a per-solve budget), stop only when every slot froze
         # (required_c=B), per-request budgets via lane deadlines, and no
         # retries (a retry would resurrect a lane past its budget and
-        # consume PRNG draws that depend on pool traffic).
+        # consume PRNG draws that depend on pool traffic). The carry-
+        # resident cost model is forced off (it owns the hosted loop and
+        # is incompatible with lane_deadlines); the pool records its own
+        # window timings through a standalone WindowTelemetry instead.
         eopts = dataclasses.replace(
             eopts, iter_max=problem.horizon, required_c=None,
             lane_deadlines=True, retry_budget=0,
+            auto_cost_model=False, telemetry_costs=None,
             checkpoint_every=0, checkpoint_dir=None, fault_plan=None)
         obj = problem.objective
         self.problem = problem
@@ -283,6 +288,10 @@ class _Pool:
         self.occupied: Dict[int, Tuple[int, int]] = {}  # slot -> (rid, lane)
         self.queue: deque = deque()  # (rid, lane_idx) waiting for a slot
         self.k_now = 0
+        # per-pool window timings (stats() "pool_windows"); the pool's
+        # segments are already host-driven, so the recorder costs one
+        # perf_counter pair per pump
+        self.telem = WindowTelemetry()
 
     def has_work(self) -> bool:
         return bool(self.occupied or self.queue)
@@ -492,8 +501,14 @@ class SolveService:
             self._harvest(pool, view)
             self._admit(pool, pool.k_now)
             if pool.occupied:
-                pool.carry = pool.host.segment(
-                    pool.carry, pool.k_now + self.admit_every)
+                rows0 = int(jax.device_get(pool.carry.rows))
+                trips0 = int(jax.device_get(pool.carry.trips))
+                pool.telem.begin()
+                pool.carry = jax.block_until_ready(pool.host.segment(
+                    pool.carry, pool.k_now + self.admit_every))
+                pool.telem.end(
+                    rows=int(jax.device_get(pool.carry.rows)) - rows0,
+                    launches=int(jax.device_get(pool.carry.trips)) - trips0)
                 pool.k_now = int(jax.device_get(pool.carry.k))
         return any(p.has_work() for p in self._pools.values())
 
@@ -515,15 +530,21 @@ class SolveService:
                              for t in self._tickets.values()),
             "pool_sweeps": {name: p.k_now
                             for name, p in self._pools.items()},
+            "pool_windows": {name: p.telem.summary()
+                             for name, p in self._pools.items()},
         }
-        if done:
-            adm_s = np.asarray([t.result.admit_latency_s for t in done])
-            tot_s = np.asarray([t.result.total_latency_s for t in done])
+        # a request retired with NO lane outcomes (every lane lost to
+        # quarantine exhaustion under fault injection) has nothing to
+        # take min/max over — skip it rather than raise ValueError
+        timed = [t for t in done if t.result.lanes]
+        if timed:
+            adm_s = np.asarray([t.result.admit_latency_s for t in timed])
+            tot_s = np.asarray([t.result.total_latency_s for t in timed])
             adm_k = np.asarray(
                 [min(l.admit_sweep for l in t.result.lanes)
-                 - t.submit_sweep for t in done])
-            t0 = min(t.t_submit for t in done)
-            t1 = max(l.t_retire for t in done for l in t.result.lanes)
+                 - t.submit_sweep for t in timed])
+            t0 = min(t.t_submit for t in timed)
+            t1 = max(l.t_retire for t in timed for l in t.result.lanes)
             out.update(
                 admit_latency_s_p50=float(np.percentile(adm_s, 50)),
                 admit_latency_s_p95=float(np.percentile(adm_s, 95)),
@@ -531,8 +552,10 @@ class SolveService:
                 admit_latency_sweeps_p95=float(np.percentile(adm_k, 95)),
                 total_latency_s_p50=float(np.percentile(tot_s, 50)),
                 total_latency_s_p95=float(np.percentile(tot_s, 95)),
-                solves_per_sec=(len(done) / (t1 - t0) if t1 > t0
-                                else float("inf")),
+                # None (JSON null), not inf: sub-resolution spans would
+                # otherwise emit Infinity, which strict parsers reject
+                solves_per_sec=(len(timed) / (t1 - t0) if t1 > t0
+                                else None),
             )
         return out
 
@@ -570,8 +593,8 @@ def solo_reference(problem: Problem, req: SolveRequest,
         else problem.default_iter_max
     eopts = dataclasses.replace(
         eopts, iter_max=budget, required_c=None, lane_deadlines=False,
-        retry_budget=0, checkpoint_every=0, checkpoint_dir=None,
-        fault_plan=None)
+        retry_budget=0, auto_cost_model=False, telemetry_costs=None,
+        checkpoint_every=0, checkpoint_dir=None, fault_plan=None)
     starts = request_starts(problem, req)
     width = max(slots or req.n_starts, req.n_starts)
     obj = problem.objective

@@ -350,6 +350,49 @@ class TestControllerBehavior:
                                            auto_ladders=(4, 20))) == (4, 0)
 
 
+class TestCostModelReplay:
+    """auto_cost_model=True (DESIGN.md §17): the host-decided plans are
+    still lattice members chosen at the same schedule_every boundaries,
+    so schedule="replay" of the recorded trace is array-equal — the same
+    contract the in-graph p90 controller carries, now with measured
+    costs in the loop. Runs on both kernel legs in CI."""
+
+    def test_replay_of_measured_cost_run(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=9)
+        base = dict(iter_bfgs=30, theta=1e-4, ls_iters=10,
+                    sweep_mode="batched", schedule_every=2,
+                    auto_ladders=LADDERS)
+        cm = batched_bfgs(obj.fn, x0, BFGSOptions(
+            schedule="auto", auto_cost_model=True, **base))
+        assert cm.telemetry is not None
+        # the cost-model run executes jitted host segments, so its
+        # bit-exact reference is the JITTED replay (the hosted driver ==
+        # jitted solve anchor in test_faults; eager replays drift in
+        # low-order bits per the §15 execution-mode caveat)
+        ropts = BFGSOptions(
+            schedule="replay",
+            schedule_plans=schedule_trace_plans(cm.schedule_trace),
+            **base)
+        rep = jax.jit(lambda x: batched_bfgs(obj.fn, x, ropts))(x0)
+        _assert_replay_equal(cm, rep)
+        assert rep.telemetry is None
+
+    def test_replay_of_fixed_cost_run_chunked(self):
+        obj, x0 = _starts("rosenbrock", 16, 2, seed=9)
+        base = dict(iter_bfgs=30, theta=1e-4, ls_iters=10, lane_chunk=4,
+                    sweep_mode="batched", schedule_every=3,
+                    auto_ladders=LADDERS)
+        cm = batched_bfgs(obj.fn, x0, BFGSOptions(
+            schedule="auto", auto_cost_model=True,
+            telemetry_costs=(1.0, 1.0), **base))
+        ropts = BFGSOptions(
+            schedule="replay",
+            schedule_plans=schedule_trace_plans(cm.schedule_trace),
+            **base)
+        rep = jax.jit(lambda x: batched_bfgs(obj.fn, x, ropts))(x0)
+        _assert_replay_equal(cm, rep)
+
+
 class TestValidation:
     def _x0(self):
         return _starts("sphere", 8, 2, seed=0)[1]

@@ -22,6 +22,7 @@ identical arrival pattern replayed into a fresh service reproduces every
 lane bit-exactly, n_evals included (see _assert_request_parity and
 test_busy_pool_matches_solo).
 """
+import json
 import os
 
 import numpy as np
@@ -33,7 +34,9 @@ from repro.serve.service import (
     ProblemRegistry,
     QueueFull,
     SolveRequest,
+    SolveResult,
     SolveService,
+    _Ticket,
     request_starts,
     solo_reference,
 )
@@ -280,6 +283,56 @@ class TestSlotBookkeeping:
         assert a.shape == (3, 3)
         assert (a >= p.objective.lower).all() and \
             (a <= p.objective.upper).all()
+
+
+# ---------------------------------------------------------------------------
+# stats(): JSON-safe, robust to degenerate request histories
+# ---------------------------------------------------------------------------
+class TestStats:
+    def test_stats_json_strict_safe(self):
+        svc = SolveService(_registry(), slots=2)
+        svc.submit(SolveRequest("ras", seed=0, iter_max=6))
+        svc.drain()
+        st = svc.stats()
+        json.dumps(st, allow_nan=False)  # strict parsers reject Infinity
+        assert st["pool_windows"]["ras"]["n_windows"] > 0
+        assert st["pool_windows"]["ras"]["wall_s_total"] > 0.0
+
+    def test_solves_per_sec_none_on_zero_span(self):
+        # a single request harvested within perf_counter resolution used
+        # to emit float("inf"), which json.dumps renders as Infinity —
+        # invalid JSON to every strict parser. Collapse the span and the
+        # field must be None (JSON null), not inf.
+        svc = SolveService(_registry(theta=1e-30), slots=2)
+        rid = svc.submit(SolveRequest("ras", seed=0, iter_max=4))
+        svc.drain()
+        t = svc._tickets[rid]
+        for lane in t.result.lanes:
+            lane.t_retire = t.t_submit
+        st = svc.stats()
+        assert st["solves_per_sec"] is None
+        json.dumps(st, allow_nan=False)
+
+    def test_stats_survives_request_with_no_lane_outcomes(self):
+        # fault injection can retire a request with every lane lost to
+        # quarantine exhaustion: its SolveResult carries no LaneOutcomes,
+        # and stats() used to min()/max() over the empty list (ValueError)
+        svc = SolveService(_registry(theta=1e-30), slots=2)
+        rid = svc.submit(SolveRequest("ras", seed=0, iter_max=4))
+        svc.drain()
+        good = svc._tickets[rid]
+        svc._tickets[rid + 1] = _Ticket(
+            request=good.request, state="done", budget=4,
+            starts=good.starts, t_submit=good.t_submit, submit_sweep=0,
+            pending=0, lanes={},
+            result=SolveResult(rid=rid + 1, problem="ras", best_x=None,
+                               best_f=float("nan"), status=DIVERGED,
+                               n_converged=0, lanes=[]))
+        st = svc.stats()  # must not raise
+        assert st["n_done"] == 2
+        # latency summaries come from the requests that do have lanes
+        assert "solves_per_sec" in st
+        json.dumps(st, allow_nan=False)
 
 
 # ---------------------------------------------------------------------------

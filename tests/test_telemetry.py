@@ -1,0 +1,343 @@
+"""Telemetry-aware cost model (launch/telemetry.py + engine
+auto_cost_model, DESIGN.md §17).
+
+The determinism seams under test: the host decision runs only at the
+existing schedule_every boundaries and always picks a plan-lattice
+member, so (a) with fixed telemetry_costs every decision is a pure
+function of the carry — two identical runs are array-equal, counters
+and trace included; (b) on a rung-concentrated workload the two-term
+score and the p90 rule pick the SAME candidate every window, so the
+fixed-cost run is array-equal to the plain p90 auto run; (c) the
+telemetry carry rides inside EngineCarry, so preempt/resume round-trips
+it with the rest of the solve. The energy probe is a capability, never
+a dependency: with neither NVML nor RAPL present the fields are simply
+absent — no import error, no exception, no NaN/Infinity in JSON.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BFGSOptions, batched_bfgs, schedule_trace_plans
+from repro.core.linesearch import rung_tail_fallback_launches
+from repro.core.objectives import rosenbrock
+from repro.launch import telemetry as T
+from repro.launch.faults import FaultPlan, Preempted
+
+LADDERS = (2, 0)
+HARD_START = [-1.2, 1.0]
+
+
+def _frozen_mix(n_frozen, n_active):
+    """Frozen lanes start at rosenbrock's bit-exact optimum; active lanes
+    at the hard valley start never converge at theta=1e-30 and settle
+    into shallow accepted rungs — the rung-concentrated histogram on
+    which the cost rule and the p90 rule provably agree."""
+    x0 = np.tile(np.asarray([HARD_START]), (n_frozen + n_active, 1))
+    x0[:n_frozen] = 1.0
+    return jnp.asarray(x0, jnp.float32)
+
+
+def _base(**kw):
+    return dict(iter_bfgs=20, theta=1e-30, ls_iters=10, lane_chunk=4,
+                sweep_mode="batched", schedule="auto", schedule_every=2,
+                auto_ladders=LADDERS, **kw)
+
+
+def _assert_result_equal(a, b):
+    for fld in ("x", "fval", "grad_norm", "status", "n_evals",
+                "eval_rows", "map_trips", "schedule_trace"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, fld)), np.asarray(getattr(b, fld)),
+            err_msg=fld)
+
+
+# ---------------------------------------------------------------------------
+# Host-side scoring pieces (pure functions, hand-computed)
+# ---------------------------------------------------------------------------
+class TestCostPieces:
+    def test_fallback_launches_hand_computed(self):
+        # K=8 rung histogram: mass at rungs 0, 1 and 3 (exhausted slot 8
+        # empty). Under a 2-rung ladder the fallback probes rungs 2 and 3
+        # before the tail empties: tails[2]=tails[3]=1, tails[4:]=0.
+        hist = np.asarray([5, 2, 0, 1, 0, 0, 0, 0, 0])
+        assert rung_tail_fallback_launches(hist, 2) == 2
+        assert rung_tail_fallback_launches(hist, 1) == 3
+        assert rung_tail_fallback_launches(hist, 4) == 0
+        # L=0 means the full ladder; L>=K has no fallback regime at all
+        assert rung_tail_fallback_launches(hist, 0) == 0
+        assert rung_tail_fallback_launches(hist, 8) == 0
+
+    def test_fallback_counts_exhausted_lanes_as_full_tail(self):
+        # one exhausted lane (rung K) keeps every tail sum positive: all
+        # K - L fallback rungs run
+        hist = np.zeros(9, int)
+        hist[8] = 1
+        assert rung_tail_fallback_launches(hist, 2) == 6
+        assert rung_tail_fallback_launches(hist, 7) == 1
+
+    def test_fit_costs_first_window_assigns_then_blends(self):
+        c_row, c_launch = T.fit_costs(0.0, 0.0, 10.0, rows=100,
+                                      launches=1, n=0, ema=0.5)
+        assert c_row == pytest.approx(0.1)
+        # first pass attributed the whole wall to rows; launches get the
+        # (empty) residual
+        assert c_launch == pytest.approx(0.0)
+        c_row2, _ = T.fit_costs(c_row, c_launch, 30.0, rows=100,
+                                launches=1, n=1, ema=0.5)
+        assert c_row2 == pytest.approx(0.5 * 0.1 + 0.5 * 0.3)
+
+    def test_decision_row_dominant_prefers_short_ladder(self):
+        # all mass at rung 0: no fallback anywhere, so the rows term
+        # alone decides and the shortest candidate wins — exactly the
+        # p90 rule's pick (target rung 1 -> smallest covering ladder)
+        hist = np.asarray([8] + [0] * 10)
+        plan, prev, dyn = T.cost_model_decision(
+            hist, 8, (2, 10), plan=1, prev_lidx=-1, dyn_on=False,
+            act_thresh=4.0, c_row=1.0, c_launch=1.0)
+        assert (plan, prev, dyn) == (0, 0, False)
+
+    def test_decision_launch_dominant_prefers_full_ladder(self):
+        # mass spread deep with launch cost >> row cost: the fallback
+        # launches of a short ladder dominate and the full ladder wins —
+        # the regime the p90 proxy cannot see
+        hist = np.zeros(11, int)
+        hist[[0, 3, 5, 7, 9]] = 1
+        plan, _, _ = T.cost_model_decision(
+            hist, 5, (2, 10), plan=0, prev_lidx=1, dyn_on=False,
+            act_thresh=1.0, c_row=1e-6, c_launch=1.0)
+        assert plan % 2 == 1  # ladder index 1 = full
+
+    def test_decision_keeps_p90_hysteresis(self):
+        hist = np.zeros(11, int)
+        hist[[0, 3, 5, 7, 9]] = 1
+        # moving UP (longer ladder) needs two consecutive windows that
+        # agree; the first disagreeing window only records prev_lidx
+        plan, prev, _ = T.cost_model_decision(
+            hist, 5, (2, 10), plan=0, prev_lidx=-1, dyn_on=False,
+            act_thresh=1.0, c_row=1e-6, c_launch=1.0)
+        assert plan == 0 and prev == 1
+        plan2, _, _ = T.cost_model_decision(
+            hist, 5, (2, 10), plan=plan, prev_lidx=prev, dyn_on=False,
+            act_thresh=1.0, c_row=1e-6, c_launch=1.0)
+        assert plan2 == 1
+
+    def test_decision_empty_histogram_adopts_nothing(self):
+        plan, prev, _ = T.cost_model_decision(
+            np.zeros(11, int), 8, (2, 10), plan=1, prev_lidx=-1,
+            dyn_on=False, act_thresh=4.0, c_row=1.0, c_launch=1.0)
+        assert plan == 1 and prev == -1
+
+    def test_decision_latches_dynamic_below_threshold(self):
+        hist = np.asarray([8] + [0] * 10)
+        plan, _, dyn = T.cost_model_decision(
+            hist, 3, (2, 10), plan=1, prev_lidx=-1, dyn_on=False,
+            act_thresh=4.0, c_row=1.0, c_launch=1.0)
+        assert dyn and plan == 2 + 0  # dynamic half of the lattice
+
+
+# ---------------------------------------------------------------------------
+# Fixed-cost mode: deterministic, p90-equal on concentrated histograms
+# ---------------------------------------------------------------------------
+class TestFixedCostMode:
+    def test_array_equal_to_p90_on_concentrated_swarm(self):
+        """Shallow accepted rungs concentrate the histogram below every
+        candidate ladder: both rules pick the smallest covering
+        candidate each window, so the fixed-cost run must be array-equal
+        to the plain p90 auto run — trace, counters and all."""
+        x0 = _frozen_mix(10, 6)
+        # the cost-model leg runs jitted host segments; its bit-exact
+        # reference is therefore the JITTED p90 run (hosted driver ==
+        # jitted solve, per the test_faults anchor)
+        popts = BFGSOptions(**_base())
+        p90 = jax.jit(lambda x: batched_bfgs(rosenbrock, x, popts))(x0)
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True, telemetry_costs=(1.0, 1.0))))
+        assert (schedule_trace_plans(p90.schedule_trace)
+                == schedule_trace_plans(cm.schedule_trace))
+        _assert_result_equal(p90, cm)
+
+    def test_fixed_cost_run_is_reproducible(self):
+        x0 = _frozen_mix(10, 6)
+        opts = BFGSOptions(**_base(auto_cost_model=True,
+                                   telemetry_costs=(2.0, 0.5)))
+        a = batched_bfgs(rosenbrock, x0, opts)
+        b = batched_bfgs(rosenbrock, x0, opts)
+        _assert_result_equal(a, b)
+        # rows/launches are replayable counters; wall_s is not compared
+        np.testing.assert_array_equal(np.asarray(a.telemetry.rows),
+                                      np.asarray(b.telemetry.rows))
+        np.testing.assert_array_equal(np.asarray(a.telemetry.launches),
+                                      np.asarray(b.telemetry.launches))
+        # the fixed constants are never refitted
+        assert float(np.asarray(a.telemetry.c_row)) == 2.0
+        assert float(np.asarray(a.telemetry.c_launch)) == 0.5
+
+    def test_telemetry_attached_only_under_cost_model(self):
+        x0 = _frozen_mix(10, 6)
+        plain = batched_bfgs(rosenbrock, x0, BFGSOptions(**_base()))
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True, telemetry_costs=(1.0, 1.0))))
+        assert plain.telemetry is None
+        t = cm.telemetry
+        assert t is not None
+        # every executed window measured wall time and row/launch deltas
+        wall = np.asarray(t.wall_s)
+        assert int(np.asarray(t.windows)) == wall.shape[0]
+        assert (wall > 0).all()
+        assert (np.asarray(t.rows) > 0).all()
+        assert (np.asarray(t.launches) > 0).all()
+
+    def test_summary_is_json_safe(self):
+        x0 = _frozen_mix(10, 6)
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True, telemetry_costs=(1.0, 1.0))))
+        s = T.telemetry_summary(cm.telemetry)
+        json.dumps(s, allow_nan=False)  # no NaN/Infinity leaks
+        assert s["n_windows"] == 10
+        assert s["rows_total"] == int(cm.eval_rows) - 16  # minus init rows
+        assert s["launches_total"] == int(cm.map_trips)
+
+
+# ---------------------------------------------------------------------------
+# EMA mode: measured costs, still a replayable lattice walk
+# ---------------------------------------------------------------------------
+class TestMeasuredMode:
+    def test_ema_run_replays_array_equal(self):
+        """The EMA fit makes plan choices wall-clock-dependent — but every
+        choice is still a lattice member at a host boundary, so replaying
+        the recorded trace reproduces the run bit-exactly."""
+        x0 = _frozen_mix(10, 6)
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True)))
+        ropts = BFGSOptions(**{
+            **_base(), "schedule": "replay",
+            "schedule_plans": schedule_trace_plans(cm.schedule_trace)})
+        rep = jax.jit(lambda x: batched_bfgs(rosenbrock, x, ropts))(x0)
+        _assert_result_equal(cm, rep)
+        assert rep.telemetry is None
+
+    def test_ema_fits_positive_costs(self):
+        x0 = _frozen_mix(10, 6)
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True)))
+        assert float(np.asarray(cm.telemetry.c_row)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/preempt/resume round-trips the telemetry carry
+# ---------------------------------------------------------------------------
+class TestCheckpointRoundTrip:
+    def test_preempt_resume_preserves_telemetry(self, tmp_path):
+        x0 = _frozen_mix(10, 6)
+        base = BFGSOptions(**_base(auto_cost_model=True,
+                                   telemetry_costs=(1.0, 1.0)))
+        ref = batched_bfgs(rosenbrock, x0, dataclasses.replace(
+            base, checkpoint_every=4,
+            checkpoint_dir=str(tmp_path / "ref")))
+        ck = str(tmp_path / "ck")
+        with pytest.raises(Preempted):
+            batched_bfgs(rosenbrock, x0, dataclasses.replace(
+                base, checkpoint_every=4, checkpoint_dir=ck,
+                fault_plan=FaultPlan(preempt_at_sweep=11)))
+        res = batched_bfgs(
+            rosenbrock, x0,
+            dataclasses.replace(base, checkpoint_every=4,
+                                checkpoint_dir=ck),
+            resume_from=ck)
+        _assert_result_equal(ref, res)
+        # the carry-resident telemetry counters survived the round trip:
+        # pre-crash windows come from the snapshot, the rest re-recorded
+        np.testing.assert_array_equal(np.asarray(ref.telemetry.rows),
+                                      np.asarray(res.telemetry.rows))
+        np.testing.assert_array_equal(np.asarray(ref.telemetry.launches),
+                                      np.asarray(res.telemetry.launches))
+        assert (int(np.asarray(ref.telemetry.windows))
+                == int(np.asarray(res.telemetry.windows)))
+
+
+# ---------------------------------------------------------------------------
+# Energy probe: capability, never a dependency
+# ---------------------------------------------------------------------------
+def _no_energy(monkeypatch, tmp_path):
+    monkeypatch.setattr(T, "_probe_nvml", lambda: None)
+    monkeypatch.setattr(T, "_RAPL_GLOB",
+                        str(tmp_path / "powercap-none:*/energy_uj"))
+
+
+class TestEnergyProbe:
+    def test_absent_probe_never_raises(self, monkeypatch, tmp_path):
+        _no_energy(monkeypatch, tmp_path)
+        probe = T.probe_energy()
+        assert not probe.available and probe.source is None
+        assert probe.read_j() is None
+
+    def test_failing_reader_degrades_to_absent(self):
+        def boom():
+            raise OSError("driver unloaded")
+
+        probe = T.EnergyProbe("nvml", boom)
+        assert probe.available
+        assert probe.read_j() is None
+        assert not probe.available and probe.source is None
+
+    def test_solve_without_probe_has_no_energy_fields(self, monkeypatch,
+                                                      tmp_path):
+        _no_energy(monkeypatch, tmp_path)
+        x0 = _frozen_mix(10, 6)
+        cm = batched_bfgs(rosenbrock, x0, BFGSOptions(
+            **_base(auto_cost_model=True, telemetry_costs=(1.0, 1.0))))
+        assert np.isnan(np.asarray(cm.telemetry.energy_j)).all()
+        s = T.telemetry_summary(cm.telemetry)
+        assert "energy_j_total" not in s
+        json.dumps(s, allow_nan=False)
+
+    def test_window_recorder_no_probe(self, monkeypatch, tmp_path):
+        _no_energy(monkeypatch, tmp_path)
+        rec = T.WindowTelemetry()
+        rec.begin()
+        wall = rec.end(rows=10, launches=1)
+        assert wall >= 0.0
+        s = rec.summary()
+        assert s["n_windows"] == 1
+        assert "energy_j_total" not in s and "energy_source" not in s
+        json.dumps(s, allow_nan=False)
+
+    def test_window_recorder_end_without_begin(self):
+        rec = T.WindowTelemetry()
+        assert rec.end(rows=1, launches=1) == 0.0
+        assert rec.summary() == {"n_windows": 0}
+
+
+# ---------------------------------------------------------------------------
+# Option validation
+# ---------------------------------------------------------------------------
+class TestValidation:
+    def _x0(self):
+        return jnp.zeros((4, 2), jnp.float32) + 0.5
+
+    def test_cost_model_requires_auto_schedule(self):
+        with pytest.raises(ValueError, match="schedule='auto'"):
+            batched_bfgs(rosenbrock, self._x0(), BFGSOptions(
+                sweep_mode="batched", auto_cost_model=True))
+
+    def test_fixed_costs_require_cost_model(self):
+        with pytest.raises(ValueError, match="auto_cost_model"):
+            batched_bfgs(rosenbrock, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="auto",
+                telemetry_costs=(1.0, 1.0)))
+
+    def test_fixed_costs_shape_checked(self):
+        with pytest.raises(ValueError, match="c_row"):
+            batched_bfgs(rosenbrock, self._x0(), BFGSOptions(
+                sweep_mode="batched", schedule="auto",
+                auto_cost_model=True, telemetry_costs=(1.0,)))
+
+    def test_cost_model_rejects_enclosing_jit(self):
+        opts = BFGSOptions(sweep_mode="batched", schedule="auto",
+                           iter_bfgs=4, auto_cost_model=True)
+        with pytest.raises(ValueError, match="jit"):
+            jax.jit(lambda x: batched_bfgs(rosenbrock, x, opts))(self._x0())
