@@ -1,0 +1,74 @@
+"""Docs-consistency gate: the README knob table cannot rot.
+
+Every public dataclass field of `ZeusOptions` and `EngineOptions` must
+appear as a backticked token inside README.md's "## Options reference"
+section. New knobs land with a doc row or this check (wired into ci.yml
+next to the bench gates) turns the build red — the README stays the
+authoritative user-facing surface instead of drifting behind DESIGN.md.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.check_docs [README.md]
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import sys
+
+SECTION = "## Options reference"
+
+
+def knob_section(readme_text: str) -> str:
+    """The options-reference section: from its heading to the next H2."""
+    start = readme_text.find(SECTION)
+    if start < 0:
+        raise SystemExit(f"FAIL: README has no '{SECTION}' section")
+    rest = readme_text[start + len(SECTION):]
+    nxt = re.search(r"\n## ", rest)
+    return rest[: nxt.start()] if nxt else rest
+
+
+def documented_tokens(section: str) -> set:
+    return set(re.findall(r"`([^`]+)`", section))
+
+
+def required_fields() -> dict:
+    from repro.core import EngineOptions, ZeusOptions
+
+    return {
+        cls.__name__: [f.name for f in dataclasses.fields(cls)
+                       if not f.name.startswith("_")]
+        for cls in (ZeusOptions, EngineOptions)
+    }
+
+
+def check(readme_path: str) -> int:
+    with open(readme_path) as fh:
+        section = knob_section(fh.read())
+    # a token `a`, `b` documents both; `sweep_mode` inside longer strings
+    # (e.g. `sweep_mode="batched"`) counts too, hence substring matching
+    # against every backticked token
+    tokens = documented_tokens(section)
+
+    def covered(field: str) -> bool:
+        return any(field == t or re.search(rf"\b{re.escape(field)}\b", t)
+                   for t in tokens)
+
+    failures = []
+    for cls_name, fields in required_fields().items():
+        missing = [f for f in fields if not covered(f)]
+        if missing:
+            failures.append(f"{cls_name}: {', '.join(missing)}")
+    if failures:
+        print(f"FAIL: fields missing from README '{SECTION}':")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    n = sum(len(v) for v in required_fields().values())
+    print(f"OK: all {n} ZeusOptions/EngineOptions fields documented in "
+          f"{readme_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "README.md"))

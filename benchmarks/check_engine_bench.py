@@ -63,7 +63,14 @@ when a perf floor regresses:
     PR-8 solve-service criterion; the count is structural — theta=1e-30
     means every lane retires at exactly its deadline, so the expected
     value ~1.7 only moves on an admission-policy regression); both
-    policies' `all_done` must be true (every submitted request drained).
+    policies' `all_done` must be true (every submitted request drained);
+  * `meanfield_coverage_ratio` (distinct round(x) basins per objective
+    row of the phase1="meanfield" consensus swarm over the paper swarm,
+    at equal wall time — the iteration budgets are wall-matched by
+    engine_bench) must stay >= BENCH_MEANFIELD_FLOOR (default 1.0 — the
+    ISSUE-10 criterion: per eval and per second, the consensus start set
+    must hand phase 2 at least as many distinct basins as the paper
+    swarm; measured ~1.5-2.0x on rastrigin/ackley at D=8).
 
 Floors are env-tunable so a deliberate trade can relax them in one place
 (the workflow file) instead of editing this gate.
@@ -107,12 +114,14 @@ SERVE_MODE_KEYS = {
     "admit_latency_sweeps_p95",
     "all_done",
 }
+MF_MODE_KEYS = {"wall_us", "iters", "rows", "basins", "best_f"}
 
 
 def check(payload: dict, launch_floor: float, tail_ceil: float,
           trip_ceil: float, ladder_ceil: float, auto_slack: float,
           auto_cost_slack: float, telem_ceil: float, mega_ceil: float,
-          ckpt_ceil: float, serve_floor: float) -> list:
+          ckpt_ceil: float, serve_floor: float,
+          meanfield_floor: float) -> list:
     errors = []
 
     def need(cond, msg):
@@ -120,7 +129,7 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             errors.append(msg)
 
     for key in ("objective", "sweeps", "ad_mode", "cells", "tail", "auto",
-                "telemetry", "mega", "ckpt", "serve"):
+                "telemetry", "mega", "ckpt", "serve", "meanfield"):
         need(key in payload, f"missing top-level key {key!r}")
     cells = payload.get("cells") or {}
     tails = payload.get("tail") or {}
@@ -129,6 +138,7 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
     megas = payload.get("mega") or {}
     ckpts = payload.get("ckpt") or {}
     serves = payload.get("serve") or {}
+    mfs = payload.get("meanfield") or {}
     need(len(cells) > 0, "no cells measured")
     need(len(tails) > 0, "no tail cells measured")
     need(len(autos) > 0, "no auto_vs_best_static cells measured")
@@ -136,6 +146,7 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
     need(len(megas) > 0, "no megakernel cells measured")
     need(len(ckpts) > 0, "no checkpoint-overhead cells measured")
     need(len(serves) > 0, "no solve-service cells measured")
+    need(len(mfs) > 0, "no mean-field coverage cells measured")
 
     for name, cell in cells.items():
         for mode in ("per_lane", "batched", "compacted", "ladder"):
@@ -317,6 +328,28 @@ def check(payload: dict, launch_floor: float, tail_ceil: float,
             f"{serve_floor} — continuous batching regressed toward the "
             f"drain-then-refill baseline",
         )
+
+    for name, mf in mfs.items():
+        for mode in ("pso", "meanfield"):
+            block = mf.get(mode)
+            need(isinstance(block, dict), f"meanfield.{name}: missing {mode!r}")
+            if not isinstance(block, dict):
+                continue
+            missing = MF_MODE_KEYS - set(block)
+            need(not missing,
+                 f"meanfield.{name}.{mode}: missing keys {sorted(missing)}")
+            need(block.get("wall_us", 0) > 0,
+                 f"meanfield.{name}.{mode}: wall_us <= 0")
+            need(block.get("rows", 0) > 0,
+                 f"meanfield.{name}.{mode}: no objective rows recorded")
+        ratio = mf.get("meanfield_coverage_ratio")
+        need(
+            isinstance(ratio, (int, float)) and ratio >= meanfield_floor,
+            f"meanfield.{name}: meanfield_coverage_ratio {ratio!r} below "
+            f"floor {meanfield_floor} — the consensus swarm hands phase 2 "
+            f"fewer distinct basins per objective row than the paper swarm "
+            f"at equal wall time",
+        )
     return errors
 
 
@@ -358,6 +391,9 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--serve-floor", type=float,
         default=float(os.environ.get("BENCH_SERVE_FLOOR", "1.3")))
+    ap.add_argument(
+        "--meanfield-floor", type=float,
+        default=float(os.environ.get("BENCH_MEANFIELD_FLOOR", "1.0")))
     args = ap.parse_args(argv)
 
     def gate(path, label):
@@ -367,7 +403,8 @@ def main(argv=None) -> int:
                      args.tail_trip_ceil, args.ladder_rows_ceil,
                      args.auto_slack, args.auto_cost_slack,
                      args.telemetry_overhead_ceil, args.megakernel_ceil,
-                     args.checkpoint_ceil, args.serve_floor)
+                     args.checkpoint_ceil, args.serve_floor,
+                     args.meanfield_floor)
         return payload, [f"{label}: {e}" for e in errs] if label else errs
 
     payload, errors = gate(args.path, "")
@@ -395,6 +432,8 @@ def main(argv=None) -> int:
               for c in payload["ckpt"].values()]
     serve_r = [s["serve_throughput_ratio"]
                for s in payload["serve"].values()]
+    mf_r = [m["meanfield_coverage_ratio"]
+            for m in payload["meanfield"].values()]
     print(
         f"OK: {n_cells} cell(s); launch_ratio min "
         f"{min(ratios):.2f} (floor {args.launch_ratio_floor}); "
@@ -416,7 +455,9 @@ def main(argv=None) -> int:
         f"checkpoint_overhead_ratio max {max(ckpt_r):.3f} "
         f"(ceiling {args.checkpoint_ceil}); "
         f"serve_throughput_ratio min {min(serve_r):.3f} "
-        f"(floor {args.serve_floor})"
+        f"(floor {args.serve_floor}); "
+        f"meanfield_coverage_ratio min {min(mf_r):.3f} "
+        f"(floor {args.meanfield_floor})"
         + (f"; baseline {args.baseline} OK" if args.baseline else "")
     )
     return 0

@@ -67,6 +67,15 @@ ad_mode="reverse" keeps the gradient cost identical across modes (2 eval-
 equivalents per lane either way), so the ratio isolates the speculative
 ladder restructuring rather than forward-AD vs fused-kernel differences.
 
+The `meanfield` section is the ISSUE-10 phase-1 criterion: the paper swarm
+vs the mean-field consensus swarm (DESIGN.md §18) given equal wall time at
+D=8 on rastrigin/ackley (integer-lattice minima, so a basin is a distinct
+round(x) row inside the box). `meanfield_coverage_ratio` = distinct basins
+per objective row, mean-field over paper swarm, gated ≥
+BENCH_MEANFIELD_FLOOR (default 1.0) — the consensus start set must give
+phase 2 at least as many distinct basins per eval as the paper swarm whose
+c1/c2 pulls contract the cloud. See the MF_* constants.
+
 On this CPU host Pallas interpret mode executes grid steps as a Python
 loop — meaningless for timing — so the suite forces REPRO_DISABLE_PALLAS=1
 and times the XLA-compiled jnp reference schedules of both modes, like the
@@ -171,6 +180,29 @@ TELEM_LADDERS = (16, 8, 4, 2)
 # rastrigin like the mega cell: transcendental-dense rows keep the D=64
 # sweep compute-bound, so the wall ratios track scheduling, not dispatch
 TELEM_OBJECTIVE = "rastrigin"
+# mean-field phase-1 coverage cells (DESIGN.md §18): basin coverage per
+# objective row of phase1="meanfield" vs the paper swarm at EQUAL WALL
+# TIME. D=8 on rastrigin/ackley, whose local minima sit on the integer
+# lattice, so a "basin" is a distinct value of round(x) inside the search
+# box and coverage is how many distinct basins the final swarm occupies —
+# exactly the quantity phase 2 multistart cares about (distinct clusters
+# to polish, cluster_solutions dedups the rest). Protocol: run the paper
+# swarm for MF_PSO_ITERS and measure its wall; probe the mean-field
+# per-iteration wall at the same count; scale the mean-field iteration
+# budget by the measured ratio so both strategies spend the same wall
+# clock; then compare distinct-basins / objective-rows. The paper swarm's
+# c1/c2 pulls contract the cloud around the incumbent best within a few
+# iterations, while the consensus swarm's sigma-noise term keeps mass
+# spread around x-bar, so at equal wall AND per objective row the
+# mean-field start set covers at least as many basins:
+# meanfield_coverage_ratio >= BENCH_MEANFIELD_FLOOR (default 1.0).
+# N is the acceptance-criterion axis: 10^4 and 10^6 particles (small
+# grid: 10^4 only — 10^6 at D=8 is a 32 MB swarm, weekly-run territory).
+MF_OBJECTIVES = ("rastrigin", "ackley")
+MF_D = 8
+MF_NS = (10_000, 1_000_000)
+MF_SMALL_NS = (10_000,)
+MF_PSO_ITERS = 5
 
 
 def _cells():
@@ -603,6 +635,61 @@ def _serve_cell():
     return cell
 
 
+def _meanfield_cell(obj, n):
+    """Basin-coverage-per-row criterion cell (see MF_* constants): the
+    paper swarm and the mean-field consensus swarm given the same wall
+    clock; coverage = distinct round(x) basins inside the box, normalized
+    by objective rows spent."""
+    from repro.core.meanfield import MeanFieldPSOOptions, run_meanfield_pso
+    from repro.core.pso import PSOOptions, run_pso
+
+    key = jax.random.key(n)
+    lo, hi = obj.lower, obj.upper
+
+    def basins(x):
+        xr = np.round(np.asarray(x))
+        inside = np.all((xr >= np.floor(lo)) & (xr <= np.ceil(hi)), axis=1)
+        return int(np.unique(xr[inside], axis=0).shape[0])
+
+    pso_opts = PSOOptions(n_particles=n, iter_pso=MF_PSO_ITERS)
+    pso_run = jax.jit(lambda k: run_pso(obj.fn, k, MF_D, lo, hi, pso_opts))
+    pso_us = timeit(pso_run, key)
+
+    probe_opts = MeanFieldPSOOptions(n_particles=n, iter_pso=MF_PSO_ITERS)
+    probe = jax.jit(
+        lambda k: run_meanfield_pso(obj.fn, k, MF_D, lo, hi, probe_opts))
+    probe_us = timeit(probe, key)
+    # equal-wall budget: scale the iteration count by the measured
+    # per-iteration wall ratio (mean-field iterations are cheaper — no
+    # personal-best stacks, no argmin; the swarm couples through one O(D)
+    # consensus point — so it typically gets a slightly larger count)
+    mf_iters = max(1, round(MF_PSO_ITERS * pso_us / probe_us))
+    mf_opts = MeanFieldPSOOptions(n_particles=n, iter_pso=mf_iters)
+    mf_run = jax.jit(
+        lambda k: run_meanfield_pso(obj.fn, k, MF_D, lo, hi, mf_opts))
+    mf_us = timeit(mf_run, key)
+
+    swarm = jax.block_until_ready(pso_run(key))
+    mf = jax.block_until_ready(mf_run(key))
+    pso_rows = n * (MF_PSO_ITERS + 1)  # init eval + one per iteration
+    mf_rows = n * mf_iters  # no init eval (gf starts at +inf)
+
+    cell = {
+        "objective": obj.name,
+        "n_particles": n,
+        "dim": MF_D,
+        "pso": {"wall_us": pso_us, "iters": MF_PSO_ITERS, "rows": pso_rows,
+                "basins": basins(swarm.x), "best_f": float(swarm.gf)},
+        "meanfield": {"wall_us": mf_us, "iters": mf_iters, "rows": mf_rows,
+                      "basins": basins(mf.x), "best_f": float(mf.gf)},
+        "wall_parity": mf_us / pso_us,
+    }
+    cov_pso = cell["pso"]["basins"] / pso_rows
+    cov_mf = cell["meanfield"]["basins"] / mf_rows
+    cell["meanfield_coverage_ratio"] = cov_mf / max(cov_pso, 1e-30)
+    return cell
+
+
 def engine_sweep(out_path: str = "BENCH_engine.json"):
     """Batched vs per_lane vs compacted sweep execution over (B, D) cells."""
     with kernel_ops.reference_kernels_off_tpu():  # see module docstring
@@ -713,6 +800,26 @@ def _engine_sweep(out_path: str):
         f"admit_p95={serve['continuous']['admit_latency_sweeps_p95']:.0f}sw;"
         f"{serve['continuous']['solves_per_sec']:.2f}solves/s",
     )
+    # mean-field phase-1 criterion: basin coverage per objective row vs
+    # the paper swarm at equal wall time (see MF_* constants, DESIGN.md
+    # §18) over the rastrigin/ackley x N grid
+    small = os.environ.get("BENCH_ENGINE_SMALL") == "1"
+    mf_cells = {}
+    for mf_name in MF_OBJECTIVES:
+        for n in (MF_SMALL_NS if small else MF_NS):
+            mf = _meanfield_cell(get_objective(mf_name), n)
+            mf_cells[f"{mf_name}_n{n}"] = mf
+            emit(
+                f"engine_meanfield_{mf_name}_n{n}",
+                mf["meanfield"]["wall_us"],
+                f"meanfield_coverage_ratio="
+                f"{mf['meanfield_coverage_ratio']:.3f};"
+                f"basins={mf['meanfield']['basins']}"
+                f"(pso={mf['pso']['basins']});"
+                f"iters={mf['meanfield']['iters']}"
+                f"(pso={mf['pso']['iters']});"
+                f"wall_parity={mf['wall_parity']:.2f}x",
+            )
     payload = {
         "objective": obj.name,
         "sweeps": SWEEPS,
@@ -757,7 +864,15 @@ def _engine_sweep(out_path: str):
                  "alternating-(2,32)-budget request stream at theta=1e-30; "
                  "serve_throughput_ratio = drain.sweeps / continuous.sweeps "
                  "(structural — every lane retires at its deadline), gated "
-                 ">= BENCH_SERVE_FLOOR (default 1.3)"),
+                 ">= BENCH_SERVE_FLOOR (default 1.3). meanfield: "
+                 "phase1='meanfield' (consensus swarm, DESIGN.md 18) vs "
+                 "the paper swarm at D=8 on integer-lattice objectives; a "
+                 "basin is a distinct round(x) row inside the box, the "
+                 "mean-field iteration budget is scaled to the paper "
+                 "swarm's measured wall (equal wall time), and "
+                 "meanfield_coverage_ratio = basins-per-objective-row, "
+                 "meanfield over pso, gated >= BENCH_MEANFIELD_FLOOR "
+                 "(default 1.0)"),
         "cells": results,
         "tail": tails,
         "auto": {f"b{B}_d{D}": auto},
@@ -765,6 +880,7 @@ def _engine_sweep(out_path: str):
         "mega": {f"b{B}_d{D}": mega},
         "ckpt": {f"b{CKPT_B}_d{CKPT_D}": ckpt},
         "serve": {f"s{serve['slots']}_r{serve['requests']}": serve},
+        "meanfield": mf_cells,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -33,6 +33,12 @@ from repro.core.engine import (
     solver_names,
 )
 from repro.core.lbfgs import LBFGS, LBFGSOptions, batched_lbfgs
+from repro.core.meanfield import (
+    MeanFieldPSOOptions,
+    MeanFieldState,
+    consensus_point,
+    run_meanfield_pso,
+)
 from repro.core.objectives import (
     OBJECTIVES,
     BatchedObjective,
@@ -72,6 +78,8 @@ __all__ = [
     "auto_plan_lattice",
     "LBFGS",
     "LBFGSOptions",
+    "MeanFieldPSOOptions",
+    "MeanFieldState",
     "OBJECTIVES",
     "PSOOptions",
     "SequentialZeusResult",
@@ -81,6 +89,7 @@ __all__ = [
     "batched_bfgs",
     "batched_lbfgs",
     "cluster_solutions",
+    "consensus_point",
     "distributed_zeus",
     "get_objective",
     "get_solver",
@@ -90,6 +99,7 @@ __all__ = [
     "HostedSolve",
     "open_multistart",
     "phase2_setup",
+    "run_meanfield_pso",
     "run_multistart",
     "run_pso",
     "run_until_confident",

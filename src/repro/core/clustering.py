@@ -49,6 +49,25 @@ def cluster_solutions(
     by: str = "coords",
     value_tol: float = 1e-6,
 ) -> ConfidenceReport:
+    """Group a multistart result's converged lanes into candidate basins.
+
+    res:    BFGSResult from run_multistart / zeus().raw — any phase-1
+            strategy (pso or meanfield, DESIGN.md §18) feeds through
+            unchanged; only `.x`, `.fval`, `.status` are read.
+    radius: single-linkage distance (by="coords"): a lane joins the first
+            existing cluster whose center is within `radius` in ‖·‖₂.
+            Lanes are visited in ascending fval, so centers seed at basin
+            minima.
+    by:     "coords" (default) clusters in iterate space; "value" groups
+            lanes whose fvals agree to `value_tol` (relative, floored at
+            1.0) — useful when symmetric minima alias in value.
+    value_tol: the by="value" tolerance.
+
+    Returns a ConfidenceReport: clusters sorted by fval (centers are
+    member means, fval the member min), `confidence` = fraction of
+    converged lanes in the best cluster. With zero converged lanes the
+    best lane becomes a single count-0 cluster at confidence 0.0 —
+    callers can distinguish "confident" from "nothing converged"."""
     x = np.asarray(res.x)
     f = np.asarray(res.fval)
     status = np.asarray(res.status)
@@ -107,7 +126,25 @@ def run_until_confident(
     """§VII-B iterative procedure: keep launching batches until the lowest
     cluster has accumulated `min_lanes_in_best` convergences.
 
-    `run_fn(key) -> BFGSResult`; `keys` bounds the number of rounds."""
+    run_fn: `key -> BFGSResult` — typically `lambda k: zeus(...).raw` or a
+            distributed_zeus closure. The lane count per round is whatever
+            the phase-1 strategy produces (phase1="meanfield" rounds can
+            carry 10^6 lanes as cheaply as the paper swarm carries 10^3 —
+            the per-round start sets are consumed unchanged, DESIGN.md
+            §18), and rounds may differ in size.
+    keys:   iterable of PRNG keys, one per round; its length bounds the
+            number of rounds, and independent keys are what make the
+            accumulated lanes independent evidence.
+    min_lanes_in_best: stop once the lowest cluster holds this many
+            converged lanes across ALL rounds so far.
+    radius: clustering radius, forwarded to cluster_solutions (coords
+            mode).
+
+    Returns the last round's ConfidenceReport over the union of all lanes
+    launched so far (grad_norm is zero-filled in the merged result — only
+    x/fval/status survive aggregation). If the keys run out before the
+    threshold, the report simply reflects everything seen: check
+    `report.best_cluster.count` against your threshold."""
     agg_x, agg_f, agg_s = [], [], []
     report = None
     for key in keys:

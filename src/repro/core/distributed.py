@@ -36,10 +36,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import BFGSResult, EngineCarry, run_multistart
+from repro.core.meanfield import run_meanfield_pso
 from repro.core.pso import PSOOptions, SwarmState, init_swarm, pso_step
-from repro.core.zeus import (_RETRY_FOLD, ZeusOptions, ZeusResult,
-                             _phase2_setup, _select_best, solve_phase2,
-                             uniform_starts)
+from repro.core.zeus import (_RETRY_FOLD, PHASE1_STRATEGIES, ZeusOptions,
+                             ZeusResult, _phase2_setup, _select_best,
+                             phase1_particles, solve_phase2, uniform_starts)
 
 
 def shard_map_compat(fn, mesh, in_specs, out_specs):
@@ -94,6 +95,65 @@ def make_pcount(axis_names: Tuple[str, ...]):
     return pcount
 
 
+def make_pmoments(axis_names: Tuple[str, ...]):
+    """Cross-device softmax-moment reduction for the mean-field consensus
+    (DESIGN.md §18).
+
+    Each shard hands over its log-sum-exp partials (m, S, N) = (max
+    log-weight, Σw, Σw·x with weights shifted by its OWN m). One pmax finds
+    the global max log-weight M, each shard re-shifts by exp(m − M) ≤ 1 —
+    never an overflow, and exact for the shard that owns the max — and two
+    psums reduce the moments. O(D) bytes per device per iteration; the
+    consensus x̄ = N/S then comes out bit-identical on every device."""
+
+    def pmoments(m: jnp.ndarray, S: jnp.ndarray, N: jnp.ndarray):
+        M = jax.lax.pmax(m, axis_names)
+        # an all-non-finite shard has m = -inf (zero partials): keep its
+        # scale 0 rather than exp(-inf - -inf) = nan when M is -inf too
+        M_safe = jnp.where(jnp.isfinite(M), M, 0.0)
+        scale = jnp.exp(jnp.where(jnp.isfinite(m), m - M_safe, -jnp.inf))
+        return (jax.lax.psum(scale * S, axis_names),
+                jax.lax.psum(scale * N, axis_names))
+
+    return pmoments
+
+
+def _phase1_shard(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: ZeusOptions,
+    axis_names: Tuple[str, ...],
+    n_local: int,
+):
+    """Per-shard phase 1 (zeus.run_phase1 with this shard's lane count and
+    the mesh collectives): returns (starts, best_f_seen) with best_f_seen
+    replicated across devices. The PSO swarm couples through make_pmin
+    (global-best bcast), the mean-field swarm through make_pmoments (the
+    two-psum consensus) — each strategy's only cross-device traffic."""
+    dtype = jnp.dtype(opts.dtype)
+    if not opts.use_pso:
+        # skip the swarm entirely (phase 1 already costs one objective
+        # eval per particle) — same contract as zeus()
+        return uniform_starts(key, n_local, dim, lower, upper, dtype)
+    if opts.phase1 == "meanfield":
+        mf_opts = dataclasses.replace(opts.meanfield, n_particles=n_local)
+        mf = run_meanfield_pso(f, key, dim, lower, upper, mf_opts,
+                               pmoments=make_pmoments(axis_names),
+                               dtype=dtype)
+        # gf is a shard-local running min (reporting only, never part of
+        # the dynamics) — replicate it once at the end
+        return mf.x, jax.lax.pmin(mf.gf, axis_names)
+    pmin = make_pmin(axis_names)
+    state = init_swarm(f, key, n_local, dim, lower, upper, pmin, dtype)
+    state = jax.lax.fori_loop(
+        0, opts.pso.iter_pso,
+        lambda _, s: pso_step(f, s, opts.pso, lower, upper, pmin), state)
+    return state.x, state.gf
+
+
 def _local_zeus(
     f: Callable,
     key: jnp.ndarray,
@@ -107,23 +167,12 @@ def _local_zeus(
     """Per-device shard program (runs under shard_map)."""
     pmin = make_pmin(axis_names)
     pcount = make_pcount(axis_names)
-    dtype = jnp.dtype(opts.dtype)
 
     # decorrelate per-device RNG streams
     key = jax.random.fold_in(key[0], _axis_index_flat(axis_names))
 
-    if opts.use_pso:
-        state = init_swarm(f, key, n_local, dim, lower, upper, pmin, dtype)
-
-        def body(_, s):
-            return pso_step(f, s, opts.pso, lower, upper, pmin)
-
-        state = jax.lax.fori_loop(0, opts.pso.iter_pso, body, state)
-        starts, pso_gf = state.x, state.gf
-    else:
-        # skip the swarm entirely (init_swarm already costs one objective
-        # eval per particle) — same contract as zeus()
-        starts, pso_gf = uniform_starts(key, n_local, dim, lower, upper, dtype)
+    starts, pso_gf = _phase1_shard(f, key, dim, lower, upper, opts,
+                                   axis_names, n_local)
 
     # phase 2 through the engine: the registry-selected strategy runs with
     # the global stop protocol (pcount = psum over the mesh), per-device
@@ -170,7 +219,12 @@ def distributed_zeus(
     """
     axis_names = tuple(mesh.axis_names)
     n_devices = int(np.prod(mesh.devices.shape))
-    n_total = opts.pso.n_particles
+    if opts.phase1 not in PHASE1_STRATEGIES:
+        raise ValueError(
+            f"unknown phase1 strategy {opts.phase1!r}; expected one of "
+            f"{PHASE1_STRATEGIES}")
+    # lane count of the ACTIVE phase-1 strategy (pso or meanfield swarm)
+    n_total = phase1_particles(opts)
     if n_total % n_devices:
         raise ValueError(
             f"n_particles={n_total} must divide over {n_devices} devices"
@@ -272,20 +326,10 @@ def distributed_zeus(
             telem=sh(carry_like.telem))
 
     def init_shard(key):
-        pmin = make_pmin(axis_names)
         pcount = make_pcount(axis_names)
         key = jax.random.fold_in(key[0], _axis_index_flat(axis_names))
-        if opts.use_pso:
-            state = init_swarm(f, key, n_local, dim, lower, upper, pmin,
-                               dtype)
-            state = jax.lax.fori_loop(
-                0, opts.pso.iter_pso,
-                lambda _, s: pso_step(f, s, opts.pso, lower, upper, pmin),
-                state)
-            starts, pso_gf = state.x, state.gf
-        else:
-            starts, pso_gf = uniform_starts(key, n_local, dim, lower,
-                                            upper, dtype)
+        starts, pso_gf = _phase1_shard(f, key, dim, lower, upper, opts,
+                                       axis_names, n_local)
         prog = _shard_program(starts, pcount,
                               retry_key=jax.random.fold_in(key, _RETRY_FOLD))
         return _wrap(prog.make_carry0()), pso_gf

@@ -1,0 +1,251 @@
+"""Mean-field consensus PSO: the million-particle phase-1 strategy.
+
+The paper's PSO (core/pso.py, Algs. 8/9) carries per-particle personal
+bests — an extra (N, D) position stack plus an (N,) value stack — and a
+global argmin every iteration. Fine at 10^3 particles, wasteful at 10^6+:
+the personal-best state doubles swarm memory traffic and contributes
+nothing once the swarm is only used to SEED phase 2 (the engine restarts
+from positions, not from best-so-far bookkeeping).
+
+Grassi & Huang's mean-field PSO (PAPERS.md, arXiv:2108.00393) replaces all
+pairwise/global best state with *moment statistics*: every particle drifts
+toward one softmax-weighted consensus point
+
+    x̄ = Σᵢ wᵢ xᵢ / Σᵢ wᵢ,       wᵢ = exp(−β f(xᵢ)),
+
+and explores around it with scaled Gaussian noise. As β → ∞ the consensus
+point collapses onto the best particle (the Laplace principle), so β
+interpolates between a plain mean (β = 0) and the paper PSO's argmin; at
+moderate β the swarm keeps covering many basins instead of collapsing onto
+one incumbent — exactly what a multistart phase 2 wants from its start set.
+
+Discretized dynamics (Euler–Maruyama of the mean-field system, with the
+drift/noise coefficients already absorbing Δt):
+
+    d  = x̄ − x
+    v' = w·v + λ·d + σ·s(d) ⊙ ξ,     ξ ~ N(0, I_D)
+    x' = x + v'
+
+with two exploration-noise envelopes s(d):
+
+    isotropic:    s(d) = ‖d‖₂        (one shared scalar per particle)
+    anisotropic:  s(d) = d           (per-coordinate — a particle far from
+                                      consensus in coordinate j keeps
+                                      exploring coordinate j specifically;
+                                      dimension-robust, the paper's eq 2.4)
+
+Numerical stability: the weights span e^{−β·f} over the whole swarm — at
+β = 30 on rastrigin's [0, ~160] value range that is e^{-4800}, far below
+f32 (and f64) underflow as written. The consensus is therefore computed in
+log space: with m = maxᵢ(−β fᵢ), the shifted weights exp(−β fᵢ − m) are in
+(0, 1] with the argmax particle at exactly 1, so Σ wᵢ ≥ 1 and the division
+is unconditionally safe. Non-finite f (a NaN/Inf escape) becomes weight 0.
+
+Sharding contract (DESIGN.md §18): the moments shard over the particle
+axis with ONE pmax (the log-sum-exp shift) and TWO psums (Σw and Σw·x) —
+O(D) bytes per device per iteration, the same collective weight as the
+paper PSO's global-best broadcast, with no cross-device argmin/bcast pair.
+`distributed_zeus` supplies the `pmoments` hook (core/distributed.py);
+single-host runs pass None and reduce locally.
+
+The per-particle update is fused into one Pallas launch when
+`use_kernel=True` (kernels/meanfield_step.py); the default (CPU) path is
+the identical jnp expression, which XLA already fuses — same capability
+gating as PSOOptions.use_kernel and the §14 precedent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NOISE_MODES = ("isotropic", "anisotropic")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeanFieldPSOOptions:
+    """Knobs of the mean-field phase-1 strategy (ZeusOptions.meanfield).
+
+    n_particles: swarm size N. The whole point of this strategy is that N
+        can be 10^6+ — per-particle state is {x, v} only, O(N·D), with no
+        personal-best stack and no global argmin.
+    iter_pso:    number of consensus/update iterations (0 = pure random
+        multistart, like PSOOptions.iter_pso=0 — one uniform draw, no
+        objective evaluations in phase 1).
+    beta:        softmax inverse temperature β of the consensus weights
+        exp(−β f). Small β → consensus ≈ swarm mean (maximal exploration);
+        large β → consensus ≈ best particle (paper-PSO-like contraction).
+    w:           velocity inertia (the discretized friction term).
+    drift:       λ, drift coefficient toward the consensus point.
+    sigma:       σ, exploration-noise scale.
+    noise:       "anisotropic" (default) scales the per-coordinate noise by
+        |x̄ − x| coordinate-wise — dimension-robust exploration; "isotropic"
+        uses one ‖x̄ − x‖₂ envelope per particle.
+    clip_to_range: clip positions to [lower, upper] after each update
+        (off by default, matching PSOOptions).
+    use_kernel:  route the update through the fused Pallas kernel
+        (kernels/meanfield_step.py). Default off on CPU where interpret
+        mode is slower than XLA's own fusion of the identical jnp path.
+    """
+
+    n_particles: int = 1024
+    iter_pso: int = 5
+    beta: float = 30.0
+    w: float = 0.5
+    drift: float = 1.2
+    sigma: float = 0.3
+    noise: str = "anisotropic"
+    clip_to_range: bool = False
+    use_kernel: bool = False
+
+
+class MeanFieldState(NamedTuple):
+    x: jnp.ndarray  # (N, D) positions (the phase-2 start set)
+    v: jnp.ndarray  # (N, D) velocities
+    consensus: jnp.ndarray  # (D,) last consensus point x̄ (diagnostics)
+    gf: jnp.ndarray  # () best objective value SEEN (reporting only — not
+    # part of the dynamics; a scalar running min, not an argmin/bcast)
+    key: jnp.ndarray  # PRNG key
+
+
+# pmoments(m, S, N) -> (S_global, N_global): the cross-device moment
+# reduction hook — see consensus_point and core/distributed.make_pmoments
+PMoments = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                    Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def consensus_moments(fvals: jnp.ndarray, x: jnp.ndarray, beta: float):
+    """Shard-local log-sum-exp partials of the softmax consensus.
+
+    Returns (m, S, N): m = maxᵢ log-weight (the LSE shift), S = Σᵢ wᵢ and
+    N = Σᵢ wᵢ xᵢ with wᵢ = exp(−β fᵢ − m). Non-finite fᵢ get weight 0; an
+    all-non-finite shard returns (−inf, 0, 0) — harmless partials that a
+    cross-device reduction absorbs and a local consensus_point guards.
+    """
+    logw = jnp.where(jnp.isfinite(fvals),
+                     (-beta * fvals).astype(x.dtype), -jnp.inf)
+    m = jnp.max(logw)
+    # all-non-finite guard: exp(-inf - -inf) = nan, so shift by 0 instead
+    # (every weight is then exp(-inf) = 0 as intended)
+    w = jnp.exp(logw - jnp.where(jnp.isfinite(m), m, 0.0))
+    return m, jnp.sum(w), w @ x
+
+
+def consensus_point(
+    fvals: jnp.ndarray,
+    x: jnp.ndarray,
+    beta: float,
+    pmoments: Optional[PMoments] = None,
+) -> jnp.ndarray:
+    """Softmax-weighted consensus x̄ = Σ wᵢxᵢ / Σ wᵢ, LSE-stable.
+
+    With `pmoments` (distributed), the shard-local (m, S, N) partials are
+    combined across devices — one pmax re-shifts every shard onto the
+    global max log-weight, two psums reduce the moments — so every device
+    computes the identical global x̄. S ≥ 1 by the LSE shift whenever any
+    particle is finite; the tiny-clamp only engages when the ENTIRE swarm
+    is non-finite, keeping x̄ finite (= 0) instead of 0/0.
+    """
+    m, S, N = consensus_moments(fvals, x, beta)
+    if pmoments is not None:
+        S, N = pmoments(m, S, N)
+    return N / jnp.maximum(S, jnp.finfo(x.dtype).tiny)
+
+
+def meanfield_step(
+    f: Callable,
+    state: MeanFieldState,
+    opts: MeanFieldPSOOptions,
+    lower: float,
+    upper: float,
+    pmoments: Optional[PMoments] = None,
+) -> MeanFieldState:
+    """One mean-field iteration: evaluate, form consensus, drift + explore.
+
+    Evaluation happens at the CURRENT positions (the consensus needs this
+    sweep's f), so each iteration costs exactly N objective rows and the
+    final positions are handed to phase 2 unevaluated — the engine's lane
+    init evaluates them anyway.
+    """
+    knoise, knext = jax.random.split(state.key)
+    fvals = jax.vmap(f)(state.x)
+    xbar = consensus_point(fvals, state.x, opts.beta, pmoments)
+    # reporting-only running min (scalar; masked against NaN escapes)
+    gf = jnp.minimum(
+        state.gf, jnp.min(jnp.where(jnp.isfinite(fvals), fvals, jnp.inf)))
+
+    xi = jax.random.normal(knoise, state.x.shape, state.x.dtype)
+    if opts.use_kernel:
+        from repro.kernels import ops as kernel_ops
+        x, v = kernel_ops.meanfield_step_update(
+            state.x, state.v, xbar, xi,
+            opts.w, opts.drift, opts.sigma, opts.noise)
+    else:
+        d = xbar[None, :] - state.x
+        if opts.noise == "isotropic":
+            scale = jnp.sqrt(jnp.sum(d * d, axis=-1, keepdims=True))
+        else:
+            scale = d
+        v = opts.w * state.v + opts.drift * d + opts.sigma * scale * xi
+        x = state.x + v
+    if opts.clip_to_range:
+        x = jnp.clip(x, lower, upper)
+    return MeanFieldState(x=x, v=v, consensus=xbar, gf=gf, key=knext)
+
+
+def init_meanfield(
+    key: jnp.ndarray,
+    n: int,
+    dim: int,
+    lower: float,
+    upper: float,
+    dtype=jnp.float32,
+) -> MeanFieldState:
+    """Uniform positions in [lower, upper], velocities in ±range — the same
+    init distribution as the paper swarm (pso.init_swarm) minus the
+    personal-best stacks and the init objective pass (the first
+    meanfield_step evaluates before it moves)."""
+    kx, kv, knext = jax.random.split(key, 3)
+    vel_range = upper - lower
+    x = jax.random.uniform(kx, (n, dim), dtype, lower, upper)
+    v = jax.random.uniform(kv, (n, dim), dtype, -vel_range, vel_range)
+    return MeanFieldState(
+        x=x, v=v, consensus=jnp.zeros((dim,), dtype),
+        gf=jnp.asarray(jnp.inf, dtype), key=knext)
+
+
+def run_meanfield_pso(
+    f: Callable,
+    key: jnp.ndarray,
+    dim: int,
+    lower: float,
+    upper: float,
+    opts: MeanFieldPSOOptions,
+    pmoments: Optional[PMoments] = None,
+    dtype=jnp.float32,
+) -> MeanFieldState:
+    """Phase 1 via mean-field consensus PSO: init + iter_pso iterations.
+
+    Drop-in phase-1 alternative to pso.run_pso (ZeusOptions(
+    phase1="meanfield")): the returned state's `.x` is the phase-2 start
+    set and `.gf` the best value seen (inf when iter_pso=0 — no objective
+    evaluation happened, like use_pso=False).
+
+    `pmoments` is the cross-device moment hook for sharded swarms
+    (core/distributed.make_pmoments); None reduces over local particles
+    only. jit-able end to end; N can be 10^6+ — state is two (N, D)
+    arrays, and each iteration is one batched objective pass, one O(N·D)
+    moment reduction and one fused (or XLA-fused) elementwise update.
+    """
+    if opts.noise not in NOISE_MODES:
+        raise ValueError(
+            f"unknown noise mode {opts.noise!r}; expected one of "
+            f"{NOISE_MODES}")
+    state = init_meanfield(key, opts.n_particles, dim, lower, upper, dtype)
+
+    def body(_, s):
+        return meanfield_step(f, s, opts, lower, upper, pmoments)
+
+    return jax.lax.fori_loop(0, opts.iter_pso, body, state)

@@ -121,7 +121,28 @@ def run_pso(
     pmin: Optional[Callable] = None,
     dtype=jnp.float32,
 ) -> SwarmState:
-    """Phase 1 of ZEUS: init + iter_pso synchronous swarm iterations."""
+    """Phase 1 of ZEUS: init + iter_pso synchronous swarm iterations.
+
+    f:      scalar objective `(dim,) -> ()`; evaluated vmapped over the
+            swarm once at init and once per iteration.
+    key:    PRNG key. The whole phase is a deterministic function of it —
+            fixed-seed runs are bit-reproducible (the swarm init consumes
+            the same splits whether or not iterations follow).
+    dim:    problem dimension D.
+    lower/upper: the search box; positions start uniform inside it and
+            velocities uniform in ±(upper − lower). Positions only stay
+            inside with `opts.clip_to_range` (the paper does not clip).
+    opts:   PSOOptions (swarm size, iteration count, w/c1/c2, kernel gate).
+    pmin:   optional cross-device `(gf, gx) -> (gf, gx)` min-reduction for
+            a sharded swarm (distributed.make_pmin); None on a single host.
+    dtype:  dtype of all swarm state (the driver passes ZeusOptions.dtype).
+
+    Returns the final SwarmState: `.x` is the phase-2 start set, `.gf/.gx`
+    the global best. jit-able end to end. For 10^6+ particles prefer
+    `ZeusOptions(phase1="meanfield")` (core/meanfield.run_meanfield_pso) —
+    it drops the personal-best stacks this swarm carries and couples
+    particles through a two-psum consensus point instead of a global
+    argmin (DESIGN.md §18)."""
     state = init_swarm(f, key, opts.n_particles, dim, lower, upper, pmin, dtype)
 
     def body(_, s):
@@ -142,8 +163,22 @@ def sequential_pso(
 
     Faithful to the *sequential* semantics: the global best propagates
     within an iteration (particle i+1 sees particle i's update), unlike the
-    bulk-synchronous parallel version.
-    """
+    bulk-synchronous parallel version — so its trajectories are NOT
+    comparable bitwise with run_pso, only statistically.
+
+    f:      scalar objective `(dim,) -> ()`, called one particle at a time
+            (n_particles · (iter_pso + 1) python-loop evaluations — keep
+            the swarm small; this exists for baseline timing, not scale).
+    key:    PRNG key; folded into a numpy Generator seed, so this baseline
+            has its own stream rather than replaying run_pso's draws.
+    dim:    problem dimension D.
+    lower/upper: the search box (init only; no clipping).
+    opts:   PSOOptions — n_particles, iter_pso and w/c1/c2 are honored;
+            use_kernel/clip_to_range are parallel-path knobs and ignored.
+
+    Returns a SwarmState mirroring run_pso's (arrays converted from
+    numpy). The mean-field strategy (DESIGN.md §18) has no sequential
+    variant: it is defined by swarm-level moment statistics."""
     import numpy as np
 
     rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))

@@ -24,7 +24,10 @@ from repro.core import engine as engine_mod
 from repro.core.bfgs import BFGSOptions, BFGSResult, serial_bfgs
 from repro.core.engine import CONVERGED, get_solver, run_multistart
 from repro.core.lbfgs import LBFGSOptions
+from repro.core.meanfield import MeanFieldPSOOptions, run_meanfield_pso
 from repro.core.pso import PSOOptions, run_pso, sequential_pso
+
+PHASE1_STRATEGIES = ("pso", "meanfield")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +36,12 @@ class ZeusOptions:
     bfgs: BFGSOptions = BFGSOptions()
     lbfgs: Optional[LBFGSOptions] = None  # back-compat: set => solver="lbfgs"
     use_pso: bool = True
+    # phase-1 strategy: "pso" (paper Algs. 8/9, per-particle bests) or
+    # "meanfield" (softmax-consensus swarm, core/meanfield.py — scales to
+    # 10^6+ particles; configure via `meanfield`). use_pso=False skips
+    # phase 1 entirely regardless of this choice.
+    phase1: str = "pso"
+    meanfield: MeanFieldPSOOptions = MeanFieldPSOOptions()
     dtype: str = "float32"
     solver: str = "bfgs"  # phase-2 strategy name in the engine registry
     lane_chunk: Optional[int] = None  # overrides the solver opts' lane_chunk
@@ -92,6 +101,39 @@ class ZeusResult(NamedTuple):
     pso_best_f: jnp.ndarray  # global best after phase 1 (inf if PSO skipped)
     n_failed: Optional[jnp.ndarray] = None  # lanes failed at solve end
     n_restarts: Optional[jnp.ndarray] = None  # (B,) quarantine re-seeds
+
+
+def phase1_particles(opts: ZeusOptions) -> int:
+    """Lane count phase 2 will receive: the active phase-1 strategy's swarm
+    size (pso.n_particles or meanfield.n_particles). The distributed driver
+    shards this number over the mesh; use_pso=False draws the same count
+    uniformly."""
+    if opts.phase1 == "meanfield":
+        return opts.meanfield.n_particles
+    return opts.pso.n_particles
+
+
+def run_phase1(f, key, dim, lower, upper, opts: ZeusOptions, dtype,
+               pmin=None, pmoments=None):
+    """Dispatch phase 1: returns (starts, best_f_seen) for phase 2.
+
+    `pmin`/`pmoments` are the cross-device hooks of the respective strategy
+    (only the active one is used); None on a single host. use_pso=False
+    skips the swarm entirely — no objective evaluations in phase 1."""
+    if opts.phase1 not in PHASE1_STRATEGIES:
+        raise ValueError(
+            f"unknown phase1 strategy {opts.phase1!r}; expected one of "
+            f"{PHASE1_STRATEGIES}")
+    if not opts.use_pso:
+        return uniform_starts(
+            key, phase1_particles(opts), dim, lower, upper, dtype)
+    if opts.phase1 == "meanfield":
+        mf = run_meanfield_pso(f, key, dim, lower, upper, opts.meanfield,
+                               pmoments=pmoments, dtype=dtype)
+        return mf.x, mf.gf
+    swarm = run_pso(f, key, dim, lower, upper, opts.pso, pmin=pmin,
+                    dtype=dtype)
+    return swarm.x, swarm.gf
 
 
 def _solver_name(opts: ZeusOptions) -> str:
@@ -229,15 +271,9 @@ def zeus(
     phase 2) and restores the phase-2 carry from the newest COMMITted
     snapshot under `resume` — array-equal to the uninterrupted solve."""
     dtype = jnp.dtype(opts.dtype)
-    if opts.use_pso:
-        # iter_pso=0 still initialises the swarm — pure random multistart.
-        swarm = run_pso(f, key, dim, lower, upper, opts.pso, dtype=dtype)
-        starts = swarm.x
-        pso_best_f = swarm.gf
-    else:
-        # no PSO phase at all — no wasted objective evaluations
-        starts, pso_best_f = uniform_starts(
-            key, opts.pso.n_particles, dim, lower, upper, dtype)
+    # phase 1 by strategy name (PHASE1_STRATEGIES); use_pso=False skips it
+    # entirely — no wasted objective evaluations
+    starts, pso_best_f = run_phase1(f, key, dim, lower, upper, opts, dtype)
     res = solve_phase2(f, starts, opts,
                        retry_key=jax.random.fold_in(key, _RETRY_FOLD),
                        bounds=(lower, upper), resume_from=resume)
@@ -302,6 +338,11 @@ def sequential_zeus(
     upper: float,
     opts: ZeusOptions = ZeusOptions(),
 ) -> SequentialZeusResult:
+    if opts.phase1 != "pso":
+        raise ValueError(
+            "sequential_zeus is the paper's Alg. 1 baseline and only runs "
+            "phase1='pso'; use zeus()/distributed_zeus for phase1="
+            f"{opts.phase1!r}")
     t0 = time.perf_counter()
     if opts.use_pso and opts.pso.iter_pso > 0:
         swarm = sequential_pso(f, key, dim, lower, upper, opts.pso)

@@ -1,0 +1,84 @@
+"""Pallas kernel: fused mean-field PSO update (DESIGN.md §18).
+
+One VMEM pass computes the drift-toward-consensus + exploration-noise +
+position update of the mean-field swarm (core/meanfield.py):
+
+    d  = x̄ − x                          (consensus drift direction)
+    v' = w v + λ d + σ s(d) ⊙ ξ          s(d) = ‖d‖₂   (isotropic)
+                                         s(d) = d      (anisotropic)
+    x' = x + v'
+
+for a (TN, D) tile of particles, with the consensus point x̄ broadcast as a
+(1, D) tile and ξ the pre-drawn standard-normal noise. Four elementwise HBM
+round-trips in the naive form collapse to one read of {x, v, ξ} + broadcast
+x̄ and one write of {x', v'}. The consensus point itself stays OUTSIDE the
+kernel — it is a cross-particle (and cross-device) softmax reduction, which
+XLA/psum already emit optimally (see core/meanfield.consensus_point).
+
+Zero-padding the lane dim D is mathematically exact for both noise modes:
+pad columns of x and x̄ are both zero, so d = 0 there — the isotropic row
+norm gains only zero terms and the anisotropic noise term vanishes with d.
+Bitwise, though, the WIDENED isotropic reduction may re-associate the sum
+and round differently at ~1 ulp, so the dispatcher (kernels/ops.py) pads
+only on TPU, where the lane alignment is required.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _meanfield_kernel(w, drift, sigma, isotropic, x_ref, v_ref, xb_ref,
+                      xi_ref, xout_ref, vout_ref):
+    x = x_ref[...]
+    v = v_ref[...]
+    xb = xb_ref[...]  # (1, D) broadcast tile
+    xi = xi_ref[...]
+    d = xb - x
+    if isotropic:
+        scale = jnp.sqrt(jnp.sum(d * d, axis=-1, keepdims=True))
+    else:
+        scale = d
+    v_new = w * v + drift * d + sigma * scale * xi
+    x_new = x + v_new
+    vout_ref[...] = v_new.astype(vout_ref.dtype)
+    xout_ref[...] = x_new.astype(xout_ref.dtype)
+
+
+def meanfield_step_pallas(x, v, xbar, xi, w, drift, sigma, *,
+                          isotropic: bool, particle_tile: int = 256,
+                          interpret=False):
+    N, D = x.shape
+    tn = min(particle_tile, N)
+    # Pad the particle axis up to a tile multiple (zero rows are exact for
+    # this row-independent update and get sliced off) instead of shrinking
+    # the tile until it divides N — same policy as pso_step_pallas.
+    Np = ((N + tn - 1) // tn) * tn
+    if Np != N:
+        pad = ((0, Np - N), (0, 0))
+        x, v, xi = (jnp.pad(a, pad) for a in (x, v, xi))
+    xb2 = xbar[None, :]  # (1, D) so the block machinery can tile it
+    kernel = functools.partial(_meanfield_kernel, w, drift, sigma, isotropic)
+    x_new, v_new = pl.pallas_call(
+        kernel,
+        grid=(Np // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((1, D), lambda n: (0, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+            pl.BlockSpec((tn, D), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, D), x.dtype),
+            jax.ShapeDtypeStruct((Np, D), v.dtype),
+        ],
+        interpret=interpret,
+    )(x, v, xb2, xi)
+    return x_new[:N], v_new[:N]

@@ -24,6 +24,7 @@ from repro.kernels.bfgs_update import (
 )
 from repro.kernels.direction import direction_pallas
 from repro.kernels.fused_obj import fused_value_grad_pallas, fused_value_pallas
+from repro.kernels.meanfield_step import meanfield_step_pallas
 from repro.kernels.pso_step import pso_step_pallas
 
 _LANE = 128  # TPU lane width
@@ -170,6 +171,34 @@ def pso_step_update(x, v, px, gx, r1, r2, w, c1, c2):
         _pad_to(r2, Dp, 1),
         w, c1, c2,
         interpret=_interpret(),
+    )
+    return x_new[:, :D], v_new[:, :D]
+
+
+# -- fused mean-field PSO step --------------------------------------------------
+def meanfield_step_update(x, v, xbar, xi, w, drift, sigma,
+                          noise: str = "anisotropic"):
+    """x/v/ξ (N, D), x̄ (D,) -> (x', v'): the fused drift + exploration-noise
+    + position update of the mean-field swarm (DESIGN.md §18). `noise` is
+    "isotropic" (row-norm envelope) or "anisotropic" (per-coordinate)."""
+    if not _use_pallas():
+        return ref.meanfield_step_ref(x, v, xbar, xi, w, drift, sigma, noise)
+    N, D = x.shape
+    # Lane-pad D only where the hardware needs it (TPU). Zero pad columns
+    # are mathematically exact for both noise modes (d = 0 there), but the
+    # widened isotropic row-norm reduction may RE-ASSOCIATE the sum and
+    # round differently at ~1 ulp — so the interpret (CPU) leg runs
+    # unpadded and stays bit-identical to the jitted reference.
+    interp = _interpret()
+    Dp = D if interp else _padded_dim(D)
+    x_new, v_new = meanfield_step_pallas(
+        _pad_to(x, Dp, 1),
+        _pad_to(v, Dp, 1),
+        _pad_to(xbar, Dp, 0),
+        _pad_to(xi, Dp, 1),
+        w, drift, sigma,
+        isotropic=(noise == "isotropic"),
+        interpret=interp,
     )
     return x_new[:, :D], v_new[:, :D]
 

@@ -62,6 +62,21 @@ def pso_step_ref(x, v, px, gx, r1, r2, w, c1, c2):
     return x + v_new, v_new
 
 
+# -- meanfield_step -------------------------------------------------------------
+def meanfield_step_ref(x, v, xbar, xi, w, drift, sigma, noise):
+    """Mean-field PSO drift+noise+position update (DESIGN.md §18); the
+    consensus point x̄ (D,) is a cross-particle reduction computed outside
+    (core/meanfield.consensus_point). Row-independent: row i of the output
+    depends only on row i of {x, v, ξ}."""
+    d = xbar[None, :] - x
+    if noise == "isotropic":
+        scale = jnp.sqrt(jnp.sum(d * d, axis=-1, keepdims=True))
+    else:  # anisotropic: per-coordinate |x̄ − x| envelope
+        scale = d
+    v_new = w * v + drift * d + sigma * scale * xi
+    return x + v_new, v_new
+
+
 # -- fused objective+gradient ---------------------------------------------------
 def rastrigin_vg_ref(x):
     """(f, ∇f) of Rastrigin, batched over lanes: x (B, D)."""

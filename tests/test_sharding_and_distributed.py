@@ -92,6 +92,56 @@ def test_distributed_zeus_multidevice():
     assert "OK" in out
 
 
+def test_meanfield_moments_shard_count_invariant():
+    """ISSUE 10: the mean-field consensus psum'd through make_pmoments is
+    shard-count invariant — the SAME global particle set reduced on 1, 2,
+    4 and 8 shards yields the same consensus point (tolerance-level: the
+    log-sum-exp re-shift exp(m−M) and the psum order differ per layout,
+    so bitwise equality is not expected). Also runs distributed ZEUS with
+    phase1="meanfield" end to end on the 8-device mesh."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.distributed import make_pmoments, shard_map_compat
+        from repro.core.meanfield import consensus_point
+        from repro.core.objectives import rastrigin
+        from repro.sharding import make_mesh_compat
+
+        x = jax.random.uniform(jax.random.key(1), (64, 5),
+                               minval=-5.12, maxval=5.12)
+        fv = jax.vmap(rastrigin)(x)
+        want = consensus_point(fv, x, 30.0)  # single-host reduction
+        for n_shards in (1, 2, 4, 8):
+            mesh = make_mesh_compat((n_shards,), ("d",))
+            fn = shard_map_compat(
+                lambda fv, x: consensus_point(fv, x, 30.0,
+                                              make_pmoments(("d",))),
+                mesh, in_specs=(P("d"), P("d")), out_specs=P())
+            got = jax.jit(fn)(fv, x)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+        # end to end: phase1="meanfield" through the sharded driver
+        from repro.core import (BFGSOptions, MeanFieldPSOOptions,
+                                ZeusOptions)
+        from repro.core.distributed import distributed_zeus
+        from repro.core.objectives import sphere
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        opts = ZeusOptions(
+            phase1="meanfield",
+            meanfield=MeanFieldPSOOptions(n_particles=128, iter_pso=4),
+            bfgs=BFGSOptions(iter_bfgs=60, theta=1e-4, required_c=64))
+        res = jax.jit(distributed_zeus(sphere, 3, -5.0, 5.0, opts,
+                                       mesh))(jax.random.key(0))
+        assert float(res.best_f) < 1e-5, float(res.best_f)
+        assert res.raw.x.shape == (128, 3)
+        assert jnp.isfinite(res.pso_best_f)
+        print("OK", float(res.best_f))
+    """)
+    assert "OK" in out
+
+
 def test_distributed_repack_and_ladder():
     """ISSUE 4: the batched sweep's global lane repacking and adaptive
     ladder compose with distributed_zeus — each shard repacks its own
